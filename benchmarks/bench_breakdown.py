@@ -1,0 +1,59 @@
+"""Paper Fig 9: execution-time breakdown (compute / staging / other memory)
+for FP and BP at different sizes and device counts.
+
+The paper's "pinning" bin has no TPU/JAX analogue (DESIGN.md SS8); our
+bins are compute (kernel + overlapped copies), staging (host->device
+prefetch), and other_memory (final gather, frees)."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+import jax
+
+from repro.core.geometry import ConeGeometry, circular_angles
+from repro.core.splitting import MemoryModel, plan_backward, plan_forward
+from repro.core.streaming import (Timeline, stream_backward, stream_forward)
+
+
+def run(sizes=(32, 64), device_counts=(1, 2), budget_mib=16.0):
+    rows: List[Dict] = []
+    avail = jax.local_device_count()
+    mem = MemoryModel(device_bytes=int(budget_mib * 2 ** 20),
+                      usable_fraction=1.0)
+    for n in sizes:
+        geo = ConeGeometry.nice(n)
+        angles = circular_angles(n)
+        rng = np.random.default_rng(0)
+        vol = rng.standard_normal(geo.n_voxel).astype(np.float32)
+        proj = rng.standard_normal((n,) + geo.n_detector).astype(np.float32)
+        for nd in device_counts:
+            if nd > avail:
+                continue
+            devs = jax.local_devices()[:nd]
+            for op, runner, planner, data in (
+                    ("fp", stream_forward, plan_forward, vol),
+                    ("bp", stream_backward, plan_backward, proj)):
+                plan = planner(geo, n, nd, mem)
+                runner(data, geo, angles, plan, devices=devs)  # warm-up
+                tl = Timeline()
+                runner(data, geo, angles, plan, devices=devs, timeline=tl)
+                fr = tl.fractions()
+                rows.append({"op": op, "N": n, "n_dev": nd,
+                             "compute": fr.get("compute", 0.0),
+                             "staging": fr.get("staging", 0.0),
+                             "other_memory": fr.get("other_memory", 0.0)})
+    return rows
+
+
+def main():
+    rows = run()
+    print("op,N,n_dev,compute,staging,other_memory")
+    for r in rows:
+        print(f"{r['op']},{r['N']},{r['n_dev']},{r['compute']:.3f},"
+              f"{r['staging']:.3f},{r['other_memory']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Pallas-kernel micro-bench: interpret-mode correctness deltas + jnp-path
+wall time for the three CT hot-spot kernels and flash attention.
+
+Interpret mode executes the kernel body in Python (no TPU), so the
+*reported numbers are correctness deltas and XLA-path reference timings*,
+not kernel speed -- kernel perf on hardware is covered by the roofline
+analysis."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.geometry import ConeGeometry, circular_angles, \
+    dominant_axis_mask
+from repro.kernels import ref
+from repro.kernels.bp_voxel import bp_voxel_pallas
+from repro.kernels.fp_ray import fp_ray_pallas
+from repro.kernels.tv_grad import tv_grad_pallas
+from repro.kernels.flash_attention import flash_attention
+
+
+def _t(fn):
+    fn()
+    t0 = time.monotonic()
+    fn()
+    return time.monotonic() - t0
+
+
+def run(n: int = 32):
+    geo = ConeGeometry.nice(n)
+    a = circular_angles(8)
+    ax = a[np.nonzero(dominant_axis_mask(a))[0]]
+    vol = jax.random.normal(jax.random.PRNGKey(0), geo.n_voxel, jnp.float32)
+    proj = jax.random.normal(jax.random.PRNGKey(1), (8,) + geo.n_detector)
+
+    rows = []
+    got = fp_ray_pallas(vol, geo, ax, slab_planes=8, interpret=True)
+    want = ref.fp_ray_ref(vol, geo, ax)
+    rows.append({"kernel": "fp_ray", "max_err": float(jnp.max(jnp.abs(
+        got - want))), "ref_s": _t(lambda: jax.block_until_ready(
+            ref.fp_ray_ref(vol, geo, ax)))})
+
+    got = bp_voxel_pallas(proj, geo, a, z_block=8, angle_chunk=4,
+                          interpret=True)
+    want = ref.bp_voxel_ref(proj, geo, a)
+    rows.append({"kernel": "bp_voxel", "max_err": float(jnp.max(jnp.abs(
+        got - want))), "ref_s": _t(lambda: jax.block_until_ready(
+            ref.bp_voxel_ref(proj, geo, a)))})
+
+    got = tv_grad_pallas(vol, z_block=8, interpret=True)
+    want = ref.tv_grad_ref(vol)
+    rows.append({"kernel": "tv_grad", "max_err": float(jnp.max(jnp.abs(
+        got - want))), "ref_s": _t(lambda: jax.block_until_ready(
+            ref.tv_grad_ref(vol)))})
+
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 256, 64))
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.PRNGKey(4), (1, 2, 256, 64))
+    got = flash_attention(q, k, v, causal=True, block_q=128, block_kv=128,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    rows.append({"kernel": "flash_attention", "max_err": float(jnp.max(
+        jnp.abs(got - want))), "ref_s": _t(lambda: jax.block_until_ready(
+            ref.flash_attention_ref(q, k, v, causal=True)))})
+    return rows
+
+
+def main():
+    rows = run()
+    print("kernel,max_abs_err_vs_ref,ref_jnp_seconds")
+    for r in rows:
+        print(f"{r['kernel']},{r['max_err']:.2e},{r['ref_s']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Paper SS4 napkin numbers: the largest N (N^3 volume, N^2 detector,
+N angles) a single device of given memory can process per operator, under
+the double-buffer budget -- reproduced from the splitting planner."""
+
+from __future__ import annotations
+
+from repro.core.splitting import MemoryModel, paper_size_limits
+
+
+def run():
+    rows = []
+    for gib, label in ((11, "GTX 1080 Ti (paper)"), (16, "TPU v5e"),
+                       (32, "TPU v5p-class")):
+        lims = paper_size_limits(MemoryModel(device_bytes=gib * (1 << 30)),
+                                 angle_chunk_fp=9)    # paper's N_angles=9
+        rows.append({"device": label, "gib": gib, **lims})
+    return rows
+
+
+def main():
+    rows = run()
+    print("device,GiB,N_forward_max,N_backward_max")
+    for r in rows:
+        print(f"{r['device']},{r['gib']},{r['forward']},{r['backward']}")
+    print("# paper SS4 reports N~17000 (FP) / N~8500 (BP) at 11 GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Paper SS2.3: the halo-depth (N_in) trade-off for the split TV
+regulariser.
+
+Deeper halos buy more independent inner iterations between synchronisations
+(fewer ppermute rounds) at the cost of redundant boundary compute; the
+paper found N_in = 60 optimal on PCIe.  We sweep N_in on the host mesh and
+report sync counts, redundant-compute fraction, and wall time -- on ICI
+(50 GB/s links vs PCIe's 12) the optimum shifts to much shallower halos;
+see EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.regularization import dist_minimize_tv, halo_overhead, \
+    minimize_tv
+
+
+def run(shape=(64, 48, 48), n_iters: int = 24,
+        halo_depths=(1, 2, 4, 8, 12)):
+    from jax.sharding import AxisType
+    n = jax.local_device_count()
+    mesh = jax.make_mesh((1, n), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+    vol = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+    want = minimize_tv(vol, hyper=0.1, n_iters=n_iters)
+    rows: List[Dict] = []
+    planes_local = shape[0] // n
+    for d in halo_depths:
+        fn = dist_minimize_tv(mesh, hyper=0.1, n_iters=n_iters, n_inner=d,
+                              approx_norm=False)
+        with mesh:
+            fn(vol).block_until_ready()            # compile
+            t0 = time.monotonic()
+            got = fn(vol)
+            got.block_until_ready()
+            dt = time.monotonic() - t0
+        err = float(jnp.max(jnp.abs(got - want)))
+        rows.append({"n_inner": d, "syncs": -(-n_iters // d),
+                     "overhead": halo_overhead(planes_local, d),
+                     "seconds": dt, "max_abs_err": err})
+    return rows
+
+
+def main():
+    rows = run()
+    print("n_inner,syncs,redundant_compute_frac,seconds,max_abs_err")
+    for r in rows:
+        print(f"{r['n_inner']},{r['syncs']},{r['overhead']:.3f},"
+              f"{r['seconds']:.4f},{r['max_abs_err']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Perf-iteration probe: lower ONE (arch x shape) cell with optional
+variant flags and print the three roofline terms -- the measurement tool
+for the EXPERIMENTS.md SSPerf hypothesis loop.
+
+    PYTHONPATH=src python -m benchmarks.perf_probe --arch xlstm-350m \
+        --shape train_4k --flag mlstm_chunked=1
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    "--xla_backend_optimization_level=0 "
+    "--xla_llvm_disable_expensive_passes=true")
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--flag", action="append", default=[],
+                    help="k=v perf flags (repro.models.perf.FLAGS)")
+    ap.add_argument("--replace", action="append", default=[],
+                    help="k=v ArchConfig overrides (bool/int only)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="data,model override (same 256 chips)")
+    args = ap.parse_args()
+
+    from repro.models import perf
+    for kv in args.flag:
+        k, v = kv.split("=")
+        perf.FLAGS[k] = type(perf.FLAGS.get(k, ""))(int(v)) \
+            if isinstance(perf.FLAGS.get(k), (bool, int)) else v
+        if isinstance(perf.FLAGS.get(k), bool) or v in ("0", "1"):
+            perf.FLAGS[k] = bool(int(v))
+    print("flags:", perf.FLAGS)
+
+    from repro.launch.dryrun import dryrun_cell
+    from repro.launch.mesh import make_production_mesh
+
+    overrides = {}
+    for kv in args.replace:
+        k, v = kv.split("=")
+        overrides[k] = bool(int(v))
+    if args.mesh:
+        import jax
+        from jax.sharding import AxisType
+        d, m = (int(v) for v in args.mesh.split(","))
+        mesh = jax.make_mesh((d, m), ("data", "model"),
+                             axis_types=(AxisType.Auto, AxisType.Auto))
+        n_chips = d * m
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        n_chips = 512 if args.multi_pod else 256
+    t0 = time.time()
+    row = dryrun_cell(args.arch, args.shape, mesh, n_chips,
+                      cfg_overrides=overrides or None)
+    for k in ("t_compute_s", "t_memory_s", "t_collective_s", "bottleneck",
+              "flops_per_dev", "coll_bytes_per_dev", "useful_ratio",
+              "roofline_fraction", "peak_bytes_per_device", "coll_detail"):
+        print(f"  {k}: {row.get(k)}")
+    print(f"(total {time.time() - t0:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Roofline reader: renders the dry-run JSON reports into the
+EXPERIMENTS.md SSRoofline table (all three terms, bottleneck, useful
+ratio, roofline fraction)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+
+def load(path: str) -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)["rows"]
+
+
+def fmt_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+           "bound | useful | roofline-frac | peak GiB/dev |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in rows:
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | -- | -- | -- | "
+                       f"skip: {r['reason']} | -- | -- | -- |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | | | "
+                       f"{r.get('error', '?')} | | | |")
+            continue
+        ur = r.get("useful_ratio")
+        rf = r.get("roofline_fraction")
+        row = (f"| {r['arch']} | {r['shape']} "
+               f"| {1e3 * r['t_compute_s']:.2f} "
+               f"| {1e3 * r['t_memory_s']:.2f} "
+               f"| {1e3 * r['t_collective_s']:.2f} "
+               f"| {r['bottleneck']} ")
+        row += f"| {ur:.2f} " if ur is not None else "| ? "
+        row += f"| {rf:.3f} " if rf is not None else "| ? "
+        row += f"| {r['peak_bytes_per_device'] / 2**30:.2f} |"
+        out.append(row)
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", default="experiments/dryrun_single.json")
+    args = ap.parse_args()
+    if not os.path.exists(args.report):
+        print(f"# roofline: no report at {args.report} "
+              "(run repro.launch.dryrun first)")
+        return
+    print(fmt_table(load(args.report)))
+
+
+if __name__ == "__main__":
+    main()

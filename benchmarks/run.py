@@ -1,0 +1,60 @@
+"""Benchmark umbrella: one section per paper table/figure.
+
+Must be launched as ``PYTHONPATH=src python -m benchmarks.run``; it forces
+4 host devices (the paper's 1-4 GPU axis) before jax initialises --
+scoped to this process only, never to tests.
+"""
+
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import argparse
+import time
+
+
+def _section(title):
+    print(f"\n=== {title} ===", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller sizes for CI-speed runs")
+    args = ap.parse_args()
+    t0 = time.time()
+
+    from benchmarks import (bench_breakdown, bench_kernels, bench_limits,
+                            bench_recon, bench_scaling, bench_tv_halo,
+                            roofline)
+
+    _section("Fig 7/8: FP/BP scaling vs N and device count "
+             "(bench_scaling)")
+    bench_scaling.main()
+
+    _section("Fig 9: time breakdown compute/staging/other "
+             "(bench_breakdown)")
+    bench_breakdown.main()
+
+    _section("SS3.2: end-to-end recon, plain vs out-of-core "
+             "(bench_recon)")
+    bench_recon.main()
+
+    _section("SS2.3: TV halo-depth (N_in) trade-off (bench_tv_halo)")
+    bench_tv_halo.main()
+
+    _section("SS4: single-device size limits (bench_limits)")
+    bench_limits.main()
+
+    _section("Pallas kernels vs oracles (bench_kernels)")
+    bench_kernels.main()
+
+    _section("Roofline table from the dry-run report (roofline)")
+    roofline.main()
+
+    print(f"\n=== benchmarks done in {time.time() - t0:.0f}s ===")
+
+
+if __name__ == "__main__":
+    main()

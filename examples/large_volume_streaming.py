@@ -1,0 +1,59 @@
+"""The paper's headline feature: reconstruct a volume that does NOT fit
+in device memory.
+
+We simulate a 1 MiB-device memory budget -- the 96^3 fp32 volume (3.4 MiB)
+plus projections cannot fit, so the planner splits it into axial slabs and
+the double-buffered executor streams them (paper Alg 1/2, Fig 3/5).  The
+result is bit-compatible with the in-memory operator.
+
+    PYTHONPATH=src python examples/large_volume_streaming.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.geometry import ConeGeometry, circular_angles
+from repro.core.operator import CTOperator
+from repro.core.splitting import MemoryModel, plan_backward, plan_forward
+from repro.core.streaming import Timeline
+from repro.core import phantoms
+from repro.core.algorithms import ossart
+
+
+def main():
+    n = 96
+    geo = ConeGeometry.nice(n)
+    angles = circular_angles(64)
+    vol = phantoms.shepp_logan(geo)
+    budget = MemoryModel(device_bytes=1 << 20, usable_fraction=1.0)
+
+    fp_plan = plan_forward(geo, len(angles), 1, budget)
+    bp_plan = plan_backward(geo, len(angles), 1, budget)
+    print(f"volume: {n}^3 fp32 = {n**3 * 4 / 2**20:.1f} MiB; "
+          f"device budget: 1.0 MiB")
+    print(f"FP plan: {fp_plan.n_slabs} slabs of "
+          f"~{fp_plan.slab_ranges[0][1]} planes, "
+          f"angle chunk {fp_plan.angle_chunk}")
+    print(f"BP plan: {bp_plan.n_slabs} slabs, "
+          f"angle chunk {bp_plan.angle_chunk}")
+
+    op = CTOperator(geo, angles, mode="stream", memory=budget)
+    proj = op.A(vol)
+    print("forward projected out-of-core:", proj.shape)
+
+    rec = ossart(proj, geo, angles, n_iter=2, subset_size=16, op=op,
+                 bp_weight="fdk")
+    rel = float(np.linalg.norm(np.asarray(rec) - vol)
+                / np.linalg.norm(vol))
+    print(f"OS-SART(2) out-of-core rel. error: {rel:.4f}")
+
+    # reference: same algorithm fully in memory
+    rec_ref = ossart(jnp.asarray(proj), geo, angles, n_iter=2,
+                     subset_size=16, bp_weight="fdk")
+    diff = float(np.max(np.abs(np.asarray(rec) - np.asarray(rec_ref))))
+    print(f"max |out-of-core - in-memory| = {diff:.2e}  "
+          "(the paper's exactness claim)")
+
+
+if __name__ == "__main__":
+    main()

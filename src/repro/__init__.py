@@ -1,0 +1,22 @@
+"""repro: arbitrarily-large iterative tomographic reconstruction on TPU pods.
+
+A JAX/Pallas production-framework reproduction of
+
+    Biguri et al., "Arbitrarily large iterative tomographic reconstruction
+    on multiple GPUs using the TIGRE toolbox" (2019).
+
+Layout
+------
+``repro.core``        the paper's contribution: geometry, projectors, the
+                      slab-splitting planner, the double-buffered streaming
+                      executor, distributed (shard_map) operators, and the
+                      halo-split TV regularizers.
+``repro.core.algorithms``  FDK, SIRT, SART, OS-SART, CGLS, FISTA, ASD-POCS.
+``repro.kernels``     Pallas TPU kernels (fp_ray, bp_voxel, tv_grad,
+                      flash_attention) + jnp oracles.
+``repro.models``      assigned-architecture zoo (10 LM-family archs).
+``repro.configs``     one config per architecture + CT defaults.
+``repro.launch``      production mesh, multi-pod dry-run, train/recon drivers.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,9 @@
+"""Checkpoint substrate: sharded save/restore with a manifest, elastic
+resharding on restore, async save, and a preemption (SIGTERM) hook."""
+
+from .sharded import (CheckpointManager, save_checkpoint, restore_checkpoint,
+                      latest_step)
+from .preemption import PreemptionGuard
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
+           "latest_step", "PreemptionGuard"]

@@ -1,0 +1,189 @@
+"""Sharded checkpointing with manifest + elastic resharding.
+
+Layout (one directory per step)::
+
+    ckpt_dir/
+      step_000100/
+        manifest.json        # pytree structure, shapes, dtypes, shard map
+        leaf_00000.npy       # one file per leaf (np.save, fp32/bf16-as-u16)
+        ...
+        COMMIT               # written last: crash-safe commit marker
+
+Design points mirrored from production systems:
+
+* **Atomic commit**: a checkpoint without ``COMMIT`` is ignored by
+  ``latest_step`` -- a node failure mid-save can never corrupt restart.
+* **Elastic resharding**: leaves are saved as *full* logical arrays (host
+  gathers its addressable shards; on multi-host each host saves its own
+  shard files and the manifest records the offsets -- here single-process
+  saves the full array).  On restore, arrays are ``device_put`` against the
+  *new* mesh/sharding, so restarting on a different device count or mesh
+  shape works (tests/test_checkpoint.py).
+* **Async save**: the save runs on a background thread off a snapshot of
+  host arrays; the train loop only blocks on the previous save
+  (double-buffered, the paper's overlap idea applied to checkpoint I/O).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def _leaf_paths(tree) -> Dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def _to_numpy(x) -> np.ndarray:
+    x = np.asarray(jax.device_get(x))
+    if x.dtype == jnp.bfloat16:
+        return x.view(np.uint16)
+    return x
+
+
+def _from_numpy(x: np.ndarray, dtype: str) -> np.ndarray:
+    if dtype == _BF16:
+        return x.view(jnp.bfloat16)
+    return x
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
+    """Synchronous sharded save with atomic commit."""
+    out = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = out + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves = _leaf_paths(tree)
+    manifest = {"step": step, "leaves": {}}
+    for i, (path, leaf) in enumerate(sorted(leaves.items())):
+        arr = _to_numpy(leaf)
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][path] = {
+            "file": fname,
+            "shape": list(np.shape(leaf)),
+            "dtype": str(np.asarray(leaf).dtype) if not hasattr(leaf, "dtype")
+            else str(leaf.dtype),
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(tmp, "COMMIT"), "w") as f:
+        f.write(str(time.time()))
+    if os.path.exists(out):
+        shutil.rmtree(out)
+    os.replace(tmp, out)
+    _gc(ckpt_dir, keep)
+    return out
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Highest committed step, or None (uncommitted dirs are ignored)."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best = None
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp") and \
+                os.path.exists(os.path.join(ckpt_dir, d, "COMMIT")):
+            best = max(best or -1, int(d.split("_")[1]))
+    return best
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, target_tree,
+                       shardings=None):
+    """Restore into the structure of ``target_tree`` (shapes validated).
+
+    ``shardings``: optional pytree of NamedSharding -- arrays are placed
+    against it (elastic resharding: the saved mesh is irrelevant)."""
+    src = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = _leaf_paths(target_tree)
+    shard_leaves = _leaf_paths(shardings) if shardings is not None else {}
+    out = {}
+    for path, meta in manifest["leaves"].items():
+        if path not in leaves:
+            raise KeyError(f"checkpoint leaf {path} missing from target")
+        raw = np.load(os.path.join(src, meta["file"]))
+        arr = _from_numpy(raw, meta["dtype"])
+        expect = tuple(meta["shape"])
+        if tuple(arr.shape) != expect:
+            raise ValueError(f"{path}: shape {arr.shape} != {expect}")
+        target_shape = tuple(np.shape(leaves[path])) \
+            if hasattr(leaves[path], "shape") else None
+        if target_shape is not None and target_shape != tuple(arr.shape):
+            raise ValueError(
+                f"{path}: checkpoint shape {arr.shape} != target "
+                f"{target_shape}")
+        if path in shard_leaves and shard_leaves[path] is not None:
+            arr = jax.device_put(arr, shard_leaves[path])
+        out[path] = arr
+    missing = set(leaves) - set(manifest["leaves"])
+    if missing:
+        raise KeyError(f"target leaves missing from checkpoint: {missing}")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    restored = [out[jax.tree_util.keystr(path)] for path, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+class CheckpointManager:
+    """Async double-buffered checkpointing.
+
+    ``save(step, tree)`` snapshots to host (blocking only on device->host
+    copy), then writes on a background thread; a new save joins the
+    previous thread first (at most one outstanding write -- the two-buffer
+    discipline of the paper's Fig 3 applied to checkpoint I/O)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        os.makedirs(ckpt_dir, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[int] = None
+
+    def save(self, step: int, tree, blocking: bool = False):
+        host_tree = jax.tree.map(_to_numpy, tree)
+        meta_dtypes = jax.tree.map(lambda x: str(x.dtype), tree)
+        self.wait()
+
+        def _write():
+            # re-wrap bf16 views for correct manifest dtypes
+            restored = jax.tree.map(
+                lambda a, d: a.view(jnp.bfloat16) if d == _BF16 else a,
+                host_tree, meta_dtypes)
+            save_checkpoint(self.ckpt_dir, step, restored, keep=self.keep)
+            self.last_saved = step
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, target_tree, shardings=None):
+        step = latest_step(self.ckpt_dir)
+        if step is None:
+            return None, None
+        return step, restore_checkpoint(self.ckpt_dir, step, target_tree,
+                                        shardings)

@@ -1,0 +1,104 @@
+"""Architecture configs (one module per assigned arch) + input-shape cells.
+
+``get_config(name)`` returns the full published config; ``reduced(name)``
+returns a smoke-test config of the same family (small widths/layers/experts)
+for CPU tests.  ``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins
+for every model input of a (arch x shape) cell -- no device allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import ArchConfig
+
+from . import (codeqwen1_5_7b, deepseek_moe_16b, gemma2_9b, hubert_xlarge,
+               llama3_2_vision_11b, minicpm3_4b, moonshot_v1_16b_a3b,
+               stablelm_1_6b, xlstm_350m, zamba2_7b)
+
+_MODULES = {
+    "zamba2-7b": zamba2_7b,
+    "gemma2-9b": gemma2_9b,
+    "codeqwen1.5-7b": codeqwen1_5_7b,
+    "stablelm-1.6b": stablelm_1_6b,
+    "minicpm3-4b": minicpm3_4b,
+    "hubert-xlarge": hubert_xlarge,
+    "llama-3.2-vision-11b": llama3_2_vision_11b,
+    "moonshot-v1-16b-a3b": moonshot_v1_16b_a3b,
+    "deepseek-moe-16b": deepseek_moe_16b,
+    "xlstm-350m": xlstm_350m,
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    return _MODULES[name].CONFIG
+
+
+def reduced(name: str) -> ArchConfig:
+    return _MODULES[name].reduced()
+
+
+# --------------------------------------------------------------------------
+# shape cells (seq_len, global_batch) -- assigned to every LM arch
+# --------------------------------------------------------------------------
+
+SHAPES: Dict[str, Tuple[int, int]] = {
+    "train_4k": (4096, 256),
+    "prefill_32k": (32768, 32),
+    "decode_32k": (32768, 128),
+    "long_500k": (524288, 1),
+}
+
+DECODE_SHAPES = ("decode_32k", "long_500k")
+
+
+def cell_skip_reason(cfg: ArchConfig, shape: str) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the documented skip."""
+    if cfg.encoder_only and shape in DECODE_SHAPES:
+        return "encoder-only arch has no decode step"
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return "full-attention arch; 500k context needs sub-quadratic attn"
+    return None
+
+
+def input_specs(cfg: ArchConfig, shape: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of the lowered step.
+
+    * train_*   -> {tokens/features, labels [, ctx]} for ``train_step``
+    * prefill_* -> {tokens/features [, ctx]} for the prefill forward
+    * decode_* / long_* -> {token, pos, caches [, ctx]} for ``serve_step``
+    """
+    seq, batch = SHAPES[shape]
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    def tok(b, s):
+        if cfg.encoder_only or cfg.family == "audio":
+            # stub frontend: precomputed frame embeddings
+            return sds((b, s, cfg.d_model), cfg.dtype)
+        return sds((b, s), i32)
+
+    specs: Dict[str, Any] = {}
+    if shape.startswith("train"):
+        specs["tokens"] = tok(batch, seq)
+        specs["labels"] = sds((batch, seq), i32)
+    elif shape.startswith("prefill"):
+        specs["tokens"] = tok(batch, seq)
+    else:                                   # decode_32k / long_500k
+        from repro.models.lm import make_model
+        model = make_model(cfg)
+        specs["token"] = tok(batch, 1)
+        specs["pos"] = sds((), i32)
+        specs["caches"] = jax.eval_shape(
+            lambda: model.init_cache(batch, seq))
+    if cfg.family == "vlm":
+        specs["ctx"] = sds((batch if not shape.startswith("decode") and
+                            not shape.startswith("long") else batch,
+                            cfg.n_ctx_tokens, cfg.d_model), cfg.dtype)
+    return specs

@@ -1,0 +1,15 @@
+"""Iterative reconstruction algorithms (TIGRE's catalogue, paper SS2/SS3).
+
+All algorithms are written against :class:`repro.core.operator.CTOperator`
+only, so they run unchanged on the plain, streaming (out-of-core) and
+distributed backends -- the paper's modularity argument.
+"""
+
+from .fdk import fdk, filter_projections
+from .sart import sart, sirt, ossart
+from .cgls import cgls
+from .fista import fista_tv
+from .asd_pocs import asd_pocs
+
+__all__ = ["fdk", "filter_projections", "sart", "sirt", "ossart", "cgls",
+           "fista_tv", "asd_pocs"]

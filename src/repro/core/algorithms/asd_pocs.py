@@ -1,0 +1,57 @@
+"""ASD-POCS (Sidky & Pan): alternate data-consistency (OS-SART steps) with
+TV steepest-descent minimisation (paper SS2.3's first regulariser), with the
+adaptive step-size bookkeeping of the original algorithm (simplified as in
+TIGRE's defaults).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..operator import CTOperator
+from ..regularization import minimize_tv
+from .sart import ossart
+
+
+def asd_pocs(proj, geo, angles, n_iter: int = 10, subset_size: int = 20,
+             lmbda: float = 1.0, lmbda_red: float = 0.99,
+             tv_iters: int = 20, alpha: float = 0.002,
+             alpha_red: float = 0.95, r_max: float = 0.95,
+             op: Optional[CTOperator] = None,
+             callback: Optional[Callable] = None):
+    angles = np.asarray(angles, np.float32)
+    if op is None:
+        op = CTOperator(geo, angles, mode="plain")
+    proj = jnp.asarray(proj)
+
+    x = jnp.zeros(geo.n_voxel, jnp.float32)
+    dtvg = None
+    dp_first = None
+
+    for it in range(n_iter):
+        x_prev = x
+        x = ossart(proj, geo, angles, n_iter=1, subset_size=subset_size,
+                   lmbda=lmbda, op=op, x0=x)
+        lmbda *= lmbda_red
+
+        dp_vec = x - x_prev
+        dp = float(jnp.linalg.norm(dp_vec.ravel()))
+        if dp_first is None:
+            dp_first = dp
+        if dtvg is None:
+            dtvg = alpha * dp  # initial TV step from first data update
+
+        x_before_tv = x
+        x = minimize_tv(x, hyper=dtvg, n_iters=tv_iters)
+        dg = float(jnp.linalg.norm((x - x_before_tv).ravel()))
+
+        # adaptive step (Sidky & Pan): if TV moved more than the data step,
+        # shrink the TV step size
+        if dg > r_max * dp and dp > 0.01 * dp_first:
+            dtvg *= alpha_red
+        if callback is not None:
+            callback(it, x)
+    return x

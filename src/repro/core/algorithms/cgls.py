@@ -1,0 +1,43 @@
+"""CGLS -- conjugate gradient on the normal equations (paper SS3.2, coffee
+bean reconstruction).  Requires the *matched* adjoint (exact vjp transpose);
+with an unmatched backprojector CG loses its convergence guarantees, which
+is why TIGRE ships "pseudo-matched" weights and we ship the exact adjoint.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..operator import CTOperator
+
+
+def cgls(proj, geo, angles, n_iter: int = 15,
+         op: Optional[CTOperator] = None, x0=None,
+         callback: Optional[Callable] = None):
+    angles = np.asarray(angles, np.float32)
+    if op is None:
+        op = CTOperator(geo, angles, mode="plain", bp_weight="matched")
+    b = jnp.asarray(proj)
+    x = jnp.zeros(geo.n_voxel, jnp.float32) if x0 is None else jnp.asarray(x0)
+
+    r = b - op.A(x)
+    p = op.At(r, weight="matched")
+    s = p
+    gamma = jnp.vdot(s.ravel(), s.ravel())
+
+    for it in range(n_iter):
+        q = op.A(p)
+        alpha = gamma / (jnp.vdot(q.ravel(), q.ravel()) + 1e-30)
+        x = x + alpha * p
+        r = r - alpha * q
+        s = op.At(r, weight="matched")
+        gamma_new = jnp.vdot(s.ravel(), s.ravel())
+        beta = gamma_new / (gamma + 1e-30)
+        gamma = gamma_new
+        p = s + beta * p
+        if callback is not None:
+            callback(it, x, float(jnp.linalg.norm(r.ravel())))
+    return x

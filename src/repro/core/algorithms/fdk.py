@@ -1,0 +1,75 @@
+"""Feldkamp-Davis-Kress filtered backprojection.
+
+Cosine weighting + Ram-Lak (ramp) filtering along the detector u axis +
+depth-weighted voxel backprojection.  The u axis is rescaled to the virtual
+detector through the rotation axis (factor DSO/DSD), as in TIGRE.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..geometry import ConeGeometry
+
+
+def _ramp_freq_response(pad: int, d: float) -> np.ndarray:
+    """|freq| response of the discrete Ram-Lak kernel with spacing ``d``.
+
+    Built from the exact band-limited spatial kernel (Kak & Slaney eq. 61):
+    h[0] = 1/(4 d^2), h[k odd] = -1/(pi k d)^2, h[k even] = 0, laid out
+    circularly, then transformed.
+    """
+    k = np.fft.fftfreq(pad) * pad  # 0, 1, ..., -1 circular indices
+    h = np.zeros(pad, np.float64)
+    h[0] = 1.0 / (4.0 * d * d)
+    ki = k.astype(np.int64)
+    odd = np.abs(ki) % 2 == 1
+    h[odd] = -1.0 / (np.pi * ki[odd] * d) ** 2
+    return np.maximum(np.real(np.fft.fft(h)), 0.0)
+
+
+def filter_projections(proj: jnp.ndarray, geo: ConeGeometry,
+                       angles: np.ndarray) -> jnp.ndarray:
+    """Cosine-weight and ramp-filter projections (per angle, along u)."""
+    nv, nu = geo.n_detector
+    dv, du = geo.d_detector
+    offv, offu = geo.off_detector
+    us = (jnp.arange(nu) - (nu - 1) / 2.0) * du + offu
+    vs = (jnp.arange(nv) - (nv - 1) / 2.0) * dv + offv
+    # cosine weights on the *real* detector
+    cosw = geo.DSD / jnp.sqrt(geo.DSD ** 2 + us[None, :] ** 2
+                              + vs[:, None] ** 2)
+    # ramp on the virtual detector through the origin
+    du_virt = du * geo.DSO / geo.DSD
+    pad = 1 << int(np.ceil(np.log2(2 * nu)))
+    H = jnp.asarray(_ramp_freq_response(pad, du_virt), jnp.float32)
+
+    def one(p2d):
+        pw = p2d * cosw
+        P = jnp.fft.rfft(pw, n=pad, axis=1)
+        Pf = P * H[: pad // 2 + 1][None, :]
+        out = jnp.fft.irfft(Pf, n=pad, axis=1)[:, :nu]
+        return out.astype(jnp.float32) * du_virt
+
+    return jax.vmap(one)(proj)
+
+
+def fdk(proj: jnp.ndarray, geo: ConeGeometry, angles: np.ndarray,
+        op=None) -> jnp.ndarray:
+    """FDK reconstruction.  ``op`` optionally supplies the backprojection
+    backend (streaming / distributed); defaults to the plain operator.
+
+    Scale: f = (d_theta / 2) * sum_theta (DSO/(DSO-p))^2 * g_filtered, the
+    discrete Feldkamp integral; validated against the analytic sphere
+    phantom in tests/test_algorithms.py.
+    """
+    from ..operator import CTOperator
+    angles = np.asarray(angles, np.float32)
+    if op is None:
+        op = CTOperator(geo, angles, mode="plain")
+    fp = filter_projections(jnp.asarray(proj), geo, angles)
+    d_theta = 2.0 * np.pi / len(angles)
+    vol = op.At(fp, weight="fdk")
+    return vol * (d_theta / 2.0)

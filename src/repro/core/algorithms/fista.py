@@ -1,0 +1,46 @@
+"""FISTA with TV proximal step (Beck & Teboulle), TIGRE's FISTA analogue.
+
+    y_{k}   : extrapolated point
+    x_{k+1} = prox_{TV/L}( y_k - (1/L) A^T (A y_k - b) )
+    t_{k+1} = (1 + sqrt(1 + 4 t_k^2)) / 2
+    y_{k+1} = x_{k+1} + (t_k - 1)/t_{k+1} (x_{k+1} - x_k)
+
+The proximal operator is the ROF denoiser (paper SS2.3's second
+regulariser); L is estimated by power iteration on A^T A.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..operator import CTOperator
+from ..regularization import rof_denoise
+
+
+def fista_tv(proj, geo, angles, n_iter: int = 20, tv_lambda: float = 20.0,
+             tv_iters: int = 20, L: Optional[float] = None,
+             op: Optional[CTOperator] = None,
+             callback: Optional[Callable] = None):
+    angles = np.asarray(angles, np.float32)
+    if op is None:
+        op = CTOperator(geo, angles, mode="plain", bp_weight="matched")
+    if L is None:
+        L = op.norm_squared_est(n_iter=6) * 1.05
+    b = jnp.asarray(proj)
+
+    x = jnp.zeros(geo.n_voxel, jnp.float32)
+    y = x
+    t = 1.0
+    for it in range(n_iter):
+        grad = op.At(op.A(y) - b, weight="matched")
+        z = y - grad / L
+        x_new = rof_denoise(z, lam=tv_lambda * L, n_iters=tv_iters)
+        t_new = (1.0 + float(np.sqrt(1.0 + 4.0 * t * t))) / 2.0
+        y = x_new + ((t - 1.0) / t_new) * (x_new - x)
+        x, t = x_new, t_new
+        if callback is not None:
+            callback(it, x)
+    return x

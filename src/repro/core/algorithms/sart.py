@@ -1,0 +1,72 @@
+"""SART family: SIRT, SART, OS-SART (the paper's SS3.2 workhorse).
+
+Update rule (relaxation ``lmbda``):
+
+    x <- x + lmbda * V_s . A_s^T ( W_s . (b_s - A_s x) )
+
+with W = 1 / A 1 (ray normalisation) and V = 1 / A^T 1 (voxel
+normalisation), computed per angle subset ``s``:
+
+* SIRT     : one subset = all angles.
+* SART     : one subset per angle.
+* OS-SART  : blocks of ``subset_size`` angles (paper used 200).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..operator import CTOperator
+
+_EPS = 1e-6
+
+
+def _norm_factors(op: CTOperator, idx: np.ndarray):
+    angles = jnp.asarray(op.angles_np[idx])
+    ones_vol = jnp.ones(op.geo.n_voxel, jnp.float32)
+    W = op.A(ones_vol, angles)
+    W = jnp.where(W > _EPS, 1.0 / jnp.maximum(W, _EPS), 0.0)
+    nv, nu = op.geo.n_detector
+    ones_proj = jnp.ones((len(idx), nv, nu), jnp.float32)
+    V = op.At(ones_proj, angles, weight="pmatched")
+    V = jnp.where(V > _EPS, 1.0 / jnp.maximum(V, _EPS), 0.0)
+    return W, V
+
+
+def ossart(proj, geo, angles, n_iter: int = 20, subset_size: int = 20,
+           lmbda: float = 1.0, op: Optional[CTOperator] = None,
+           x0=None, callback: Optional[Callable] = None,
+           bp_weight: str = "pmatched"):
+    """OS-SART.  ``subset_size=len(angles)`` gives SIRT; ``1`` gives SART."""
+    angles = np.asarray(angles, np.float32)
+    if op is None:
+        op = CTOperator(geo, angles, mode="plain")
+    subsets = op.subset_indices(subset_size)
+    factors = [_norm_factors(op, idx) for idx in subsets]
+    x = jnp.zeros(geo.n_voxel, jnp.float32) if x0 is None else jnp.asarray(x0)
+    proj = jnp.asarray(proj)
+
+    for it in range(n_iter):
+        for idx, (W, V) in zip(subsets, factors):
+            a_sub = jnp.asarray(angles[idx])
+            b_sub = proj[jnp.asarray(idx)]
+            resid = W * (b_sub - op.A(x, a_sub))
+            upd = op.At(resid, a_sub, weight=bp_weight)
+            x = x + lmbda * V * upd
+        if callback is not None:
+            callback(it, x)
+    return x
+
+
+def sirt(proj, geo, angles, n_iter: int = 20, lmbda: float = 1.0, **kw):
+    return ossart(proj, geo, angles, n_iter=n_iter,
+                  subset_size=len(np.asarray(angles)), lmbda=lmbda, **kw)
+
+
+def sart(proj, geo, angles, n_iter: int = 20, lmbda: float = 1.0, **kw):
+    return ossart(proj, geo, angles, n_iter=n_iter, subset_size=1,
+                  lmbda=lmbda, **kw)

@@ -1,0 +1,166 @@
+"""Multi-device (pod-scale) projection operators via ``shard_map``.
+
+This is the paper's multi-GPU layer generalised to TPU meshes (DESIGN.md SS5):
+
+* forward projection: angles sharded over the ``data`` axis (paper SS2.1
+  "each GPU will compute a set of independent projections"), the volume
+  z-slab sharded over the ``model`` axis; per-device partial projections are
+  reduced over ``model``.
+* backprojection: projections sharded over ``data``, image slabs over
+  ``model``; partial slab updates are reduced over ``data``.
+
+The reductions are exact because the operators are additive over disjoint
+z slabs / angle sets (tests/test_splitting.py, tests/test_distributed.py).
+
+Two collective schedules are provided for the FP reduction: a plain
+``psum`` (baseline, what XLA would do) and a ``ppermute`` ring that
+interleaves each hop with the next slab's compute -- the paper's
+"simultaneous memory transfer and computation" adapted to ICI links
+(used by the perf hillclimb; see EXPERIMENTS.md SS Perf).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .geometry import ConeGeometry
+from .projector import (_joseph_xdom_one_angle, _rotate_vol_90,
+                        backproject_voxel)
+
+
+def _joseph_any_angle(vol, vol_rot, geo: ConeGeometry, theta, z0):
+    """Joseph integral at one angle with a *traced* dominant-axis decision.
+
+    Needed inside shard_map where an angle shard may mix x- and y-dominant
+    angles.  ``lax.cond`` under ``lax.map`` stays a true branch (sequential
+    scan), so only one projector runs per angle.
+    """
+    nz, ny, nx = geo.n_voxel
+    x_centers = jnp.asarray(
+        (np.arange(nx) - (nx - 1) / 2.0) * geo.d_voxel[2] + geo.off_origin[2],
+        dtype=jnp.float32)
+    xdom = jnp.abs(jnp.cos(theta)) >= jnp.abs(jnp.sin(theta))
+    return jax.lax.cond(
+        xdom,
+        lambda: _joseph_xdom_one_angle(vol, geo, theta, x_centers, z0=z0),
+        lambda: _joseph_xdom_one_angle(vol_rot, geo, theta - jnp.pi / 2,
+                                       x_centers, z0=z0),
+    )
+
+
+def _fp_local(vol_slab, angles_local, geo: ConeGeometry, z0):
+    """Partial FP of a z slab for a local angle set (any dominance mix)."""
+    vol_rot = _rotate_vol_90(vol_slab)
+
+    def one(theta):
+        return _joseph_any_angle(vol_slab, vol_rot, geo, theta, z0)
+
+    return jax.lax.map(one, angles_local)
+
+
+def dist_forward_project(mesh: Mesh, geo: ConeGeometry,
+                         data_axis: str = "data", model_axis: str = "model",
+                         reduce: str = "psum"):
+    """Build a jitted sharded FP: ``f(vol, angles) -> proj``.
+
+    ``vol`` sharded ``P(model, None, None)`` (z slabs); ``angles`` sharded
+    ``P(data)``; output sharded ``P(data, None, None)``.  ``reduce`` selects
+    the cross-slab reduction schedule: ``"psum"`` or ``"ring"``.
+    """
+    n_model = mesh.shape[model_axis]
+    nz = geo.n_voxel[0]
+    if nz % n_model:
+        raise ValueError(f"Nz={nz} not divisible by model axis {n_model}")
+    planes = nz // n_model
+
+    def body(vol_slab, angles_local):
+        z0 = jax.lax.axis_index(model_axis) * planes
+        part = _fp_local(vol_slab, angles_local, geo, z0)
+        if reduce == "psum":
+            return jax.lax.psum(part, model_axis)
+        # ring reduce: n-1 hops of (shift, add); result replicated on axis.
+        def hop(i, acc_part):
+            acc, part = acc_part
+            perm = [(j, (j + 1) % n_model) for j in range(n_model)]
+            part = jax.lax.ppermute(part, model_axis, perm)
+            return acc + part, part
+        acc, _ = jax.lax.fori_loop(0, n_model - 1, hop, (part, part))
+        return acc
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(model_axis, None, None), P(data_axis)),
+        out_specs=P(data_axis, None, None), check_vma=False)
+    return jax.jit(fn)
+
+
+def dist_backproject(mesh: Mesh, geo: ConeGeometry, weight: str = "fdk",
+                     data_axis: str = "data", model_axis: str = "model"):
+    """Build a jitted sharded BP: ``g(proj, angles) -> vol``.
+
+    ``proj``/``angles`` sharded over ``data``; output volume z-sharded over
+    ``model`` (each device updates its own slab from its angle subset, then
+    the partial updates are summed over ``data`` -- additive in angles).
+    """
+    n_model = mesh.shape[model_axis]
+    nz = geo.n_voxel[0]
+    if nz % n_model:
+        raise ValueError(f"Nz={nz} not divisible by model axis {n_model}")
+    planes = nz // n_model
+
+    def body(proj_local, angles_local):
+        z0 = jax.lax.axis_index(model_axis) * planes
+        slab = backproject_voxel(proj_local, geo, angles_local, weight=weight,
+                                 z_start=z0, z_planes=planes)
+        return jax.lax.psum(slab, data_axis)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(data_axis, None, None), P(data_axis)),
+        out_specs=P(model_axis, None, None), check_vma=False)
+    return jax.jit(fn)
+
+
+def pad_angles(angles: np.ndarray, multiple: int):
+    """Pad the angle set to a multiple of the data-axis size.
+
+    Padded entries repeat the last angle; callers must mask the padded
+    projections (``valid`` mask returned).
+    """
+    n = len(angles)
+    n_pad = (-n) % multiple
+    if n_pad == 0:
+        return np.asarray(angles, np.float32), np.ones(n, bool)
+    padded = np.concatenate([angles, np.full(n_pad, angles[-1])]).astype(np.float32)
+    valid = np.concatenate([np.ones(n, bool), np.zeros(n_pad, bool)])
+    return padded, valid
+
+
+def halo_exchange(x: jnp.ndarray, depth: int, axis_name: str):
+    """Exchange ``depth`` boundary planes with axis neighbours (paper SS2.3).
+
+    ``x`` is a local z slab ``(planes, ...)``; returns ``x`` padded to
+    ``planes + 2*depth`` with the neighbours' boundary planes (zeros at the
+    global ends).  One ``ppermute`` pair per call -- this is the *only*
+    communication the split TV regulariser performs every ``N_in`` inner
+    iterations.
+    """
+    n = jax.lax.axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    top = x[-depth:]      # send up (to idx+1)
+    bot = x[:depth]       # send down (to idx-1)
+    up_perm = [(i, i + 1) for i in range(n - 1)]
+    down_perm = [(i + 1, i) for i in range(n - 1)]
+    from_below = jax.lax.ppermute(top, axis_name, up_perm)     # neighbour idx-1's top
+    from_above = jax.lax.ppermute(bot, axis_name, down_perm)   # neighbour idx+1's bottom
+    pad_shape = (depth,) + x.shape[1:]
+    from_below = jnp.where(idx > 0, from_below, jnp.zeros(pad_shape, x.dtype))
+    from_above = jnp.where(idx < n - 1, from_above, jnp.zeros(pad_shape, x.dtype))
+    return jnp.concatenate([from_below, x, from_above], axis=0)

@@ -1,0 +1,154 @@
+"""Unified CT operator: one object, three execution backends.
+
+The paper's point is that the *same* algorithms run regardless of how the
+operators are executed ("TIGRE's architecture is modular, thus all of the
+GPU code is independent from the algorithm that uses it").  ``CTOperator``
+exposes ``A`` (forward) and ``At`` (back) and hides the backend:
+
+* ``mode="plain"``   -- monolithic jitted operators (volume fits on device).
+* ``mode="stream"``  -- the paper's out-of-core double-buffered executor
+                         (host-resident arrays, slab streaming).
+* ``mode="dist"``    -- shard_map over a device mesh (angles x z-slabs).
+
+All three produce identical results (tests/test_splitting.py,
+tests/test_distributed.py); algorithms in ``repro.core.algorithms`` are
+written against this interface only.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .geometry import ConeGeometry, dominant_axis_mask
+from . import projector as proj_mod
+from .splitting import MemoryModel, plan_backward, plan_forward
+
+
+class CTOperator:
+    """``A`` / ``At`` with selectable execution backend.
+
+    Parameters
+    ----------
+    geo, angles : geometry and the (static, numpy) gantry angles.
+    mode : "plain" | "stream" | "dist".
+    bp_weight : default backprojection weighting ("matched" uses the exact
+        vjp adjoint; "fdk"/"pmatched"/"none" use the voxel-driven kernel).
+    mesh : required for mode="dist".
+    memory : memory model for mode="stream" (defaults to an 11 GiB device).
+    """
+
+    def __init__(self, geo: ConeGeometry, angles: np.ndarray,
+                 mode: str = "plain", bp_weight: str = "matched",
+                 mesh=None, memory: Optional[MemoryModel] = None,
+                 devices: Optional[Sequence] = None):
+        self.geo = geo
+        self.angles_np = np.asarray(angles, np.float32)
+        self.angles = jnp.asarray(self.angles_np)
+        self.mode = mode
+        self.bp_weight = bp_weight
+        self.mesh = mesh
+        self.devices = devices
+        self.memory = memory or MemoryModel()
+        self._xdom = dominant_axis_mask(self.angles_np)
+
+        if mode == "plain":
+            self._a_cache = {}
+            self._at_voxel = jax.jit(partial(
+                proj_mod.backproject_voxel, geo=geo), static_argnames=("weight",))
+        elif mode == "dist":
+            if mesh is None:
+                raise ValueError("mode='dist' needs a mesh")
+            from .distributed import dist_backproject, dist_forward_project
+            self._a = dist_forward_project(mesh, geo)
+            self._at_fdk = dist_backproject(mesh, geo, weight="fdk")
+            self._at_none = dist_backproject(mesh, geo, weight="none")
+            self._at_pm = dist_backproject(mesh, geo, weight="pmatched")
+        elif mode == "stream":
+            n_dev = len(devices) if devices else 1
+            self.plan_f = plan_forward(geo, len(self.angles_np), n_dev,
+                                       self.memory)
+            self.plan_b = plan_backward(geo, len(self.angles_np), n_dev,
+                                        self.memory)
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+
+    def _plain_fp(self, angles_np: np.ndarray):
+        """jitted forward for a concrete angle subset (cached per mask)."""
+        mask = dominant_axis_mask(angles_np)
+        key = (len(angles_np), mask.tobytes())
+        if key not in self._a_cache:
+            self._a_cache[key] = jax.jit(
+                lambda v, a, m=mask: proj_mod.forward_project(v, self.geo, a, m))
+        return self._a_cache[key]
+
+    # ---- forward ----------------------------------------------------------
+    def A(self, vol, angles=None):
+        if self.mode == "stream":
+            a = self.angles_np if angles is None else np.asarray(angles)
+            from .streaming import stream_forward
+            return stream_forward(np.asarray(vol), self.geo, a, self.plan_f,
+                                  devices=self.devices)
+        if self.mode == "dist":
+            angles = self.angles if angles is None else angles
+            return self._a(vol, angles)
+        angles_np = self.angles_np if angles is None else np.asarray(angles)
+        return self._plain_fp(angles_np)(vol, jnp.asarray(angles_np))
+
+    # ---- backward ---------------------------------------------------------
+    def At(self, proj, angles=None, weight: Optional[str] = None):
+        angles = self.angles if angles is None else angles
+        weight = weight or self.bp_weight
+        if self.mode == "stream":
+            from .streaming import stream_backward
+            # "matched" streams the exact per-slab vjp adjoint (CGLS keeps
+            # its convergence guarantees out-of-core)
+            return stream_backward(np.asarray(proj), self.geo,
+                                   np.asarray(angles), self.plan_b,
+                                   weight=weight, devices=self.devices)
+        if self.mode == "dist":
+            if weight == "fdk":
+                return self._at_fdk(proj, angles)
+            if weight == "none":
+                return self._at_none(proj, angles)
+            return self._at_pm(proj, angles)
+        if weight == "matched":
+            # exact adjoint via vjp of the jitted forward
+            angles_np = np.asarray(angles)
+            key = ("at", len(angles_np),
+                   dominant_axis_mask(angles_np).tobytes())
+            if key not in self._a_cache:
+                fp = self._plain_fp(angles_np)
+
+                def at_fn(p, a):
+                    _, vjp = jax.vjp(
+                        lambda v: fp(v, a),
+                        jnp.zeros(self.geo.n_voxel, jnp.float32))
+                    return vjp(p)[0]
+
+                self._a_cache[key] = jax.jit(at_fn)
+            return self._a_cache[key](proj, jnp.asarray(angles_np))
+        return self._at_voxel(proj, angles=angles, weight=weight)
+
+    # ---- spectral norm estimate (power iterations) -------------------------
+    def norm_squared_est(self, n_iter: int = 8, seed: int = 0) -> float:
+        """Estimate ||A||_2^2 with power iteration on A^T A (matched pair)."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), self.geo.n_voxel,
+                              jnp.float32)
+        x = x / jnp.linalg.norm(x.ravel())
+        lam = 1.0
+        for _ in range(n_iter):
+            y = self.At(self.A(x), weight="matched")
+            lam = float(jnp.linalg.norm(y.ravel()))
+            x = y / (lam + 1e-30)
+        return lam
+
+    def subset_indices(self, subset_size: int):
+        """Contiguous angle subsets for OS methods (paper SS3.2 OS-SART)."""
+        n = len(self.angles_np)
+        return [np.arange(s, min(s + subset_size, n))
+                for s in range(0, n, subset_size)]

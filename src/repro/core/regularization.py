@@ -1,0 +1,270 @@
+"""TV regularisation with the paper's halo-buffer splitting (SS2.3, Fig 6).
+
+Two minimisers, as in TIGRE:
+
+* ``minimize_tv`` -- steepest-descent minimisation of smoothed isotropic TV
+  (used by ASD-POCS / OS-ASD-POCS).
+* ``rof_denoise`` -- Chambolle dual projection for the ROF model (used by
+  FISTA-TV style algorithms).
+
+Both are single-voxel-neighbourhood coupled stencils (z radius 1 per
+iteration), so a halo of depth ``N_in`` buys ``N_in`` *independent* inner
+iterations between synchronisations -- the paper's key observation ("the
+depth of the buffer is equal to the amount of independent iterations").
+
+Distributed behaviour and exactness:
+
+* ``dist_minimize_tv`` is *exact*: the TV objective is masked so that halo
+  planes beyond the global volume boundary contribute nothing, which makes
+  the owned-region gradient identical to the monolithic one at every inner
+  iteration (tests/test_regularization.py asserts elementwise equality).
+* ``dist_rof_denoise`` carries the dual field ``p`` across rounds
+  (re-exchanging its halo), exact on interior planes; the global top/bottom
+  boundary planes deviate at the few-ulp-to-1e-3 level because Chambolle's
+  div/grad boundary convention cannot be expressed through a constant halo
+  (documented; the paper itself accepts boundary-level approximation).
+* The global gradient norm is either exact (``psum``) or the paper's
+  no-communication approximation ``sqrt(n_shards) * ||g_local||``
+  (SS2.3 "assuming uniform distribution along the image samples").
+
+``halo_overhead`` quantifies the redundant halo compute for the ``N_in``
+trade-off benchmark (paper found N_in=60 optimal on PCIe; on ICI the
+optimum shifts -- see benchmarks/bench_tv_halo.py).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .distributed import halo_exchange
+
+
+# --------------------------------------------------------------------------
+# TV value / gradient (forward differences, z-radius-1 stencil)
+# --------------------------------------------------------------------------
+
+def _tv_field(vol: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """|grad f| per voxel with edge-replicate (Neumann) forward differences."""
+    dz = jnp.diff(vol, axis=0, append=vol[-1:])
+    dy = jnp.diff(vol, axis=1, append=vol[:, -1:])
+    dx = jnp.diff(vol, axis=2, append=vol[:, :, -1:])
+    return jnp.sqrt(dz * dz + dy * dy + dx * dx + eps * eps)
+
+
+def tv_value(vol: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    return jnp.sum(_tv_field(vol, eps))
+
+
+def _tv_value_masked(vol: jnp.ndarray, plane_mask: jnp.ndarray,
+                     dz_mask: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """TV objective of a halo-padded slab, restricted to the global volume.
+
+    ``plane_mask`` zeroes |grad f| contributions of halo planes that lie
+    *beyond the global volume*; ``dz_mask`` zeroes the z forward difference
+    at the global last plane (reproducing the monolithic edge-replicate
+    semantics, where ``append=vol[-1:]`` makes that difference vanish).
+    Together these make the owned-region gradient match the monolithic
+    gradient exactly.
+    """
+    dz = jnp.diff(vol, axis=0, append=vol[-1:]) * dz_mask[:, None, None]
+    dy = jnp.diff(vol, axis=1, append=vol[:, -1:])
+    dx = jnp.diff(vol, axis=2, append=vol[:, :, -1:])
+    field = jnp.sqrt(dz * dz + dy * dy + dx * dx + eps * eps)
+    return jnp.sum(field * plane_mask[:, None, None])
+
+
+tv_gradient = jax.grad(tv_value)
+_tv_gradient_masked = jax.grad(_tv_value_masked)
+
+
+def minimize_tv(vol: jnp.ndarray, hyper: float, n_iters: int = 20,
+                eps: float = 1e-6) -> jnp.ndarray:
+    """TIGRE's ``minimizeTV``: steepest descent with norm-relative steps."""
+    def body(_, v):
+        g = tv_gradient(v, eps)
+        gn = jnp.linalg.norm(g.ravel()) + 1e-12
+        return v - hyper * g / gn
+    return jax.lax.fori_loop(0, n_iters, body, vol)
+
+
+# --------------------------------------------------------------------------
+# ROF model via Chambolle's dual projection
+# --------------------------------------------------------------------------
+
+def _grad3(v):
+    gz = jnp.concatenate([v[1:] - v[:-1], jnp.zeros_like(v[-1:])], 0)
+    gy = jnp.concatenate([v[:, 1:] - v[:, :-1], jnp.zeros_like(v[:, -1:])], 1)
+    gx = jnp.concatenate([v[:, :, 1:] - v[:, :, :-1],
+                          jnp.zeros_like(v[:, :, -1:])], 2)
+    return gz, gy, gx
+
+
+def _div3(pz, py, px):
+    """Adjoint of ``_grad3`` (Chambolle's boundary convention)."""
+    dz = jnp.concatenate([pz[:1], pz[1:-1] - pz[:-2], -pz[-2:-1]], 0) \
+        if pz.shape[0] > 1 else pz
+    dy = jnp.concatenate([py[:, :1], py[:, 1:-1] - py[:, :-2], -py[:, -2:-1]], 1) \
+        if py.shape[1] > 1 else py
+    dx = jnp.concatenate([px[:, :, :1], px[:, :, 1:-1] - px[:, :, :-2],
+                          -px[:, :, -2:-1]], 2) if px.shape[2] > 1 else px
+    return dz + dy + dx
+
+
+def _rof_step(p, f, tau):
+    pz, py, px = p
+    gz, gy, gx = _grad3(_div3(pz, py, px) - f)
+    denom = 1.0 + tau * jnp.sqrt(gz * gz + gy * gy + gx * gx)
+    return ((pz + tau * gz) / denom, (py + tau * gy) / denom,
+            (px + tau * gx) / denom)
+
+
+def rof_denoise(vol: jnp.ndarray, lam: float = 10.0, n_iters: int = 30,
+                tau: float = 0.124) -> jnp.ndarray:
+    """Chambolle (2004) dual projection for min ||u - vol||^2/2 + TV(u)/lam."""
+    f = vol * lam
+    p0 = tuple(jnp.zeros_like(vol) for _ in range(3))
+
+    def body(_, p):
+        return _rof_step(p, f, tau)
+
+    pz, py, px = jax.lax.fori_loop(0, n_iters, body, p0)
+    return vol - _div3(pz, py, px) / lam
+
+
+# --------------------------------------------------------------------------
+# distributed (halo-split) versions -- paper Fig 6
+# --------------------------------------------------------------------------
+
+def halo_overhead(planes_local: int, halo: int) -> float:
+    """Fraction of redundant stencil work per shard for halo depth ``halo``."""
+    return 2.0 * halo / max(planes_local, 1)
+
+
+def _fake_plane_mask(planes_padded: int, depth: int, axis_name: str,
+                     n_shards: int):
+    """1.0 on planes that exist in the global volume, 0.0 on out-of-volume
+    halo planes (only the first/last shard have those)."""
+    idx = jax.lax.axis_index(axis_name)
+    pos = jnp.arange(planes_padded)
+    fake_low = (pos < depth) & (idx == 0)
+    fake_high = (pos >= planes_padded - depth) & (idx == n_shards - 1)
+    return jnp.where(fake_low | fake_high, 0.0, 1.0).astype(jnp.float32)
+
+
+def _global_last_mask(planes_padded: int, depth: int, axis_name: str,
+                      n_shards: int):
+    """0.0 at the *global* last z plane (top shard only), 1.0 elsewhere."""
+    idx = jax.lax.axis_index(axis_name)
+    pos = jnp.arange(planes_padded)
+    is_last = (pos == planes_padded - depth - 1) & (idx == n_shards - 1)
+    return jnp.where(is_last, 0.0, 1.0).astype(jnp.float32)
+
+
+def dist_minimize_tv(mesh: Mesh, hyper: float, n_iters: int, n_inner: int,
+                     model_axis: str = "model", approx_norm: bool = True,
+                     eps: float = 1e-6):
+    """Halo-split steepest-descent TV minimiser (exact; see module docs).
+
+    One halo exchange (a single ``ppermute`` pair) per ``n_inner`` inner
+    iterations.  ``approx_norm`` selects the paper's no-sync norm estimate.
+    """
+    n_outer = -(-n_iters // n_inner)
+
+    n_shards = mesh.shape[model_axis]
+
+    def body(vol_slab):
+        planes = vol_slab.shape[0]
+        padded = planes + 2 * n_inner
+
+        def outer(_, v):
+            vp = halo_exchange(v, n_inner, model_axis)
+            mask = _fake_plane_mask(padded, n_inner, model_axis, n_shards)
+            dz_mask = _global_last_mask(padded, n_inner, model_axis, n_shards)
+
+            def inner(_, vv):
+                g = _tv_gradient_masked(vv, mask, dz_mask, eps)
+                g_owned = g[n_inner:padded - n_inner]
+                sq = jnp.sum(g_owned * g_owned)
+                if approx_norm:
+                    # paper SS2.3: no collective, assume uniform distribution
+                    gn = jnp.sqrt(float(n_shards) * sq)
+                else:
+                    gn = jnp.sqrt(jax.lax.psum(sq, model_axis))
+                return vv - hyper * g / (gn + 1e-12)
+
+            vp = jax.lax.fori_loop(0, n_inner, inner, vp)
+            return vp[n_inner:padded - n_inner]
+
+        return jax.lax.fori_loop(0, n_outer, outer, vol_slab)
+
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=P(model_axis, None, None),
+                       out_specs=P(model_axis, None, None), check_vma=False)
+    return jax.jit(fn)
+
+
+def dist_rof_denoise(mesh: Mesh, lam: float, n_iters: int, n_inner: int,
+                     model_axis: str = "model", tau: float = 0.124):
+    """Halo-split Chambolle/ROF with a persistent dual field.
+
+    The image ``f`` is exchanged once (it never changes); the three dual
+    components exchange their depth-``n_inner`` halos every round.  Memory
+    per shard: padded f + 3 padded duals + the slab itself -- matching the
+    paper's note that the ROF minimiser needs ~5 image copies.
+    """
+    n_outer = -(-n_iters // n_inner)
+
+    n_shards = mesh.shape[model_axis]
+    # Chambolle's div/grad edge conventions corrupt *two* halo planes on the
+    # first inner iteration (one from the first/last-row div special case on
+    # top of the usual 1-plane wavefront), so the halo must be one plane
+    # deeper than the inner iteration count for bit-exactness -- measured,
+    # not assumed: see EXPERIMENTS.md "halo slack" note.
+    depth = n_inner + 1
+
+    def body(vol_slab):
+        planes = vol_slab.shape[0]
+        padded = planes + 2 * depth
+        f_pad = halo_exchange(vol_slab, depth, model_axis) * lam
+        mask = _fake_plane_mask(padded, depth, model_axis, n_shards)[:, None, None]
+        gz_mask = _global_last_mask(padded, depth, model_axis,
+                                    n_shards)[:, None, None]
+        p = tuple(jnp.zeros_like(f_pad) for _ in range(3))
+
+        def masked_step(p):
+            """Chambolle step reproducing the monolithic boundary convention:
+            gz vanishes at the global last plane and the dual field is pinned
+            to zero on out-of-volume planes (so div reads zeros there, like
+            the monolithic p_{-1} == 0)."""
+            pz, py, px = p
+            gz, gy, gx = _grad3(_div3(pz, py, px) - f_pad)
+            gz = gz * gz_mask
+            denom = 1.0 + tau * jnp.sqrt(gz * gz + gy * gy + gx * gx)
+            p = ((pz + tau * gz) / denom, (py + tau * gy) / denom,
+                 (px + tau * gx) / denom)
+            return tuple(c * mask for c in p)
+
+        def outer(r, p):
+            # refresh dual halos from the owned region of the neighbours
+            p = tuple(
+                halo_exchange(c[depth:padded - depth], depth, model_axis)
+                for c in p)
+            return jax.lax.fori_loop(0, n_inner, lambda _, q: masked_step(q), p)
+
+        p = jax.lax.fori_loop(0, n_outer, outer, p)
+        # final depth-1 halo so div reads a valid neighbour plane
+        p = tuple(halo_exchange(c[depth:padded - depth], 1, model_axis)
+                  for c in p)
+        u_pad = (f_pad[depth - 1:padded - depth + 1] / lam
+                 - _div3(*p) / lam)
+        return u_pad[1:1 + planes]
+
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=P(model_axis, None, None),
+                       out_specs=P(model_axis, None, None), check_vma=False)
+    return jax.jit(fn)

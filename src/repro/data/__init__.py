@@ -1,0 +1,7 @@
+"""Data substrate: deterministic synthetic pipelines for LM training and
+projection-data generation for CT benchmarks."""
+
+from .tokens import TokenPipeline, TokenPipelineConfig
+from .ct import make_ct_dataset
+
+__all__ = ["TokenPipeline", "TokenPipelineConfig", "make_ct_dataset"]

@@ -1,0 +1,8 @@
+"""Distributed runtime helpers: sharding-rule construction, straggler
+watchdog, heartbeat-based failure detection."""
+
+from .sharding import make_lm_rules, param_shardings, batch_sharding
+from .watchdog import StepWatchdog, Heartbeat
+
+__all__ = ["make_lm_rules", "param_shardings", "batch_sharding",
+           "StepWatchdog", "Heartbeat"]

@@ -1,0 +1,79 @@
+"""Sharding rules for the LM zoo on the production mesh.
+
+Logical-axis -> mesh-axis mapping (DESIGN.md SS5):
+
+    batch        -> ("pod", "data")   data parallelism (pod-major)
+    embed        -> None              activations replicated on d_model
+    heads/kv     -> "model"           tensor parallelism over heads
+    heads_x_dim  -> "model"           flat (H*hd) projection outputs
+    mlp          -> "model"           FFN hidden
+    vocab        -> "model"           vocab-parallel embedding / logits
+    expert       -> "model"           expert parallelism (MoE)
+    inner        -> "model"           mamba/xlstm inner channels
+    heads_inner  -> "model"           mamba SSD head axis
+    seq_q        -> "model"           xlstm query-sequence parallelism
+    layers       -> None              stacked-scan leading axis
+
+Divisibility is checked per-tensor by ``ShardingRules`` (non-divisible
+axes fall back to replication, e.g. minicpm3's 73448 vocab rows on a
+16-way model axis).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ShardingRules
+
+
+def make_lm_rules(mesh: Optional[Mesh]) -> ShardingRules:
+    if mesh is None:
+        return ShardingRules()
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    batch = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    rules = {
+        "batch": batch,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "heads_x_dim": "model",
+        "kv_x_dim": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "inner": "model",
+        "heads_inner": "model",
+        "seq_q": "model",
+        "seq_kv": "model",
+        "layers": None,
+    }
+    return ShardingRules(mesh=mesh, rules=rules)
+
+
+def param_shardings(model, rules: ShardingRules, params_shape):
+    """NamedSharding pytree for the param tree (divisibility-checked
+    against the abstract shapes)."""
+    axes = model.param_axes(params_shape)
+
+    def one(ax, shape_struct):
+        return rules.named_sharding(tuple(ax), shape_struct.shape)
+
+    return jax.tree.map(one, axes, params_shape,
+                        is_leaf=lambda v: isinstance(v, tuple))
+
+
+def batch_sharding(rules: ShardingRules, spec_tree):
+    """NamedSharding pytree for input batches: leading axis over
+    ("pod","data"), rest replicated.  Scalars replicated."""
+
+    def one(s):
+        if len(s.shape) == 0:
+            return NamedSharding(rules.mesh, P())
+        axes = ("batch",) + (None,) * (len(s.shape) - 1)
+        return rules.named_sharding(axes, s.shape)
+
+    return jax.tree.map(one, spec_tree)

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: FlashAttention-2 style fused attention.
+
+Hot-spot kernel for the assigned LM architectures' ``prefill_32k`` cells
+(32k-token prefill is O(S^2) and dominates those rooflines).  Features
+needed by the arch pool:
+
+* causal masking (decoder LMs) or none (hubert encoder),
+* grouped-query attention via a KV-head index map (no KV replication in
+  HBM: the ``h // group`` BlockSpec index does the broadcast),
+* attention logit soft-capping (gemma2: ``cap * tanh(s / cap)``),
+* sliding-window masking (gemma2 local layers, window 4096).
+
+Layout: q (B, Hq, S, D), k/v (B, Hkv, S, D).  Grid (B, Hq, Sq/bq, Skv/bkv)
+with the KV dimension innermost; online-softmax running max / sum / acc
+live in VMEM scratch across KV steps (FlashAttention-2 schedule: rescale
+accumulator, single final normalisation).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  softcap: Optional[float], bq: int, bkv: int):
+    kv_idx = pl.program_id(3)
+    n_kv = pl.num_programs(3)
+    q_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0] * scale                       # (bq, D)
+    k = k_ref[0, 0]                               # (bkv, D)
+    v = v_ref[0, 0]                               # (bkv, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bkv)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = q_idx * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    k_pos = kv_idx * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = jnp.ones((bq, bkv), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                           # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                        # (bq, bkv)
+    corr = jnp.exp(m_prev - m_new)                # (bq, 1)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * corr
+                    + jnp.dot(p, v, preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(kv_idx == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Fused attention.  q: (B, Hq, S, D); k/v: (B, Hkv, S, D), Hq % Hkv == 0."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not a multiple of Hkv={hkv}")
+    group = hq // hkv
+    bq = min(block_q, sq)
+    bkv = min(block_kv, skv)
+    if sq % bq or skv % bkv:
+        raise ValueError(f"seq lens ({sq},{skv}) not divisible by blocks "
+                         f"({bq},{bkv})")
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, bq=bq, bkv=bkv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, sq // bq, skv // bkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+            pl.BlockSpec((1, 1, bkv, d),
+                         lambda b_, h_, q_, k_, g=group: (b_, h_ // g, k_, 0)),
+            pl.BlockSpec((1, 1, bkv, d),
+                         lambda b_, h_, q_, k_, g=group: (b_, h_ // g, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h_, q_, k_: (b_, h_, q_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

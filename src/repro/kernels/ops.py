@@ -1,0 +1,66 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to auto-detection: True on CPU hosts (this
+container), False on real TPU backends where Mosaic compiles the kernels.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bp_voxel as _bp
+from . import flash_attention as _fa
+from . import fp_ray as _fp
+from . import tv_grad as _tv
+from repro.core.geometry import ConeGeometry
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fp_ray_project(vol, geo: ConeGeometry, angles, slab_planes: int = 16,
+                   interpret: Optional[bool] = None):
+    """Joseph forward projection (x-dominant angles) via the Pallas kernel."""
+    interpret = _auto_interpret() if interpret is None else interpret
+    fn = jax.jit(partial(_fp.fp_ray_pallas, geo=geo,
+                         angles=np.asarray(angles),
+                         slab_planes=slab_planes, interpret=interpret))
+    return fn(vol)
+
+
+def bp_voxel_backproject(proj, geo: ConeGeometry, angles, z_block: int = 16,
+                         angle_chunk: int = 8, weight: str = "fdk",
+                         interpret: Optional[bool] = None):
+    """Voxel-driven backprojection via the Pallas kernel."""
+    interpret = _auto_interpret() if interpret is None else interpret
+    fn = jax.jit(partial(_bp.bp_voxel_pallas, geo=geo,
+                         angles=np.asarray(angles), z_block=z_block,
+                         angle_chunk=angle_chunk, weight=weight,
+                         interpret=interpret))
+    return fn(proj)
+
+
+def tv_gradient_fused(vol, eps: float = 1e-6, z_block: int = 16,
+                      interpret: Optional[bool] = None):
+    """Fused TV-gradient stencil via the Pallas kernel."""
+    interpret = _auto_interpret() if interpret is None else interpret
+    return jax.jit(partial(_tv.tv_grad_pallas, eps=eps, z_block=z_block,
+                           interpret=interpret))(vol)
+
+
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: Optional[bool] = None):
+    """FlashAttention-2 style fused attention (GQA-aware)."""
+    interpret = _auto_interpret() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, block_q=block_q,
+                               block_kv=block_kv, interpret=interpret)

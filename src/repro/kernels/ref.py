@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.geometry import ConeGeometry
+from repro.core.projector import backproject_voxel, forward_project_joseph
+from repro.core.regularization import tv_gradient as _tv_gradient
+
+
+def fp_ray_ref(vol: jnp.ndarray, geo: ConeGeometry, angles: np.ndarray
+               ) -> jnp.ndarray:
+    """Oracle for fp_ray: the pure-JAX Joseph projector (x-dominant)."""
+    return forward_project_joseph(vol, geo, jnp.asarray(angles), xdom=True)
+
+
+def bp_voxel_ref(proj: jnp.ndarray, geo: ConeGeometry, angles: np.ndarray,
+                 weight: str = "fdk") -> jnp.ndarray:
+    """Oracle for bp_voxel: the pure-JAX voxel-driven backprojector."""
+    return backproject_voxel(proj, geo, jnp.asarray(angles), weight=weight)
+
+
+def tv_grad_ref(vol: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Oracle for tv_grad: autograd of the TV objective."""
+    return _tv_gradient(vol, eps)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, window: Optional[int] = None,
+                        softcap: Optional[float] = None) -> jnp.ndarray:
+    """Oracle for flash_attention: dense softmax attention with the same
+    masking / capping semantics (GQA via head repetition)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(d)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v).astype(q.dtype)

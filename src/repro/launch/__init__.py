@@ -1,0 +1,2 @@
+"""Launch layer: production mesh, step builders, multi-pod dry-run,
+training/recon drivers."""

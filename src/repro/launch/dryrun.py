@@ -1,0 +1,226 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # compile-throughput flags: the dry-run only needs the partitioned HLO
+    # and buffer assignment, not fast CPU codegen (single-core container)
+    "--xla_backend_optimization_level=0 "
+    "--xla_llvm_disable_expensive_passes=true")
+
+"""Multi-pod dry-run (deliverable e/f/g).
+
+For every (architecture x input-shape) cell, lower + compile the step on
+the production mesh -- 16x16 single pod and 2x16x16 two pods -- and record
+memory_analysis / cost_analysis / collective traffic.  Succeeding here
+proves the sharding config is coherent at 256/512 chips; the output feeds
+EXPERIMENTS.md SSDry-run and SSRoofline.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b \
+        --shape train_4k --multi-pod --out experiments/dryrun.json
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs import (ARCH_NAMES, SHAPES, cell_skip_reason, get_config,
+                           input_specs)
+from repro.launch.hlo_analysis import (analytic_hbm_traffic,
+                                       model_flops_decode,
+                                       model_flops_prefill,
+                                       model_flops_train,
+                                       roofline_from_compiled)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+
+
+# unrolled-compile tractability cutoff: above this, the two-point layer
+# extrapolation protocol is used (see dryrun_cell)
+_UNROLL_MAX_LAYERS = 24
+
+
+def _model_flops(cfg, shape: str) -> float:
+    seq, batch = SHAPES[shape]
+    if shape.startswith("train"):
+        return model_flops_train(cfg, seq, batch)
+    if shape.startswith("prefill"):
+        return model_flops_prefill(cfg, seq, batch)
+    return model_flops_decode(cfg, batch)
+
+
+def dryrun_cell(arch: str, shape: str, mesh, n_chips: int,
+                verbose: bool = True, roofline: bool = True,
+                cfg_overrides: Optional[Dict[str, Any]] = None,
+                **step_kw) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape, "status": "skip",
+                "reason": skip}
+    t0 = time.time()
+    try:
+        with mesh:
+            # Two compiles per cell:
+            # 1. scan-over-layers (the real runtime config): its buffer
+            #    assignment gives the realistic per-device memory -- XLA
+            #    reuses scan-body buffers across iterations.
+            # 2. unrolled: XLA cost_analysis counts while-loop bodies
+            #    once, so FLOPs/bytes/collectives come from this one.
+            #    Skipped when roofline=False (the multi-pod pass only
+            #    proves sharding coherence; the roofline table is
+            #    single-pod per the protocol).
+            built_s = build_step(cfg, mesh, shape, unroll=False, **step_kw)
+            compiled_s = built_s.jitted.lower(*built_s.in_specs).compile()
+            mem = compiled_s.memory_analysis()
+            t_mem = time.time() - t0
+            extrapolated = False
+            if roofline and cfg.n_layers <= _UNROLL_MAX_LAYERS:
+                built = build_step(cfg, mesh, shape, unroll=True, **step_kw)
+                lowered = built.jitted.lower(*built.in_specs)
+                t_lower = time.time() - t0 - t_mem
+                compiled = lowered.compile()
+                t_compile = time.time() - t0 - t_lower - t_mem
+                hlo = compiled.as_text()
+                rf = roofline_from_compiled(
+                    compiled, hlo, n_chips,
+                    model_flops=_model_flops(cfg, shape))
+            elif roofline:
+                # two-point layer extrapolation: FLOPs / HBM bytes /
+                # collective bytes are exactly linear in the repeat count
+                # (every repeat is the same subgraph), so compiling the
+                # unrolled build at R=1 and R=2 and extending to R is
+                # exact -- and the only tractable protocol for 40-80-layer
+                # archs on this single-core container.
+                extrapolated = True
+                R = cfg.n_repeats
+                pts = {}
+                for r in (1, 2):
+                    cfg_r = dataclasses.replace(
+                        cfg, n_layers=len(cfg.prelude) + len(cfg.pattern) * r)
+                    built_r = build_step(cfg_r, mesh, shape, unroll=True,
+                                         **step_kw)
+                    comp_r = built_r.jitted.lower(
+                        *built_r.in_specs).compile()
+                    pts[r] = roofline_from_compiled(comp_r,
+                                                    comp_r.as_text(),
+                                                    n_chips)
+                t_lower = 0.0
+                t_compile = time.time() - t0 - t_mem
+
+                def ext(a, b):
+                    return a + (R - 1) * (b - a)
+
+                rf = pts[1]
+                rf.flops = ext(pts[1].flops, pts[2].flops)
+                rf.hbm_bytes = ext(pts[1].hbm_bytes, pts[2].hbm_bytes)
+                rf.coll_bytes = ext(pts[1].coll_bytes, pts[2].coll_bytes)
+                rf.coll_detail = {
+                    k: int(ext(pts[1].coll_detail[k], pts[2].coll_detail[k]))
+                    for k in pts[1].coll_detail}
+                rf.model_flops = _model_flops(cfg, shape)
+            else:
+                compiled, t_lower, t_compile = compiled_s, 0.0, t_mem
+                hlo = compiled_s.as_text()
+                rf = roofline_from_compiled(
+                    compiled, hlo, n_chips,
+                    model_flops=_model_flops(cfg, shape))
+            seq, batch = SHAPES[shape]
+            model_shard = mesh.shape["model"]
+            data_shard = n_chips // model_shard
+            # analytic HBM model: the CPU backend inflates 'bytes accessed'
+            # for bf16 programs (f32 conversion round-trips); see
+            # EXPERIMENTS.md caveats.  Use as the memory term.
+            xla_bytes = rf.hbm_bytes
+            rf.hbm_bytes = analytic_hbm_traffic(cfg, shape, seq, batch,
+                                                model_shard, data_shard)
+        row = {
+            "xla_bytes_per_dev": xla_bytes,
+            "arch": arch, "shape": shape, "status": "ok",
+            "extrapolated": extrapolated,
+            "n_chips": n_chips,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "argument_bytes_per_device": getattr(
+                mem, "argument_size_in_bytes", None),
+            "output_bytes_per_device": getattr(
+                mem, "output_size_in_bytes", None),
+            "temp_bytes_per_device": getattr(
+                mem, "temp_size_in_bytes", None),
+            # donated outputs alias arguments on TPU; args+temp is the
+            # honest high-water estimate for the real runtime
+            "peak_bytes_per_device": (
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)),
+            **rf.row(),
+            "coll_detail": rf.coll_detail,
+        }
+        if verbose:
+            print(f"[ok] {arch:22s} {shape:12s} "
+                  f"flops={rf.flops:.3e} hbm={rf.hbm_bytes:.3e} "
+                  f"coll={rf.coll_bytes:.3e} bound={rf.bottleneck:10s} "
+                  f"peak/dev={row['peak_bytes_per_device']/2**30:.2f}GiB "
+                  f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)",
+                  flush=True)
+        return row
+    except Exception as e:  # noqa: BLE001 -- report, don't abort the sweep
+        if verbose:
+            print(f"[FAIL] {arch} {shape}: {e}", flush=True)
+            traceback.print_exc()
+        return {"arch": arch, "shape": shape, "status": "fail",
+                "error": f"{type(e).__name__}: {e}"}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2x16x16 (512 chips) instead of 16x16 (256)")
+    ap.add_argument("--out", default=None, help="write JSON report here")
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--no-roofline", action="store_true",
+                    help="compile-only pass (skip the unrolled build); "
+                         "use for the multi-pod sharding-coherence sweep")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    n_chips = 512 if args.multi_pod else 256
+    archs = [args.arch] if args.arch else list(ARCH_NAMES)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    print(f"mesh: {dict(mesh.shape)} ({n_chips} chips), "
+          f"{len(archs)}x{len(shapes)} cells", flush=True)
+    rows = []
+    for arch in archs:
+        for shape in shapes:
+            kw = {}
+            if shape.startswith("train") and args.no_zero1:
+                kw["zero1"] = False
+            rows.append(dryrun_cell(arch, shape, mesh, n_chips,
+                                    roofline=not args.no_roofline, **kw))
+
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"] == "skip" for r in rows)
+    n_fail = sum(r["status"] == "fail" for r in rows)
+    print(f"\n== dry-run summary: {n_ok} ok, {n_skip} skip (documented), "
+          f"{n_fail} FAIL ==")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"mesh": dict(mesh.shape), "n_chips": n_chips,
+                       "rows": rows}, f, indent=1, default=str)
+        print(f"wrote {args.out}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,236 @@
+"""HLO-text analysis: collective-traffic accounting + roofline terms.
+
+``collective_bytes(hlo_text)`` sums the result-shape bytes of every
+communication op (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute), per op kind.  ``cost_analysis`` gives FLOPs and HBM
+bytes; collectives are NOT in it, hence this parser.
+
+Roofline terms (TPU v5e constants):
+
+    compute    = HLO_FLOPs   / (chips * 197e12 FLOP/s)        [bf16]
+    memory     = HLO_bytes   / (chips * 819e9  B/s)
+    collective = coll_bytes  / (chips * 50e9 B/s per link * links_used)
+
+We charge each collective byte once against a single ICI link per chip
+(conservative: ring algorithms on a 2D torus can stripe across links;
+the perf log notes where striping would change the verdict).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+# TPU v5e
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link (one direction)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# one shape token: dtype[dims]{layout?}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Result-shape bytes per collective kind (``-done`` ops skipped so
+    async pairs are not double-counted)."""
+    out: Dict[str, int] = {k: 0 for k in _COLL_KINDS}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        line = hlo_text[m.start():hlo_text.index("\n", m.start())]
+        if f"{kind}-done" in line:
+            continue
+        out[kind] += _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Roofline terms.  ``flops`` / ``hbm_bytes`` / ``coll_bytes`` are
+    **per-device** quantities: ``cost_analysis`` and ``as_text`` describe
+    the single SPMD program every chip runs.  ``model_flops`` is the
+    *global* useful work (6ND); per-device comparisons divide by
+    ``n_chips``."""
+    flops: float                     # HLO FLOPs per device
+    hbm_bytes: float                 # HLO bytes accessed per device
+    coll_bytes: float                # collective result bytes per device
+    n_chips: int
+    model_flops: Optional[float] = None
+    coll_detail: Optional[Dict[str, int]] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> Optional[float]:
+        """MODEL_FLOPS / total HLO FLOPs (remat/dispatch/padding waste)."""
+        if self.model_flops is None or self.flops == 0:
+            return None
+        return self.model_flops / (self.flops * self.n_chips)
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """(MODEL_FLOPS / chips) / (t_bound * peak): the MFU the compiled
+        program could reach if it exactly hits the dominant-term bound."""
+        if self.model_flops is None or self.t_bound == 0:
+            return None
+        return (self.model_flops / self.n_chips) / (self.t_bound
+                                                    * PEAK_FLOPS)
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline_from_compiled(compiled, hlo_text: str, n_chips: int,
+                           model_flops: Optional[float] = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    return Roofline(flops=flops, hbm_bytes=hbm,
+                    coll_bytes=float(sum(coll.values())), n_chips=n_chips,
+                    model_flops=model_flops, coll_detail=coll)
+
+
+def model_flops_train(cfg, seq: int, batch: int) -> float:
+    """6 * N_active * tokens (fwd+bwd) for dense; MoE counts active params."""
+    n_active = active_param_count(cfg)
+    return 6.0 * n_active * seq * batch
+
+
+def model_flops_decode(cfg, batch: int) -> float:
+    return 2.0 * active_param_count(cfg) * batch
+
+
+def model_flops_prefill(cfg, seq: int, batch: int) -> float:
+    return 2.0 * active_param_count(cfg) * seq * batch
+
+
+def total_param_bytes(cfg) -> int:
+    import numpy as np
+    from repro.models.lm import make_model
+    import jax
+    import jax.numpy as jnp
+    model = make_model(cfg)
+    shapes = jax.eval_shape(model.init,
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(shapes))
+
+
+def analytic_hbm_traffic(cfg, shape: str, seq: int, batch: int,
+                         model_shard: int, data_shard: int) -> float:
+    """Per-device HBM bytes per step from tensor shapes (the production
+    roofline-calculator approach).  Needed because the CPU backend's
+    ``bytes accessed`` inflates bf16 programs ~3-5x (bf16 dots convert
+    operands to f32 in HBM; on TPU the MXU consumes bf16 directly).
+
+    Model:
+      train   = params (fwd read + bwd read + write) + moments (2 x fp32,
+                read+write, ZeRO-sharded) + activations (layer boundaries,
+                x4: fwd write/read + remat recompute + bwd grad)
+      prefill = params read + activations x2
+      decode  = params read + KV-cache read + write (+ activations ~0)
+    """
+    p_dev = total_param_bytes(cfg) / model_shard
+    b_loc = max(batch // data_shard, 1)
+    act = b_loc * seq * cfg.d_model * 2          # one boundary tensor
+    if shape.startswith("train"):
+        params_t = 3 * p_dev
+        moments_t = 2 * (total_param_bytes(cfg) * 2 / (model_shard
+                                                       * data_shard)) * 2
+        acts_t = 4 * cfg.n_layers * act
+        return params_t + moments_t + acts_t
+    if shape.startswith("prefill"):
+        return p_dev + 2 * cfg.n_layers * act
+    # decode: params + cache traffic; cache ~ 2 * kv * S * hd * layers
+    cache = (2 * cfg.n_kv * seq * cfg.hd * 2 * cfg.n_layers
+             * b_loc / max(model_shard // 1, 1))
+    if cfg.family in ("ssm",):
+        cache = cfg.n_layers * b_loc * cfg.d_model * 2 * 64
+    return p_dev + 1.5 * cache
+
+
+def active_param_count(cfg) -> int:
+    """Active (per-token) params: embeddings excluded from matmul FLOPs
+    except the tied lm head, MoE counts top_k + shared experts only."""
+    import numpy as np
+    from repro.models.lm import make_model
+    import jax
+    import jax.numpy as jnp
+
+    model = make_model(cfg)
+    shapes = jax.eval_shape(model.init,
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    total = 0
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        n = int(np.prod(leaf.shape))
+        if "embed" in name:
+            n = 0                      # gather, not matmul
+        if "moe" in name and "shared" not in name and \
+                any(k in name for k in ("w_gate", "w_up", "w_down")):
+            n = n * cfg.top_k // max(cfg.n_experts, 1)
+        total += n
+    # tied unembedding matmul
+    total += cfg.vocab * cfg.d_model
+    return total

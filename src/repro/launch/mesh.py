@@ -1,0 +1,28 @@
+"""Production meshes.
+
+``make_production_mesh`` builds the dry-run target mesh: a 16x16 pod
+(256 chips, TPU v5e topology) with ("data", "model") axes, or the 2-pod
+2x16x16 = 512-chip mesh with a leading "pod" axis.  It is a *function*
+(never a module-level constant) so importing this module cannot touch JAX
+device state before the launcher sets XLA flags.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Small mesh over the actually-present local devices (tests, CPU)."""
+    n = jax.local_device_count()
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

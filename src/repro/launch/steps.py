@@ -1,0 +1,223 @@
+"""Jitted step builders: train / prefill / serve (decode) per architecture.
+
+Each builder returns ``(step_fn, in_shardings, out_shardings, abstract
+inputs)`` ready for ``jax.jit(...).lower(...).compile()`` -- the dry-run
+path -- or for real execution on a host mesh (examples/, tests/).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import input_specs
+from repro.distributed.sharding import (batch_sharding, make_lm_rules,
+                                        param_shardings)
+from repro.models.common import ShardingRules
+from repro.models.lm import ArchConfig, make_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.optim.adamw import zero1_spec
+
+
+# --------------------------------------------------------------------------
+# cache shardings (heuristic: batch axis 0; then heads-like axis 1 if
+# divisible by the model axis, else the largest divisible trailing axis)
+# --------------------------------------------------------------------------
+
+def cache_shardings(rules: ShardingRules, cache_shapes):
+    """Shardings for decode caches.
+
+    Leaves under ``stack`` carry a leading layers axis (replicated); the
+    next axis is batch -> ("pod","data"); then the heads-like axis 1 goes
+    to "model" when divisible, else the largest divisible trailing axis
+    (e.g. the 32k sequence axis when kv-heads = 8 < 16).  Integer ``pos``
+    slot arrays are replicated."""
+    mesh = rules.mesh
+    model_size = mesh.shape["model"]
+    batch_axes = rules.rules.get("batch")
+    bsz = rules._axis_size(batch_axes)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            return NamedSharding(mesh, P())
+        stacked = any(getattr(k, "key", None) == "stack" for k in path)
+        off = 1 if stacked else 0          # leading layers axis replicated
+        if len(shape) - off < 2:
+            return NamedSharding(mesh, P())
+        entries: list = [None] * len(shape)
+        batch_used = shape[off] % bsz == 0 and shape[off] > 0
+        if batch_used:
+            entries[off] = batch_axes
+        cand = None
+        if len(shape) - off > 2 and shape[off + 1] % model_size == 0:
+            cand = off + 1
+        else:
+            trailing = [(i, s) for i, s in enumerate(shape[off + 1:],
+                                                     off + 1)
+                        if s % model_size == 0]
+            if trailing:
+                cand = max(trailing, key=lambda t: t[1])[0]
+        if cand is not None:
+            entries[cand] = "model"
+        if not batch_used:
+            # batch axes idle (e.g. long_500k's global_batch=1): spread the
+            # largest remaining divisible axis over them instead
+            free = [(i, s) for i, s in enumerate(shape[off + 1:], off + 1)
+                    if entries[i] is None and s % bsz == 0]
+            if free:
+                entries[max(free, key=lambda t: t[1])[0]] = batch_axes
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+# --------------------------------------------------------------------------
+# optimizer-state shardings
+# --------------------------------------------------------------------------
+
+def opt_shardings(p_shard, p_shape, mesh, zero1: bool = False):
+    if not zero1:
+        moments = p_shard
+    else:
+        data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+        def z1(ns, sh):
+            return NamedSharding(mesh, zero1_spec(ns.spec, sh.shape,
+                                                  data_axes, mesh))
+
+        moments = jax.tree.map(z1, p_shard, p_shape)
+    return {"m": moments, "v": moments,
+            "step": NamedSharding(mesh, P())}
+
+
+# --------------------------------------------------------------------------
+# builders
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Any                       # python callable (to be jitted by caller)
+    jitted: Any                   # jax.jit-wrapped with shardings
+    in_specs: Tuple               # abstract inputs (ShapeDtypeStructs)
+    in_shardings: Tuple
+    out_shardings: Any
+
+
+def _key_struct():
+    return jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def abstract_params(cfg: ArchConfig):
+    model = make_model(cfg)
+    return jax.eval_shape(model.init, _key_struct())
+
+
+def build_train_step(cfg: ArchConfig, mesh: Mesh, shape: str = "train_4k",
+                     opt: AdamWConfig = AdamWConfig(), zero1: bool = True,
+                     remat: bool = True, total_steps: int = 10000,
+                     donate: bool = True, unroll: bool = False) -> BuiltStep:
+    rules = make_lm_rules(mesh)
+    model = make_model(cfg, rules)
+    p_shape = abstract_params(cfg)
+    p_shard = param_shardings(model, rules, p_shape)
+    o_shape = jax.eval_shape(adamw_init, p_shape)
+    o_shard = opt_shardings(p_shard, p_shape, mesh, zero1=zero1)
+    specs = input_specs(cfg, shape)
+    b_shard = batch_sharding(rules, specs)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch["tokens"], batch["labels"],
+                              ctx=batch.get("ctx"), remat=remat,
+                              unroll=unroll)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        lr = cosine_schedule(opt_state["step"], 200, total_steps, opt.lr)
+        new_p, new_o, metrics = adamw_update(params, grads, opt_state, opt,
+                                             lr=lr)
+        metrics["loss"] = loss
+        return new_p, new_o, metrics
+
+    metrics_shard = {"loss": NamedSharding(mesh, P()),
+                     "grad_norm": NamedSharding(mesh, P())}
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, metrics_shard),
+        donate_argnums=(0, 1) if donate else ())
+    return BuiltStep(train_step, jitted, (p_shape, o_shape, specs),
+                     (p_shard, o_shard, b_shard),
+                     (p_shard, o_shard, metrics_shard))
+
+
+def build_prefill_step(cfg: ArchConfig, mesh: Mesh,
+                       shape: str = "prefill_32k",
+                       unroll: bool = False) -> BuiltStep:
+    rules = make_lm_rules(mesh)
+    model = make_model(cfg, rules)
+    p_shape = abstract_params(cfg)
+    p_shard = param_shardings(model, rules, p_shape)
+    specs = input_specs(cfg, shape)
+    b_shard = batch_sharding(rules, specs)
+
+    def prefill(params, batch):
+        return model.prefill(params, batch["tokens"], ctx=batch.get("ctx"),
+                             unroll=unroll)
+
+    bsz = specs["tokens"].shape[0]
+    out_shard = rules.named_sharding(("batch", None, None),
+                                     (bsz, 1, cfg.vocab))
+    jitted = jax.jit(prefill, in_shardings=(p_shard, b_shard),
+                     out_shardings=out_shard)
+    return BuiltStep(prefill, jitted, (p_shape, specs), (p_shard, b_shard),
+                     out_shard)
+
+
+def build_serve_step(cfg: ArchConfig, mesh: Mesh, shape: str = "decode_32k",
+                     donate: bool = True, unroll: bool = False) -> BuiltStep:
+    rules = make_lm_rules(mesh)
+    model = make_model(cfg, rules)
+    p_shape = abstract_params(cfg)
+    p_shard = param_shardings(model, rules, p_shape)
+    specs = input_specs(cfg, shape)
+    c_shard = cache_shardings(rules, specs["caches"])
+    tok_shard = batch_sharding(rules, {"token": specs["token"]})["token"]
+    pos_shard = NamedSharding(mesh, P())
+    in_shardings = [p_shard, tok_shard, pos_shard, c_shard]
+    args = [p_shape, specs["token"], specs["pos"], specs["caches"]]
+    if "ctx" in specs:
+        in_shardings.append(batch_sharding(rules, {"c": specs["ctx"]})["c"])
+        args.append(specs["ctx"])
+
+        def serve_step(params, token, pos, caches, ctx):
+            return model.decode_step(params, token, pos, caches, ctx=ctx,
+                                     unroll=unroll)
+    else:
+        def serve_step(params, token, pos, caches):
+            return model.decode_step(params, token, pos, caches,
+                                     unroll=unroll)
+
+    bsz = specs["token"].shape[0]
+    logits_shard = rules.named_sharding(("batch", None, None),
+                                        (bsz, 1, cfg.vocab))
+    jitted = jax.jit(serve_step, in_shardings=tuple(in_shardings),
+                     out_shardings=(logits_shard, c_shard),
+                     donate_argnums=(3,) if donate else ())
+    return BuiltStep(serve_step, jitted, tuple(args), tuple(in_shardings),
+                     (logits_shard, c_shard))
+
+
+def build_step(cfg: ArchConfig, mesh: Mesh, shape: str, **kw) -> BuiltStep:
+    """Dispatch on the shape cell kind."""
+    if shape.startswith("train"):
+        return build_train_step(cfg, mesh, shape, **kw)
+    if shape.startswith("prefill"):
+        return build_prefill_step(cfg, mesh, shape, **kw)
+    return build_serve_step(cfg, mesh, shape, **kw)

@@ -1,0 +1,12 @@
+"""Assigned-architecture zoo: 10 LM-family architectures as one composable
+decoder/encoder LM with pattern-stacked layers.
+
+Families: dense GQA (codeqwen, stablelm), local/global alternating + softcap
+(gemma2), MLA (minicpm3), MoE shared+routed top-k (deepseek-moe, moonshot),
+hybrid Mamba2 + shared attention (zamba2), sLSTM/mLSTM (xlstm), encoder-only
+audio (hubert), cross-attention VLM (llama-3.2-vision).
+"""
+
+from .lm import ArchConfig, LM, make_model
+
+__all__ = ["ArchConfig", "LM", "make_model"]

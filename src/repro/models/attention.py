@@ -1,0 +1,413 @@
+"""Attention variants: GQA (w/ sliding window, softcap, QK-norm), MLA
+(DeepSeek/MiniCPM3 latent KV), and cross-attention (VLM image layers).
+
+Each variant provides ``init``, ``fwd`` (full-sequence: train / prefill,
+returning a decode cache) and ``decode`` (single-token with cache).
+The full-sequence path uses the Pallas flash-attention kernel when
+enabled, else an identical-semantics jnp fallback (XLA path used in the
+dry-run so GSPMD owns the sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ShardingRules, apply_rope, dense_init, rms_norm
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    causal: bool = True
+    window: Optional[int] = None          # sliding window (gemma2 local)
+    softcap: Optional[float] = None       # logit soft-capping (gemma2)
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    use_flash: bool = False               # Pallas kernel on the fwd path
+
+
+def init_gqa(key, cfg: AttnConfig, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 4)
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), 0, dtype),
+        "wk": dense_init(ks[1], (d, kvh * hd), 0, dtype),
+        "wv": dense_init(ks[2], (d, kvh * hd), 0, dtype),
+        "wo": dense_init(ks[3], (h * hd, d), 0, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.zeros((hd,), dtype)
+        p["k_scale"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+GQA_AXES = {
+    "wq": ("embed", "heads_x_dim"),
+    "wk": ("embed", "kv_x_dim"),
+    "wv": ("embed", "kv_x_dim"),
+    "wo": ("heads_x_dim", "embed"),
+    "q_scale": (None,),
+    "k_scale": (None,),
+}
+
+
+_Q_CHUNK = 1024
+_KV_ALIGN = 256
+
+
+def _sdpa(q, k, v, cfg: AttnConfig, q_offset=0):
+    """jnp attention with flash-identical masking semantics.
+
+    q: (B, Hq, Sq, D), k/v: (B, Hkv, Skv, D).  ``q_offset`` is the absolute
+    position of q[0].
+
+    Long sequences are processed in **query chunks** with *static* KV-range
+    slicing: a causal chunk never multiplies KV columns beyond its last
+    row, and a sliding-window chunk only touches ``[q0 - window, q1)``.
+    This keeps the materialised score block at (B, H, 1024, kv_range) --
+    the XLA-path analogue of the Pallas flash kernel's block skipping --
+    and makes window layers O(S*w) instead of O(S^2) in both FLOPs and
+    HBM traffic (causal layers get the 2x triangle saving).  KV heads are
+    broadcast to H (bf16, cheap) so the head axis shards cleanly even when
+    Hkv < the mesh model size (gemma2's 8 on a 16-way axis).
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / math.sqrt(d)
+    qc = _Q_CHUNK if sq > _Q_CHUNK and sq % _Q_CHUNK == 0 else sq
+    outs = []
+    for q0 in range(0, sq, qc):
+        q1 = q0 + qc
+        k_lo, k_hi = 0, skv
+        if cfg.causal:
+            k_hi = min(skv, q_offset + q1)
+        if cfg.window is not None:
+            k_lo = max(0, (q_offset + q0 - cfg.window + 1)
+                       // _KV_ALIGN * _KV_ALIGN)
+        k_hi = max(k_hi, k_lo + 1)
+        qb = q[:, :, q0:q1].astype(jnp.float32) * scale
+        s = jnp.einsum("bhqd,bhkd->bhqk", qb, kf[:, :, k_lo:k_hi])
+        if cfg.softcap is not None:
+            s = cfg.softcap * jnp.tanh(s / cfg.softcap)
+        q_pos = q_offset + q0 + jnp.arange(q1 - q0)[:, None]
+        k_pos = k_lo + jnp.arange(k_hi - k_lo)[None, :]
+        mask = jnp.ones((q1 - q0, k_hi - k_lo), bool)
+        if cfg.causal:
+            mask &= k_pos <= q_pos
+        if cfg.window is not None:
+            mask &= k_pos > q_pos - cfg.window
+        s = jnp.where(mask[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        outs.append(jnp.einsum("bhqk,bhkd->bhqd", p, vf[:, :, k_lo:k_hi]))
+    o = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=2)
+    return o.astype(q.dtype)
+
+
+def gqa_fwd(p: Params, x: jnp.ndarray, cfg: AttnConfig, rules: ShardingRules,
+            positions=None, make_cache: bool = False):
+    """Full-sequence attention.  Returns (out, cache | None)."""
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    if positions is None:
+        positions = jnp.arange(s)
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, kvh, hd)
+    v = (x @ p["wv"]).reshape(b, s, kvh, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_scale"])
+        k = rms_norm(k, p["k_scale"])
+    q = apply_rope(q.swapaxes(1, 2), positions, cfg.rope_theta)  # (B,H,S,D)
+    k = apply_rope(k.swapaxes(1, 2), positions, cfg.rope_theta)
+    v = v.swapaxes(1, 2)
+    q = rules.shard(q, ("batch", "heads", None, None))
+    k = rules.shard(k, ("batch", "kv_heads", None, None))
+    v = rules.shard(v, ("batch", "kv_heads", None, None))
+    if cfg.use_flash:
+        from repro.kernels.ops import flash_attention
+        o = flash_attention(q, k, v, causal=cfg.causal, window=cfg.window,
+                            softcap=cfg.softcap)
+    else:
+        o = _sdpa(q, k, v, cfg)
+    o = o.swapaxes(1, 2).reshape(b, s, h * hd)
+    out = o @ p["wo"]
+    out = rules.shard(out, ("batch", None, "embed"))
+    cache = {"k": k, "v": v} if make_cache else None
+    return out, cache
+
+
+def gqa_decode(p: Params, x: jnp.ndarray, cache, cfg: AttnConfig,
+               rules: ShardingRules, pos: jnp.ndarray):
+    """One-token decode.  x: (B, 1, D); cache k/v: (B, Hkv, S_cache, D)
+    plus ``pos``: (S_cache,) absolute position of each slot (-1 = empty).
+
+    The cache is a **ring buffer**: the new KV is written at
+    ``pos % S_cache``.  For full-context layers ``S_cache = S_max`` and the
+    ring index is the identity; for sliding-window layers (gemma2 local)
+    ``S_cache = window``, which keeps the 32k/500k-context cache at a
+    constant few MB.  Validity masks come from the per-slot absolute
+    positions, so both layouts share one code path.
+    """
+    b, _, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, 1, h, hd)
+    k_new = (x @ p["wk"]).reshape(b, 1, kvh, hd)
+    v_new = (x @ p["wv"]).reshape(b, 1, kvh, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_scale"])
+        k_new = rms_norm(k_new, p["k_scale"])
+    posv = jnp.full((1,), pos)
+    q = apply_rope(q.swapaxes(1, 2), posv, cfg.rope_theta)     # (B,H,1,D)
+    k_new = apply_rope(k_new.swapaxes(1, 2), posv, cfg.rope_theta)
+    v_new = v_new.swapaxes(1, 2)
+
+    s_cache = cache["k"].shape[2]
+    slot = pos % s_cache
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, 0, slot, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, 0, slot, 0))
+    slot_pos = jax.lax.dynamic_update_slice(cache["pos"],
+                                            jnp.full((1,), pos, jnp.int32),
+                                            (slot,))
+    group = h // kvh
+    qg = q.reshape(b, kvh, group, 1, hd)
+    # preferred_element_type keeps the cache in bf16 (no f32 copy of the
+    # multi-GB cache) while accumulating scores in f32
+    scores = jnp.einsum("bkgqd,bkld->bkgql", qg.astype(k.dtype), k,
+                        preferred_element_type=jnp.float32) / math.sqrt(hd)
+    if cfg.softcap is not None:
+        scores = cfg.softcap * jnp.tanh(scores / cfg.softcap)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if cfg.window is not None:
+        valid &= slot_pos > pos - cfg.window
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    pattn = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgql,bkld->bkgqd", pattn.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, h, 1, hd).swapaxes(1, 2).reshape(b, 1, h * hd)
+    return (o.astype(x.dtype) @ p["wo"]), {"k": k, "v": v, "pos": slot_pos}
+
+
+# --------------------------------------------------------------------------
+# MLA -- multi-head latent attention (MiniCPM3 / DeepSeek-V2 style)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_head_dim: int = 64
+    rope_theta: float = 10000.0
+    seq_parallel: bool = False
+
+
+def init_mla(key, cfg: MLAConfig, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 8)
+    h = cfg.n_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq_a": dense_init(ks[0], (cfg.d_model, cfg.q_lora_rank), 0, dtype),
+        "q_a_scale": jnp.zeros((cfg.q_lora_rank,), dtype),
+        "wq_b": dense_init(ks[1], (cfg.q_lora_rank, h * qd), 0, dtype),
+        "wkv_a": dense_init(ks[2], (cfg.d_model,
+                                    cfg.kv_lora_rank + cfg.qk_rope_dim), 0,
+                            dtype),
+        "kv_a_scale": jnp.zeros((cfg.kv_lora_rank,), dtype),
+        "wkv_b": dense_init(ks[3], (cfg.kv_lora_rank,
+                                    h * (cfg.qk_nope_dim + cfg.v_head_dim)),
+                            0, dtype),
+        "wo": dense_init(ks[4], (h * cfg.v_head_dim, cfg.d_model), 0, dtype),
+    }
+
+
+MLA_AXES = {
+    "wq_a": ("embed", None),
+    "q_a_scale": (None,),
+    "wq_b": (None, "heads_x_dim"),
+    "wkv_a": ("embed", None),
+    "kv_a_scale": (None,),
+    "wkv_b": (None, "heads_x_dim"),
+    "wo": ("heads_x_dim", "embed"),
+}
+
+
+def mla_fwd(p: Params, x: jnp.ndarray, cfg: MLAConfig, rules: ShardingRules,
+            positions=None, make_cache: bool = False):
+    """MLA full-sequence pass.  The decode cache is the *latent* kv (rank
+    kv_lora_rank + rope dim per token) -- the memory-compression point of
+    MLA (DESIGN.md SS6 notes the kinship with the paper's memory goal)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    if positions is None:
+        positions = jnp.arange(s)
+    q_lat = rms_norm(x @ p["wq_a"], p["q_a_scale"])
+    q = (q_lat @ p["wq_b"]).reshape(b, s, h,
+                                    cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope.swapaxes(1, 2), positions,
+                        cfg.rope_theta).swapaxes(1, 2)
+
+    kv_a = x @ p["wkv_a"]                        # (B, S, rank + rope)
+    kv_lat, k_rope = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+    kv_lat = rms_norm(kv_lat, p["kv_a_scale"])
+    k_rope = apply_rope(k_rope[:, None], positions,
+                        cfg.rope_theta)[:, 0]    # shared across heads
+    kv = (kv_lat @ p["wkv_b"]).reshape(
+        b, s, h, cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope, v = jnp.split(kv, [cfg.qk_nope_dim], axis=-1)
+
+    qf = jnp.concatenate([q_nope, q_rope], -1).swapaxes(1, 2)  # (B,H,S,Dq)
+    kf = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                  (b, s, h, cfg.qk_rope_dim))],
+        -1).swapaxes(1, 2)
+    vf = v.swapaxes(1, 2)
+    # 40 heads do not divide a 16-way model axis; two context-parallel
+    # layouts (EXPERIMENTS.md SSPerf B):
+    #  * baseline: shard the KV sequence -- GSPMD reduces softmax stats
+    #    and the value contraction over seq shards (measured: it instead
+    #    all-gathers the sharded score blocks, ~1.6 TB/dev at 32k)
+    #  * hillclimbed (mla_seq_parallel): shard the *query* rows -- softmax
+    #    is over the local (last) axis, zero attention collectives; K/V
+    #    replicated (0.5 GB/dev bf16 at 32k)
+    from .perf import FLAGS
+    seq_par = cfg.seq_parallel or FLAGS.get("mla_seq_parallel")
+    if not seq_par:
+        kf = rules.shard(kf, ("batch", None, "seq_kv", None))
+        vf = rules.shard(vf, ("batch", None, "seq_kv", None))
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    qc = 1024 if s > 1024 and s % 1024 == 0 else s
+    outs = []
+    for q0 in range(0, s, qc):
+        q1 = q0 + qc
+        k_hi = min(s, q1)                       # static causal column skip
+        qb = qf[:, :, q0:q1].astype(jnp.float32) * scale
+        if seq_par:
+            qb = rules.shard(qb, ("batch", None, "seq_q", None))
+        sc = jnp.einsum("bhqd,bhkd->bhqk", qb,
+                        kf[:, :, :k_hi].astype(jnp.float32))
+        mask = (jnp.arange(k_hi)[None, :]
+                <= (q0 + jnp.arange(q1 - q0))[:, None])
+        sc = jnp.where(mask[None, None], sc, -1e30)
+        attn = jax.nn.softmax(sc, axis=-1)
+        outs.append(jnp.einsum("bhqk,bhkd->bhqd", attn,
+                               vf[:, :, :k_hi].astype(jnp.float32)))
+    o = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=2)
+    o = o.swapaxes(1, 2).reshape(b, s, h * cfg.v_head_dim).astype(x.dtype)
+    if seq_par:
+        o = rules.shard(o, ("batch", "seq_q", None))
+    out = o @ p["wo"]
+    if seq_par:
+        return rules.shard(out, ("batch", "seq_q", None)), (
+            {"kv_lat": kv_lat, "k_rope": k_rope,
+             "pos": jnp.arange(s, dtype=jnp.int32)} if make_cache else None)
+    cache = None
+    if make_cache:
+        cache = {"kv_lat": kv_lat, "k_rope": k_rope}
+    return rules.shard(out, ("batch", None, "embed")), cache
+
+
+def mla_decode(p: Params, x: jnp.ndarray, cache, cfg: MLAConfig,
+               rules: ShardingRules, pos: jnp.ndarray):
+    """Decode with the latent cache in the **weight-absorbed** form
+    (DeepSeek-V2 App. C): instead of expanding the whole latent cache to
+    per-head K/V every step (O(S rank H d) FLOPs -- PFLOPs at 32k), the
+    ``wkv_b`` key half is absorbed into the query and the value half is
+    applied *after* attention, so all per-step cost is linear in S with
+    rank-sized inner dimensions.  The latent cache slots carry a ``pos``
+    validity array like the GQA ring cache."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    posv = jnp.full((1,), pos)
+    q_lat = rms_norm(x @ p["wq_a"], p["q_a_scale"])
+    q = (q_lat @ p["wq_b"]).reshape(b, 1, h,
+                                    cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope.swapaxes(1, 2), posv,
+                        cfg.rope_theta).swapaxes(1, 2)
+
+    kv_a = x @ p["wkv_a"]
+    kv_lat_new, k_rope_new = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+    kv_lat_new = rms_norm(kv_lat_new, p["kv_a_scale"])
+    k_rope_new = apply_rope(k_rope_new[:, None], posv, cfg.rope_theta)[:, 0]
+
+    kv_lat = jax.lax.dynamic_update_slice(
+        cache["kv_lat"], kv_lat_new.astype(cache["kv_lat"].dtype), (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+    slot_pos = jax.lax.dynamic_update_slice(
+        cache["pos"], jnp.full((1,), pos, jnp.int32), (pos,))
+
+    # absorb wkv_b: (rank, H*(nope+v)) -> key half (rank,H,nope), value half
+    wkv = p["wkv_b"].reshape(cfg.kv_lora_rank, h,
+                             cfg.qk_nope_dim + cfg.v_head_dim)
+    wk, wv = jnp.split(wkv, [cfg.qk_nope_dim], axis=-1)
+    q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope, wk,
+                       preferred_element_type=jnp.float32)  # (B,1,H,rank)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    s_nope = jnp.einsum("bqhr,bkr->bhqk", q_abs.astype(kv_lat.dtype),
+                        kv_lat, preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(k_rope.dtype),
+                        k_rope, preferred_element_type=jnp.float32)
+    scores = (s_nope + s_rope) * scale
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhqk,bkr->bqhr", attn.astype(kv_lat.dtype),
+                       kv_lat, preferred_element_type=jnp.float32)
+    o = jnp.einsum("bqhr,rhd->bqhd", o_lat.astype(wv.dtype), wv,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, h * cfg.v_head_dim).astype(x.dtype)
+    return o @ p["wo"], {"kv_lat": kv_lat, "k_rope": k_rope,
+                         "pos": slot_pos}
+
+
+# --------------------------------------------------------------------------
+# cross attention (llama-3.2-vision image layers; stub patch embeddings)
+# --------------------------------------------------------------------------
+
+def init_cross(key, cfg: AttnConfig, dtype=jnp.bfloat16) -> Params:
+    p = init_gqa(key, cfg, dtype)
+    p["q_scale"] = jnp.zeros((cfg.head_dim,), dtype)
+    p["k_scale"] = jnp.zeros((cfg.head_dim,), dtype)
+    p["gate"] = jnp.zeros((), dtype)   # zero-init tanh gate (llama-vision)
+    return p
+
+
+def cross_fwd(p: Params, x: jnp.ndarray, ctx: jnp.ndarray, cfg: AttnConfig,
+              rules: ShardingRules):
+    """Text queries attend over (precomputed) image patch embeddings."""
+    b, s, d = x.shape
+    sk = ctx.shape[1]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (ctx @ p["wk"]).reshape(b, sk, kvh, hd)
+    v = (ctx @ p["wv"]).reshape(b, sk, kvh, hd)
+    q = rms_norm(q, p["q_scale"]).swapaxes(1, 2)
+    k = rms_norm(k, p["k_scale"]).swapaxes(1, 2)
+    v = v.swapaxes(1, 2)
+    q = rules.shard(q, ("batch", "heads", None, None))
+    cfg_nc = dataclasses.replace(cfg, causal=False, window=None, softcap=None)
+    o = _sdpa(q, k, v, cfg_nc)
+    o = o.swapaxes(1, 2).reshape(b, s, h * hd)
+    return jnp.tanh(p["gate"]) * (o @ p["wo"])

@@ -1,0 +1,170 @@
+"""Shared building blocks: norms, rotary embedding, init, sharding hooks.
+
+Sharding uses *logical axis names* on every parameter / activation; a
+:class:`ShardingRules` maps them to mesh axes (DESIGN.md SS5).  On a single
+device (smoke tests) the rules are empty and everything is a no-op.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# --------------------------------------------------------------------------
+# sharding rules
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardingRules:
+    """logical axis -> mesh axis (or None).  Missing names -> replicated."""
+    mesh: Optional[Mesh] = None
+    rules: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def _axis_size(self, mapped) -> int:
+        if mapped is None:
+            return 1
+        names = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        size = 1
+        for n in names:
+            size *= self.mesh.shape[n]
+        return size
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for the logical axes.  If ``shape`` is given, any
+        axis whose dimension is not divisible by its mesh-axis size is
+        dropped (replicated) -- e.g. 40 MLA heads on a 16-way model axis,
+        or a length-1 decode axis."""
+        if self.mesh is None:
+            return P()
+        axes = []
+        for i, name in enumerate(logical_axes):
+            mapped = self.rules.get(name) if name else None
+            if mapped is not None and shape is not None:
+                if shape[i] % self._axis_size(mapped) != 0:
+                    mapped = None
+            axes.append(mapped)
+        return P(*axes)
+
+    def shard(self, x, logical_axes: Sequence[Optional[str]]):
+        """Apply a sharding constraint (no-op without a mesh; drops
+        non-divisible axes)."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(logical_axes, x.shape)))
+
+    def named_sharding(self, logical_axes: Sequence[Optional[str]],
+                       shape: Optional[Sequence[int]] = None):
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+NO_SHARD = ShardingRules()
+
+
+# --------------------------------------------------------------------------
+# initialisation (all params carry .logical_axes metadata via dict pairing)
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """Truncated-normal fan-in init (matches common LM inits)."""
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embedding
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, D even); positions: (S,) or broadcastable."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d, theta), x.dtype)  # (D/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs[None, :]
+    cos = jnp.cos(ang).astype(x.dtype)
+    sin = jnp.sin(ang).astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def softmax_xent_chunked(x: jnp.ndarray, emb: jnp.ndarray,
+                         labels: jnp.ndarray, rules: ShardingRules,
+                         chunk: int = 512, softcap: float = 0.0,
+                         unroll: bool = False) -> jnp.ndarray:
+    """Cross-entropy with the unembedding fused per sequence chunk.
+
+    Never materialises the full (B, S, V) logits -- essential for the 256k
+    vocab archs (gemma2) where full logits would be ~16 GiB/device.  The
+    vocab axis stays sharded; GSPMD turns the max/sum into collectives.
+    ``unroll`` replaces the chunk scan with a python loop (dry-run FLOPs
+    accounting); ``softcap`` applies gemma2's final-logit capping.
+    """
+    b, s, d = x.shape
+    n_chunks = s // chunk if s % chunk == 0 else 1
+    if s % chunk != 0:
+        chunk = s
+
+    def chunk_loss(xc, yc):
+        logits = jnp.einsum("bsd,vd->bsv", xc.astype(jnp.float32),
+                            emb.astype(jnp.float32))
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        logits = rules.shard(logits, ("batch", None, "vocab"))
+        m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    if unroll:
+        total = jnp.zeros((), jnp.float32)
+        for c in range(n_chunks):
+            total = total + chunk_loss(x[:, c * chunk:(c + 1) * chunk],
+                                       labels[:, c * chunk:(c + 1) * chunk])
+        return total / (b * s)
+
+    def body(carry, inputs):
+        xc, yc = inputs                        # (B, chunk, D), (B, chunk)
+        return carry + chunk_loss(xc, yc), None
+
+    xr = x.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    yr = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xr, yr))
+    return total / (b * s)

@@ -1,0 +1,72 @@
+"""Feed-forward variants: SwiGLU / GeGLU gated MLPs (dense archs) and the
+plain GELU MLP (hubert encoder)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import ShardingRules, dense_init
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class FFNConfig:
+    d_model: int
+    d_ff: int
+    activation: str = "silu"        # silu (llama/qwen), gelu_tanh (gemma2)
+    gated: bool = True              # gated (SwiGLU/GeGLU) vs plain 2-layer
+    seq_parallel: bool = False      # shard S (not d_ff) over "model"
+
+
+def _act(x, name: str):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu_tanh":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=False)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def init_ffn(key, cfg: FFNConfig, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 3)
+    if cfg.gated:
+        return {
+            "w_gate": dense_init(ks[0], (cfg.d_model, cfg.d_ff), 0, dtype),
+            "w_up": dense_init(ks[1], (cfg.d_model, cfg.d_ff), 0, dtype),
+            "w_down": dense_init(ks[2], (cfg.d_ff, cfg.d_model), 0, dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], (cfg.d_model, cfg.d_ff), 0, dtype),
+        "w_down": dense_init(ks[1], (cfg.d_ff, cfg.d_model), 0, dtype),
+    }
+
+
+FFN_AXES = {
+    "w_gate": ("embed", "mlp"),
+    "w_up": ("embed", "mlp"),
+    "w_down": ("mlp", "embed"),
+}
+
+
+def ffn_fwd(p: Params, x: jnp.ndarray, cfg: FFNConfig,
+            rules: ShardingRules) -> jnp.ndarray:
+    if cfg.gated:
+        h = _act(x @ p["w_gate"], cfg.activation) * (x @ p["w_up"])
+    else:
+        h = _act(x @ p["w_up"], cfg.activation)
+    if cfg.seq_parallel:
+        # sequence parallelism: weights replicated, tokens sharded
+        h = rules.shard(h, ("batch", "seq_q", None))
+        out = h @ p["w_down"]
+        return rules.shard(out, ("batch", "seq_q", None))
+    h = rules.shard(h, ("batch", None, "mlp"))
+    out = h @ p["w_down"]
+    return rules.shard(out, ("batch", None, "embed"))

@@ -1,0 +1,710 @@
+"""Composable LM covering the 10 assigned architectures.
+
+An architecture is a *repeating pattern* of typed blocks, scanned with
+``jax.lax.scan`` over the repeat axis (stacked params), plus an optional
+prelude (deepseek's first dense layer, zamba2's leftover mamba blocks) and
+optional closure-shared blocks (zamba2's shared attention).
+
+Block types
+-----------
+``attn``         pre-norm GQA + pre-norm gated FFN (llama/qwen style)
+``attn_local``   same, sliding-window + softcap (gemma2; sandwich norms)
+``attn_global``  same, full attention + softcap (gemma2)
+``attn_bidir``   non-causal LayerNorm encoder block (hubert)
+``mla``          multi-head latent attention + FFN (minicpm3)
+``moe``          GQA attention + MoE FFN (deepseek, moonshot)
+``dense``        GQA attention + dense FFN (deepseek first layer)
+``xattn``        gated cross-attention over patch embeddings (llama-vision)
+``mamba``        Mamba2 block (zamba2)
+``mamba_shared`` Mamba2 block followed by the *shared* attention block
+``mlstm``/``slstm``  xLSTM blocks
+
+Caches: every cacheable block id owns a stacked (R, ...) cache pytree;
+decode scans over repeats consuming/producing cache slices.  Sliding-window
+attention uses a ring-buffer cache of ``window`` slots (gemma2 local layers
+at 32k+ contexts would otherwise dominate HBM).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import ffn as ffn_mod
+from . import mamba2 as mamba_mod
+from . import moe as moe_mod
+from . import xlstm as xlstm_mod
+from .attention import AttnConfig, MLAConfig
+from .common import (ShardingRules, dense_init, embed_init, layer_norm,
+                     rms_norm, softmax_xent_chunked)
+from .ffn import FFNConfig
+from .mamba2 import Mamba2Config
+from .moe import MoEConfig
+from .xlstm import XLSTMConfig
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                         # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    pattern: Tuple[str, ...] = ("attn",)
+    prelude: Tuple[str, ...] = ()
+    head_dim: int = 0                   # 0 -> d_model // n_heads
+    # attention extras
+    window: int = 0                     # sliding window (attn_local)
+    softcap: float = 0.0                # attention logit softcap
+    final_softcap: float = 0.0          # final logit softcap (gemma2)
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    # MLA (minicpm3)
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_head_dim: int = 64
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    d_expert: int = 0
+    # SSM / hybrid
+    ssm_state: int = 0
+    mamba_head_dim: int = 64
+    ssd_chunk: int = 256
+    # VLM
+    n_ctx_tokens: int = 0               # patch-embedding count (stub frontend)
+    # misc
+    norm: str = "rms"                   # rms | layer
+    activation: str = "silu"
+    tie_embed: bool = True
+    embed_scale: bool = False           # gemma: x *= sqrt(d)
+    encoder_only: bool = False
+    sub_quadratic: bool = False         # long_500k eligible
+    # sequence parallelism: replicate block weights, shard every per-token
+    # tensor on the sequence axis over "model" (zero per-layer TP
+    # collectives; right when heads don't divide the mesh -- minicpm3's
+    # 40 on 16.  See EXPERIMENTS.md SSPerf B.)
+    seq_parallel: bool = False
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_repeats(self) -> int:
+        n = self.n_layers - len(self.prelude)
+        assert n % len(self.pattern) == 0, \
+            f"{self.name}: {n} layers not divisible by pattern {self.pattern}"
+        return n // len(self.pattern)
+
+    # ---- sub-configs -------------------------------------------------------
+    def attn_cfg(self, kind: str) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads, n_kv=self.n_kv,
+            head_dim=self.hd,
+            causal=not self.encoder_only and kind != "attn_bidir",
+            window=self.window if kind == "attn_local" else None,
+            softcap=self.softcap or None, qk_norm=self.qk_norm,
+            rope_theta=self.rope_theta)
+
+    def mla_cfg(self) -> MLAConfig:
+        return MLAConfig(self.d_model, self.n_heads, self.q_lora_rank,
+                         self.kv_lora_rank, self.qk_nope_dim,
+                         self.qk_rope_dim, self.v_head_dim, self.rope_theta,
+                         seq_parallel=self.seq_parallel)
+
+    def ffn_cfg(self) -> FFNConfig:
+        return FFNConfig(self.d_model, self.d_ff, self.activation,
+                         gated=self.norm == "rms",
+                         seq_parallel=self.seq_parallel)
+
+    def moe_cfg(self) -> MoEConfig:
+        return MoEConfig(self.d_model, self.d_expert or self.d_ff,
+                         self.n_experts, self.top_k, self.n_shared,
+                         activation=self.activation)
+
+    def mamba_cfg(self) -> Mamba2Config:
+        return Mamba2Config(self.d_model, d_state=self.ssm_state or 64,
+                            head_dim=self.mamba_head_dim,
+                            chunk=self.ssd_chunk)
+
+    def xlstm_cfg(self) -> XLSTMConfig:
+        return XLSTMConfig(self.d_model, n_heads=self.n_heads)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (for 6ND model-FLOPs accounting)."""
+        import numpy as np
+        model = make_model(self)
+        shapes = jax.eval_shape(lambda k: model.init(k), jax.ShapeDtypeStruct(
+            (2,), jnp.uint32))
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+
+
+# --------------------------------------------------------------------------
+# block init / axes / fwd / decode dispatch
+# --------------------------------------------------------------------------
+
+def _norm_init(cfg: ArchConfig, dtype):
+    if cfg.norm == "layer":
+        return {"scale": jnp.ones((cfg.d_model,), dtype),
+                "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def _apply_norm(p, x, cfg: ArchConfig):
+    if cfg.norm == "layer":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+_NORM_AXES = {"scale": (None,), "bias": (None,)}
+
+
+def init_block(key, kind: str, cfg: ArchConfig) -> Params:
+    dt = cfg.dtype
+    ks = jax.random.split(key, 4)
+    if kind in ("attn", "attn_local", "attn_global", "attn_bidir"):
+        p = {"ln1": _norm_init(cfg, dt),
+             "attn": attn_mod.init_gqa(ks[0], cfg.attn_cfg(kind), dt),
+             "ln2": _norm_init(cfg, dt),
+             "ffn": ffn_mod.init_ffn(ks[1], cfg.ffn_cfg(), dt)}
+        if kind in ("attn_local", "attn_global"):   # gemma2 sandwich norms
+            p["post_ln1"] = _norm_init(cfg, dt)
+            p["post_ln2"] = _norm_init(cfg, dt)
+        return p
+    if kind == "mla":
+        return {"ln1": _norm_init(cfg, dt),
+                "attn": attn_mod.init_mla(ks[0], cfg.mla_cfg(), dt),
+                "ln2": _norm_init(cfg, dt),
+                "ffn": ffn_mod.init_ffn(ks[1], cfg.ffn_cfg(), dt)}
+    if kind == "moe":
+        return {"ln1": _norm_init(cfg, dt),
+                "attn": attn_mod.init_gqa(ks[0], cfg.attn_cfg("attn"), dt),
+                "ln2": _norm_init(cfg, dt),
+                "moe": moe_mod.init_moe(ks[1], cfg.moe_cfg(), dt)}
+    if kind == "dense":
+        dense_ff = FFNConfig(cfg.d_model, cfg.d_ff, cfg.activation, True)
+        return {"ln1": _norm_init(cfg, dt),
+                "attn": attn_mod.init_gqa(ks[0], cfg.attn_cfg("attn"), dt),
+                "ln2": _norm_init(cfg, dt),
+                "ffn": ffn_mod.init_ffn(ks[1], dense_ff, dt)}
+    if kind == "xattn":
+        return {"ln1": _norm_init(cfg, dt),
+                "attn": attn_mod.init_cross(ks[0], cfg.attn_cfg("attn"), dt),
+                "ln2": _norm_init(cfg, dt),
+                "ffn": ffn_mod.init_ffn(ks[1], cfg.ffn_cfg(), dt)}
+    if kind in ("mamba", "mamba_shared"):
+        return {"ln1": _norm_init(cfg, dt),
+                "mamba": mamba_mod.init_mamba2(ks[0], cfg.mamba_cfg(), dt)}
+    if kind == "mlstm":
+        return {"ln1": _norm_init(cfg, dt),
+                "mlstm": xlstm_mod.init_mlstm(ks[0], cfg.xlstm_cfg(), dt)}
+    if kind == "slstm":
+        return {"ln1": _norm_init(cfg, dt),
+                "slstm": xlstm_mod.init_slstm(ks[0], cfg.xlstm_cfg(), dt)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def block_axes(kind: str, cfg: Optional[ArchConfig] = None) -> Dict[str, Any]:
+    if cfg is not None and cfg.seq_parallel:
+        # sequence parallelism: block weights replicated (tokens shard)
+        def strip(ax_tree):
+            return jax.tree.map(lambda ax: tuple(None for _ in ax),
+                                _block_axes(kind),
+                                is_leaf=lambda v: isinstance(v, tuple))
+        return strip(_block_axes(kind))
+    return _block_axes(kind)
+
+
+def _block_axes(kind: str) -> Dict[str, Any]:
+    if kind in ("attn", "attn_local", "attn_global", "attn_bidir"):
+        ax = {"ln1": _NORM_AXES, "attn": attn_mod.GQA_AXES,
+              "ln2": _NORM_AXES, "ffn": ffn_mod.FFN_AXES}
+        if kind in ("attn_local", "attn_global"):
+            ax["post_ln1"] = _NORM_AXES
+            ax["post_ln2"] = _NORM_AXES
+        return ax
+    if kind == "mla":
+        return {"ln1": _NORM_AXES, "attn": attn_mod.MLA_AXES,
+                "ln2": _NORM_AXES, "ffn": ffn_mod.FFN_AXES}
+    if kind == "moe":
+        return {"ln1": _NORM_AXES, "attn": attn_mod.GQA_AXES,
+                "ln2": _NORM_AXES, "moe": moe_mod.MOE_AXES}
+    if kind == "dense":
+        return {"ln1": _NORM_AXES, "attn": attn_mod.GQA_AXES,
+                "ln2": _NORM_AXES, "ffn": ffn_mod.FFN_AXES}
+    if kind == "xattn":
+        gqa = dict(attn_mod.GQA_AXES)
+        gqa["gate"] = ()
+        return {"ln1": _NORM_AXES, "attn": gqa,
+                "ln2": _NORM_AXES, "ffn": ffn_mod.FFN_AXES}
+    if kind in ("mamba", "mamba_shared"):
+        return {"ln1": _NORM_AXES, "mamba": mamba_mod.MAMBA2_AXES}
+    if kind == "mlstm":
+        return {"ln1": _NORM_AXES, "mlstm": xlstm_mod.MLSTM_AXES}
+    if kind == "slstm":
+        return {"ln1": _NORM_AXES, "slstm": xlstm_mod.SLSTM_AXES}
+    raise ValueError(kind)
+
+
+def _shared_attn_fwd(shared_p, x, cfg: ArchConfig, rules, make_cache,
+                     positions):
+    """zamba2's shared transformer block (one param set, many call sites)."""
+    acfg = cfg.attn_cfg("attn")
+    h = _apply_norm(shared_p["ln1"], x, cfg)
+    a, cache = attn_mod.gqa_fwd(shared_p["attn"], h, acfg, rules,
+                                positions=positions, make_cache=make_cache)
+    x = x + a
+    h = _apply_norm(shared_p["ln2"], x, cfg)
+    x = x + ffn_mod.ffn_fwd(shared_p["ffn"], h, cfg.ffn_cfg(), rules)
+    return x, cache
+
+
+def block_fwd(kind: str, p: Params, x, cfg: ArchConfig, rules,
+              ctx=None, shared=None, make_cache=False, positions=None):
+    """Returns (x, cache, aux)."""
+    zero = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "attn_local", "attn_global", "attn_bidir", "dense",
+                "moe"):
+        acfg = cfg.attn_cfg(kind if kind.startswith("attn") else "attn")
+        h = _apply_norm(p["ln1"], x, cfg)
+        a, cache = attn_mod.gqa_fwd(p["attn"], h, acfg, rules,
+                                    positions=positions,
+                                    make_cache=make_cache)
+        if "post_ln1" in p:
+            a = _apply_norm(p["post_ln1"], a, cfg)
+        x = x + a
+        h = _apply_norm(p["ln2"], x, cfg)
+        if kind == "moe":
+            f, aux = moe_mod.moe_fwd(p["moe"], h, cfg.moe_cfg(), rules)
+        else:
+            f = ffn_mod.ffn_fwd(p["ffn"], h, cfg.ffn_cfg(), rules)
+            aux = zero
+        if "post_ln2" in p:
+            f = _apply_norm(p["post_ln2"], f, cfg)
+        return x + f, cache, aux
+    if kind == "mla":
+        h = _apply_norm(p["ln1"], x, cfg)
+        a, cache = attn_mod.mla_fwd(p["attn"], h, cfg.mla_cfg(), rules,
+                                    positions=positions,
+                                    make_cache=make_cache)
+        x = x + a
+        h = _apply_norm(p["ln2"], x, cfg)
+        return x + ffn_mod.ffn_fwd(p["ffn"], h, cfg.ffn_cfg(), rules), \
+            cache, zero
+    if kind == "xattn":
+        h = _apply_norm(p["ln1"], x, cfg)
+        a = attn_mod.cross_fwd(p["attn"], h, ctx, cfg.attn_cfg("attn"), rules)
+        x = x + a
+        h = _apply_norm(p["ln2"], x, cfg)
+        # cross-attn KV depends only on ctx; decode reuses it via a cache of
+        # the projected ctx K/V (built lazily in decode paths)
+        return x + ffn_mod.ffn_fwd(p["ffn"], h, cfg.ffn_cfg(), rules), \
+            None, zero
+    if kind in ("mamba", "mamba_shared"):
+        h = _apply_norm(p["ln1"], x, cfg)
+        m, mcache = mamba_mod.mamba2_fwd(p["mamba"], h, cfg.mamba_cfg(),
+                                         rules, make_cache=make_cache)
+        x = x + m
+        scache = None
+        if kind == "mamba_shared":
+            x, scache = _shared_attn_fwd(shared, x, cfg, rules, make_cache,
+                                         positions)
+        cache = ({"mamba": mcache, "shared": scache}
+                 if make_cache and kind == "mamba_shared" else mcache)
+        return x, cache, zero
+    if kind == "mlstm":
+        h = _apply_norm(p["ln1"], x, cfg)
+        m, cache = xlstm_mod.mlstm_fwd(p["mlstm"], h, cfg.xlstm_cfg(), rules,
+                                       make_cache=make_cache)
+        return x + m, cache, zero
+    if kind == "slstm":
+        h = _apply_norm(p["ln1"], x, cfg)
+        m, cache = xlstm_mod.slstm_fwd(p["slstm"], h, cfg.xlstm_cfg(), rules,
+                                       make_cache=make_cache)
+        return x + m, cache, zero
+    raise ValueError(kind)
+
+
+def _shared_attn_decode(shared_p, x, cache, cfg: ArchConfig, rules, pos):
+    acfg = cfg.attn_cfg("attn")
+    h = _apply_norm(shared_p["ln1"], x, cfg)
+    a, cache = attn_mod.gqa_decode(shared_p["attn"], h, cache, acfg, rules,
+                                   pos)
+    x = x + a
+    h = _apply_norm(shared_p["ln2"], x, cfg)
+    x = x + ffn_mod.ffn_fwd(shared_p["ffn"], h, cfg.ffn_cfg(), rules)
+    return x, cache
+
+
+def block_decode(kind: str, p: Params, x, cache, cfg: ArchConfig, rules,
+                 pos, ctx=None, shared=None):
+    """Single-token step.  Returns (x, cache)."""
+    if kind in ("attn", "attn_local", "attn_global", "dense", "moe"):
+        acfg = cfg.attn_cfg(kind if kind.startswith("attn") else "attn")
+        h = _apply_norm(p["ln1"], x, cfg)
+        a, cache = attn_mod.gqa_decode(p["attn"], h, cache, acfg, rules, pos)
+        if "post_ln1" in p:
+            a = _apply_norm(p["post_ln1"], a, cfg)
+        x = x + a
+        h = _apply_norm(p["ln2"], x, cfg)
+        if kind == "moe":
+            f, _ = moe_mod.moe_fwd(p["moe"], h, cfg.moe_cfg(), rules)
+        else:
+            f = ffn_mod.ffn_fwd(p["ffn"], h, cfg.ffn_cfg(), rules)
+        if "post_ln2" in p:
+            f = _apply_norm(p["post_ln2"], f, cfg)
+        return x + f, cache
+    if kind == "mla":
+        h = _apply_norm(p["ln1"], x, cfg)
+        a, cache = attn_mod.mla_decode(p["attn"], h, cache, cfg.mla_cfg(),
+                                       rules, pos)
+        x = x + a
+        h = _apply_norm(p["ln2"], x, cfg)
+        return x + ffn_mod.ffn_fwd(p["ffn"], h, cfg.ffn_cfg(), rules), cache
+    if kind == "xattn":
+        h = _apply_norm(p["ln1"], x, cfg)
+        a = attn_mod.cross_fwd(p["attn"], h, ctx, cfg.attn_cfg("attn"), rules)
+        x = x + a
+        h = _apply_norm(p["ln2"], x, cfg)
+        return x + ffn_mod.ffn_fwd(p["ffn"], h, cfg.ffn_cfg(), rules), cache
+    if kind in ("mamba", "mamba_shared"):
+        h = _apply_norm(p["ln1"], x, cfg)
+        mcache = cache["mamba"] if kind == "mamba_shared" else cache
+        m, mcache = mamba_mod.mamba2_decode(p["mamba"], h, mcache,
+                                            cfg.mamba_cfg(), rules)
+        x = x + m
+        if kind == "mamba_shared":
+            x, scache = _shared_attn_decode(shared, x, cache["shared"], cfg,
+                                            rules, pos)
+            return x, {"mamba": mcache, "shared": scache}
+        return x, mcache
+    if kind == "mlstm":
+        h = _apply_norm(p["ln1"], x, cfg)
+        m, cache = xlstm_mod.mlstm_decode(p["mlstm"], h, cache,
+                                          cfg.xlstm_cfg(), rules)
+        return x + m, cache
+    if kind == "slstm":
+        h = _apply_norm(p["ln1"], x, cfg)
+        m, cache = xlstm_mod.slstm_decode(p["slstm"], h, cache,
+                                          cfg.xlstm_cfg(), rules)
+        return x + m, cache
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# cache construction (shapes only; used concretely and via eval_shape)
+# --------------------------------------------------------------------------
+
+def block_cache_zeros(kind: str, cfg: ArchConfig, batch: int, s_max: int):
+    """Zero-initialised decode cache for one block instance."""
+    dt = cfg.dtype
+    if kind in ("attn", "attn_global", "dense", "moe"):
+        return {"k": jnp.zeros((batch, cfg.n_kv, s_max, cfg.hd), dt),
+                "v": jnp.zeros((batch, cfg.n_kv, s_max, cfg.hd), dt),
+                "pos": jnp.full((s_max,), -1, jnp.int32)}
+    if kind == "attn_local":                    # ring buffer of window slots
+        w = min(cfg.window, s_max)
+        return {"k": jnp.zeros((batch, cfg.n_kv, w, cfg.hd), dt),
+                "v": jnp.zeros((batch, cfg.n_kv, w, cfg.hd), dt),
+                "pos": jnp.full((w,), -1, jnp.int32)}
+    if kind == "mla":
+        return {"kv_lat": jnp.zeros((batch, s_max, cfg.kv_lora_rank), dt),
+                "k_rope": jnp.zeros((batch, s_max, cfg.qk_rope_dim), dt),
+                "pos": jnp.full((s_max,), -1, jnp.int32)}
+    if kind == "xattn":
+        return None
+    if kind in ("mamba", "mamba_shared"):
+        mc = cfg.mamba_cfg()
+        w1 = mc.conv_width - 1
+        mcache = {"conv": {"x": jnp.zeros((batch, w1, mc.d_inner), dt),
+                           "B": jnp.zeros((batch, w1, mc.d_state), dt),
+                           "C": jnp.zeros((batch, w1, mc.d_state), dt)},
+                  "ssm": jnp.zeros((batch, mc.n_heads, mc.head_dim,
+                                    mc.d_state), jnp.float32)}
+        if kind == "mamba_shared":
+            return {"mamba": mcache,
+                    "shared": {"k": jnp.zeros((batch, cfg.n_kv, s_max,
+                                               cfg.hd), dt),
+                               "v": jnp.zeros((batch, cfg.n_kv, s_max,
+                                               cfg.hd), dt),
+                               "pos": jnp.full((s_max,), -1, jnp.int32)}}
+        return mcache
+    if kind == "mlstm":
+        xc = cfg.xlstm_cfg()
+        return {"conv": jnp.zeros((batch, xc.conv_width - 1, xc.d_inner), dt),
+                "C": jnp.zeros((batch, xc.n_heads, xc.head_dim,
+                                xc.head_dim), jnp.float32),
+                "n": jnp.zeros((batch, xc.n_heads, xc.head_dim), jnp.float32),
+                "m": jnp.full((batch, xc.n_heads), -1e30, jnp.float32)}
+    if kind == "slstm":
+        d = cfg.d_model
+        return {"c": jnp.zeros((batch, d), jnp.float32),
+                "n": jnp.zeros((batch, d), jnp.float32),
+                "m": jnp.full((batch, d), -1e30, jnp.float32),
+                "y": jnp.zeros((batch, d), jnp.float32)}
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# the model
+# --------------------------------------------------------------------------
+
+class LM:
+    """Functional model wrapper: ``init``, ``forward``, ``loss``,
+    ``prefill``, ``decode_step``, ``init_cache``."""
+
+    def __init__(self, cfg: ArchConfig, rules: Optional[ShardingRules] = None):
+        self.cfg = cfg
+        self.rules = rules or ShardingRules()
+
+    # ---- init --------------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        p: Params = {"embed": embed_init(keys[0], (cfg.vocab, cfg.d_model),
+                                         cfg.dtype),
+                     "final_norm": _norm_init(cfg, cfg.dtype)}
+        if cfg.prelude:
+            p["prelude"] = {
+                f"p{i}": init_block(jax.random.fold_in(keys[1], i), kind, cfg)
+                for i, kind in enumerate(cfg.prelude)}
+        r = cfg.n_repeats
+
+        def stacked(kind, base_key):
+            leaves = [init_block(jax.random.fold_in(base_key, j), kind, cfg)
+                      for j in range(r)]
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+
+        p["stack"] = {f"b{i}": stacked(kind, jax.random.fold_in(keys[2], i))
+                      for i, kind in enumerate(cfg.pattern)}
+        if "mamba_shared" in cfg.pattern:
+            p["shared_attn"] = {
+                "ln1": _norm_init(cfg, cfg.dtype),
+                "attn": attn_mod.init_gqa(keys[3], cfg.attn_cfg("attn"),
+                                          cfg.dtype),
+                "ln2": _norm_init(cfg, cfg.dtype),
+                "ffn": ffn_mod.init_ffn(keys[4], cfg.ffn_cfg(), cfg.dtype)}
+        if not cfg.tie_embed:
+            p["lm_head"] = dense_init(keys[5], (cfg.vocab, cfg.d_model), 1,
+                                      cfg.dtype)
+        return p
+
+    def param_axes(self, params=None) -> Dict[str, Any]:
+        """Logical-axes pytree matching ``init`` output (stacked blocks get
+        a leading ``layers`` axis -> None).  If ``params`` (or its abstract
+        shapes) is given, the template is pruned to its exact structure --
+        the template is a superset (e.g. LayerNorm bias vs RMS scale)."""
+        cfg = self.cfg
+
+        def prepend(ax_tree):
+            return jax.tree.map(lambda ax: ("layers",) + tuple(ax), ax_tree,
+                                is_leaf=lambda v: isinstance(v, tuple))
+
+        axes: Dict[str, Any] = {"embed": ("vocab", "embed"),
+                                "final_norm": _NORM_AXES}
+        if cfg.prelude:
+            axes["prelude"] = {f"p{i}": block_axes(kind, cfg)
+                               for i, kind in enumerate(cfg.prelude)}
+        axes["stack"] = {f"b{i}": prepend(block_axes(kind, cfg))
+                         for i, kind in enumerate(cfg.pattern)}
+        if "mamba_shared" in cfg.pattern:
+            axes["shared_attn"] = {"ln1": _NORM_AXES,
+                                   "attn": attn_mod.GQA_AXES,
+                                   "ln2": _NORM_AXES,
+                                   "ffn": ffn_mod.FFN_AXES}
+        if not cfg.tie_embed:
+            axes["lm_head"] = ("vocab", "embed")
+        if params is None:
+            return axes
+
+        def walk(ax_node, p_node):
+            if isinstance(p_node, dict):
+                return {k: walk(ax_node[k], v) for k, v in p_node.items()}
+            return tuple(ax_node)
+
+        return walk(axes, params)
+
+    # ---- forward -----------------------------------------------------------
+    def _embed(self, p, tokens):
+        cfg = self.cfg
+        if tokens.dtype in (jnp.int32, jnp.int64):
+            x = jnp.take(p["embed"], tokens, axis=0)
+        else:
+            x = tokens.astype(cfg.dtype)        # stub frontend: embeddings in
+        if cfg.embed_scale:
+            x = x * math.sqrt(cfg.d_model)
+        return self.rules.shard(x, ("batch", None, "embed"))
+
+    def forward(self, p: Params, tokens, ctx=None, make_cache: bool = False,
+                remat: bool = True, unroll: bool = False):
+        """Full-sequence pass.  Returns (hidden, caches, aux_loss).
+
+        ``unroll=True`` replaces the repeat-axis ``lax.scan`` with a Python
+        loop: needed by the dry-run because XLA's cost_analysis counts a
+        while-loop body once regardless of trip count, which would
+        under-report FLOPs/bytes/collectives by ~n_layers.
+        """
+        cfg, rules = self.cfg, self.rules
+        x = self._embed(p, tokens)
+        s = x.shape[1]
+        positions = jnp.arange(s)
+        aux_total = jnp.zeros((), jnp.float32)
+        caches: Dict[str, Any] = {}
+
+        if cfg.prelude:
+            for i, kind in enumerate(cfg.prelude):
+                x, cache, aux = block_fwd(kind, p["prelude"][f"p{i}"], x, cfg,
+                                          rules, ctx=ctx,
+                                          shared=p.get("shared_attn"),
+                                          make_cache=make_cache,
+                                          positions=positions)
+                aux_total = aux_total + aux
+                caches[f"p{i}"] = cache
+
+        shared = p.get("shared_attn")
+
+        def unit(x, unit_params):
+            aux_u = jnp.zeros((), jnp.float32)
+            ucaches = {}
+            for i, kind in enumerate(cfg.pattern):
+                x, cache, aux = block_fwd(kind, unit_params[f"b{i}"], x, cfg,
+                                          rules, ctx=ctx, shared=shared,
+                                          make_cache=make_cache,
+                                          positions=positions)
+                aux_u = aux_u + aux
+                ucaches[f"b{i}"] = cache
+            return x, ucaches, aux_u
+
+        if remat:
+            unit = jax.checkpoint(unit)
+
+        if unroll:
+            ys = []
+            for r in range(cfg.n_repeats):
+                unit_params = jax.tree.map(lambda a: a[r], p["stack"])
+                x, ucaches, aux_u = unit(x, unit_params)
+                aux_total = aux_total + aux_u
+                ys.append(ucaches)
+            if make_cache:
+                caches["stack"] = jax.tree.map(lambda *zs: jnp.stack(zs),
+                                               *ys)
+        else:
+            def body(carry, unit_params):
+                x, aux = carry
+                x, ucaches, aux_u = unit(x, unit_params)
+                return (x, aux + aux_u), ucaches
+
+            (x, aux_total), stack_caches = jax.lax.scan(
+                body, (x, aux_total), p["stack"])
+            if make_cache:
+                caches["stack"] = stack_caches
+        x = _apply_norm(p["final_norm"], x, cfg)
+        return x, (caches if make_cache else None), aux_total
+
+    def logits(self, p: Params, hidden):
+        cfg = self.cfg
+        emb = p["embed"] if cfg.tie_embed else p["lm_head"]
+        lg = jnp.einsum("bsd,vd->bsv", hidden.astype(jnp.float32),
+                        emb.astype(jnp.float32))
+        if cfg.final_softcap:
+            lg = cfg.final_softcap * jnp.tanh(lg / cfg.final_softcap)
+        return lg
+
+    def loss(self, p: Params, tokens, labels, ctx=None, remat: bool = True,
+             unroll: bool = False):
+        """Mean token cross-entropy (+ MoE aux)."""
+        cfg = self.cfg
+        hidden, _, aux = self.forward(p, tokens, ctx=ctx, remat=remat,
+                                      unroll=unroll)
+        emb = p["embed"] if cfg.tie_embed else p["lm_head"]
+        xent = softmax_xent_chunked(hidden, emb, labels, self.rules,
+                                    softcap=cfg.final_softcap,
+                                    unroll=unroll)
+        return xent + aux
+
+    # ---- serving -----------------------------------------------------------
+    def init_cache(self, batch: int, s_max: int):
+        cfg = self.cfg
+        caches: Dict[str, Any] = {}
+        for i, kind in enumerate(cfg.prelude):
+            caches[f"p{i}"] = block_cache_zeros(kind, cfg, batch, s_max)
+        r = cfg.n_repeats
+
+        def stack_zeros(kind):
+            one = block_cache_zeros(kind, cfg, batch, s_max)
+            return jax.tree.map(
+                lambda z: jnp.broadcast_to(z[None], (r,) + z.shape), one)
+
+        caches["stack"] = {f"b{i}": stack_zeros(kind)
+                           for i, kind in enumerate(cfg.pattern)
+                           if block_cache_zeros(kind, cfg, batch,
+                                                s_max) is not None}
+        return caches
+
+    def prefill(self, p: Params, tokens, ctx=None, unroll: bool = False):
+        """Prefill: hidden states + last-position logits (no cache return in
+        the lowered serving path -- decode cells lower ``decode_step``)."""
+        hidden, _, _ = self.forward(p, tokens, ctx=ctx, make_cache=False,
+                                    remat=False, unroll=unroll)
+        return self.logits(p, hidden[:, -1:])
+
+    def decode_step(self, p: Params, token, pos, caches, ctx=None,
+                    unroll: bool = False):
+        """One-token decode.  token: (B, 1) int32 (or (B, 1, D) features);
+        pos: scalar int32.  Returns (logits (B, 1, V), new caches)."""
+        cfg, rules = self.cfg, self.rules
+        x = self._embed(p, token)
+        new_caches: Dict[str, Any] = {}
+        for i, kind in enumerate(cfg.prelude):
+            x, c = block_decode(kind, p["prelude"][f"p{i}"], x,
+                                caches.get(f"p{i}"), cfg, rules, pos, ctx=ctx,
+                                shared=p.get("shared_attn"))
+            new_caches[f"p{i}"] = c
+        shared = p.get("shared_attn")
+
+        def body(x, slices):
+            unit_params, unit_caches = slices
+            ucaches = {}
+            for i, kind in enumerate(cfg.pattern):
+                cid = f"b{i}"
+                x, c = block_decode(kind, unit_params[cid], x,
+                                    unit_caches.get(cid), cfg, rules, pos,
+                                    ctx=ctx, shared=shared)
+                if cid in unit_caches:
+                    ucaches[cid] = c
+            return x, ucaches
+
+        if unroll:
+            ys = []
+            for r in range(cfg.n_repeats):
+                sl = jax.tree.map(lambda a: a[r],
+                                  (p["stack"], caches["stack"]))
+                x, uc = body(x, sl)
+                ys.append(uc)
+            stack_caches = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+        else:
+            x, stack_caches = jax.lax.scan(body, x,
+                                           (p["stack"], caches["stack"]))
+        new_caches["stack"] = stack_caches
+        x = _apply_norm(p["final_norm"], x, cfg)
+        return self.logits(p, x), new_caches
+
+
+def make_model(cfg: ArchConfig, rules: Optional[ShardingRules] = None) -> LM:
+    return LM(cfg, rules)

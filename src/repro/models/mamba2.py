@@ -1,0 +1,257 @@
+"""Mamba2 (SSD) block -- zamba2-7b's backbone.
+
+Implements the *chunked* state-space-dual algorithm (Mamba2 paper SS6):
+the sequence is split into chunks of length L; within a chunk the output
+is an attention-like masked matmul (MXU-friendly), across chunks a short
+``lax.scan`` carries the (H, P, N) state.  This is the TPU-native
+formulation -- a per-step scan would serialise 4k+ tiny updates, while the
+chunked form is O(S L) + O(S N P / L) dense matmuls.
+
+Decode is the O(1) recurrent update: ``S <- a S + dt B x^T; y = C S``.
+
+Layout: d_inner = expand * d_model, heads H = d_inner / head_dim(P=64),
+B/C shared across heads in ``n_groups`` groups (we use 1), state N.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ShardingRules, dense_init
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64               # N  (zamba2: ssm_state=64)
+    head_dim: int = 64              # P
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256                # SSD chunk length L
+    dt_min: float = 1e-3
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+    @property
+    def d_conv_ch(self) -> int:     # channels through the causal conv
+        return self.d_inner + 2 * self.d_state
+
+
+def init_mamba2(key, cfg: Mamba2Config, dtype=jnp.bfloat16) -> Params:
+    """Projections for z / x / B / C / dt are SEPARATE parameters.
+
+    Mathematically identical to the packed ``in_proj`` (one matmul over
+    the concatenated output), but slicing a packed model-sharded axis at
+    non-shard-aligned offsets (z|xBC|dt at 7168/14464 of 14576) makes
+    GSPMD reshard every piece via collective-permutes -- measured at
+    ~0.5 GB/layer/pass on the 256-chip mesh (EXPERIMENTS.md SSPerf C3).
+    Separate column-parallel projections shard each output cleanly."""
+    ks = jax.random.split(key, 8)
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    dt = jnp.exp(jax.random.uniform(ks[2], (h,))
+                 * (math.log(cfg.dt_max) - math.log(cfg.dt_min))
+                 + math.log(cfg.dt_min))
+    return {
+        "w_z": dense_init(ks[0], (cfg.d_model, di), 0, dtype),
+        "w_x": dense_init(ks[1], (cfg.d_model, di), 0, dtype),
+        "w_B": dense_init(ks[4], (cfg.d_model, n), 0, dtype),
+        "w_C": dense_init(ks[5], (cfg.d_model, n), 0, dtype),
+        "w_dt": dense_init(ks[6], (cfg.d_model, h), 0, dtype),
+        "conv_x": (jax.random.normal(ks[7], (cfg.conv_width, di))
+                   * 0.1).astype(dtype),
+        "conv_xb": jnp.zeros((di,), dtype),
+        "conv_B": (jax.random.normal(jax.random.fold_in(ks[7], 1),
+                                     (cfg.conv_width, n)) * 0.1).astype(dtype),
+        "conv_Bb": jnp.zeros((n,), dtype),
+        "conv_C": (jax.random.normal(jax.random.fold_in(ks[7], 2),
+                                     (cfg.conv_width, n)) * 0.1).astype(dtype),
+        "conv_Cb": jnp.zeros((n,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(dt)).astype(jnp.float32),   # softplus^-1
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[3], (di, cfg.d_model), 0, dtype),
+    }
+
+
+MAMBA2_AXES = {
+    "w_z": ("embed", "inner"),
+    "w_x": ("embed", "inner"),
+    "w_B": ("embed", None),
+    "w_C": ("embed", None),
+    "w_dt": ("embed", None),
+    "conv_x": (None, "inner"),
+    "conv_xb": ("inner",),
+    "conv_B": (None, None),
+    "conv_Bb": (None,),
+    "conv_C": (None, None),
+    "conv_Cb": (None,),
+    "dt_bias": (None,),
+    "a_log": (None,),
+    "d_skip": (None,),
+    "norm_scale": ("inner",),
+    "out_proj": ("inner", "embed"),
+}
+
+
+def _causal_conv(xbc, w, b, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d.  xbc: (B, S, C); state: (B, W-1, C) or None.
+    Returns (out, new_state)."""
+    bsz, s, c = xbc.shape
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((bsz, width - 1, c), xbc.dtype)
+    padded = jnp.concatenate([state, xbc], axis=1)           # (B, S+W-1, C)
+    out = sum(padded[:, i:i + s] * w[i][None, None, :] for i in range(width))
+    new_state = padded[:, -(width - 1):] if width > 1 else state
+    return jax.nn.silu(out + b[None, None, :]), new_state
+
+
+def _rms(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            * (1 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def _ssd_chunked(xh, dt, a, B, C, cfg: Mamba2Config,
+                 init_state: Optional[jnp.ndarray] = None):
+    """Chunked SSD.  xh: (Bz, S, H, P); dt: (Bz, S, H); a: (H,) (negative);
+    B, C: (Bz, S, N).  Returns (y (Bz,S,H,P), final_state (Bz,H,P,N))."""
+    bsz, s, h, p = xh.shape
+    n = B.shape[-1]
+    L = min(cfg.chunk, s)
+    assert s % L == 0, f"seq {s} not divisible by chunk {L}"
+    nc = s // L
+
+    # per-step log decay: log a_t = dt_t * a  (a < 0)
+    loga = dt * a[None, None, :]                              # (Bz, S, H)
+    xc = xh.reshape(bsz, nc, L, h, p)
+    dtc = dt.reshape(bsz, nc, L, h)
+    logac = loga.reshape(bsz, nc, L, h)
+    Bc = B.reshape(bsz, nc, L, n)
+    Cc = C.reshape(bsz, nc, L, n)
+
+    cum = jnp.cumsum(logac, axis=2)                           # (Bz,nc,L,H)
+    total = cum[:, :, -1]                                     # (Bz,nc,H)
+
+    # intra-chunk: M[t,s] = (C_t . B_s) exp(cum_t - cum_s) 1[s<=t]
+    # The (Bz,nc,L,L,H) mask tensor is the working-set hog; it is sharded
+    # over H ("inner" heads on the model axis) and kept in the compute
+    # dtype (bf16 in training) -- decays are computed in fp32 first.
+    cdtype = xh.dtype
+    cb = jnp.einsum("bcln,bcmn->bclm", Cc.astype(cdtype), Bc.astype(cdtype))
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (Bz,nc,L,L,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    m = jnp.where(tri[None, None, :, :, None],
+                  jnp.exp(decay).astype(cdtype), 0)
+    m = m * cb[..., None]                                     # (Bz,nc,L,L,H)
+    xdt = (xc * dtc[..., None].astype(cdtype))                # (Bz,nc,L,H,P)
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", m, xdt)
+
+    # chunk states: S_c = sum_s exp(total - cum_s) dt_s B_s x_s^T
+    w = jnp.exp(total[:, :, None, :] - cum)                   # (Bz,nc,L,H)
+    sc = jnp.einsum("bclh,bcln,bclhp->bchpn", w * dtc, Bc, xc)
+
+    # inter-chunk recurrence over nc chunks
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        sc_k, total_k = inp                                   # (Bz,H,P,N),(Bz,H)
+        out_state = state                                     # state BEFORE chunk
+        new = state * jnp.exp(total_k)[:, :, None, None] + sc_k
+        return new, out_state
+
+    scs = jnp.moveaxis(sc, 1, 0)                              # (nc,Bz,H,P,N)
+    totals = jnp.moveaxis(total, 1, 0)                        # (nc,Bz,H)
+    final, prev_states = jax.lax.scan(step, init_state.astype(jnp.float32),
+                                      (scs.astype(jnp.float32), totals))
+    prev = jnp.moveaxis(prev_states, 0, 1)                    # (Bz,nc,H,P,N)
+
+    # inter-chunk output: y_t += C_t . (exp(cum_t) * S_prev)
+    y_inter = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc.astype(cdtype),
+                         prev.astype(cdtype), jnp.exp(cum).astype(cdtype))
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, final
+
+
+def mamba2_fwd(p: Params, x: jnp.ndarray, cfg: Mamba2Config,
+               rules: ShardingRules, make_cache: bool = False):
+    """Full-sequence Mamba2 block.  x: (B, S, D).  Cache: conv states +
+    SSM state for decode."""
+    bsz, s, d = x.shape
+    h, pd, n = cfg.n_heads, cfg.head_dim, cfg.d_state
+    z = rules.shard(x @ p["w_z"], ("batch", None, "inner"))
+    xr = rules.shard(x @ p["w_x"], ("batch", None, "inner"))
+    Br = x @ p["w_B"]
+    Cr = x @ p["w_C"]
+    dtr = x @ p["w_dt"]
+    xin, conv_x = _causal_conv(xr, p["conv_x"], p["conv_xb"])
+    B, conv_B = _causal_conv(Br, p["conv_B"], p["conv_Bb"])
+    C, conv_C = _causal_conv(Cr, p["conv_C"], p["conv_Cb"])
+    conv_state = {"x": conv_x, "B": conv_B, "C": conv_C}
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"][None, None])
+    a = -jnp.exp(p["a_log"])
+    xh = xin.reshape(bsz, s, h, pd)
+    # head (tensor) parallelism: H over the model axis keeps the SSD
+    # intra-chunk tensor local and makes out_proj row-parallel
+    from .perf import FLAGS
+    if FLAGS.get("mamba_head_constraints", True):
+        xh = rules.shard(xh, ("batch", None, "heads_inner", None))
+        dt = rules.shard(dt, ("batch", None, "heads_inner"))
+    y, state = _ssd_chunked(xh, dt, a, B.astype(jnp.float32),
+                            C.astype(jnp.float32), cfg)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, cfg.d_inner).astype(x.dtype)
+    y = _rms(y * jax.nn.silu(z), p["norm_scale"])
+    out = y @ p["out_proj"]
+    out = rules.shard(out, ("batch", None, "embed"))
+    cache = ({"conv": conv_state, "ssm": state} if make_cache else None)
+    return out, cache
+
+
+def mamba2_decode(p: Params, x: jnp.ndarray, cache, cfg: Mamba2Config,
+                  rules: ShardingRules):
+    """One-token decode.  x: (B, 1, D); cache {conv {x,B,C}, ssm
+    (B,H,P,N)}."""
+    bsz = x.shape[0]
+    h, pd, n = cfg.n_heads, cfg.head_dim, cfg.d_state
+    z = x @ p["w_z"]
+    xr = x @ p["w_x"]
+    dtr = x @ p["w_dt"]
+    xin, conv_x = _causal_conv(xr, p["conv_x"], p["conv_xb"],
+                               state=cache["conv"]["x"])
+    B, conv_B = _causal_conv(x @ p["w_B"], p["conv_B"], p["conv_Bb"],
+                             state=cache["conv"]["B"])
+    C, conv_C = _causal_conv(x @ p["w_C"], p["conv_C"], p["conv_Cb"],
+                             state=cache["conv"]["C"])
+    conv_state = {"x": conv_x, "B": conv_B, "C": conv_C}
+    B = B.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"][None, None])
+    a = -jnp.exp(p["a_log"])
+    xh = xin.reshape(bsz, 1, h, pd).astype(jnp.float32)
+
+    decay = jnp.exp(dt[:, 0] * a[None, :])                    # (B, H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], B[:, 0], xh[:, 0])
+    state = cache["ssm"] * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", C[:, 0], state)[:, None]   # (B,1,H,P)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, 1, cfg.d_inner).astype(x.dtype)
+    y = _rms(y * jax.nn.silu(z), p["norm_scale"])
+    return y @ p["out_proj"], {"conv": conv_state, "ssm": state}

@@ -1,0 +1,189 @@
+"""Mixture-of-Experts FFN (deepseek-moe-16b, moonshot-v1-16b-a3b).
+
+Fine-grained MoE: ``n_experts`` routed experts with top-``k`` softmax
+routing, optional always-on shared experts (DeepSeek-MoE's 2 shared), and a
+load-balance auxiliary loss.
+
+Dispatch is **gather/scatter based** (dropless-with-capacity), not the
+classic one-hot-matmul dispatch: the (T, E, C) einsum dispatch costs
+O(T^2 k d) FLOPs (C ~ Tk/E), which at 1M tokens would dwarf the expert
+compute and wreck the MODEL_FLOPS/HLO_FLOPs roofline ratio.  The gather
+formulation keeps HLO FLOPs at the *active* compute 6 T k d_ff d and turns
+dispatch into memory ops:
+
+    pos_in_expert = cumsum(one-hot assignment) per expert  (O(T E) adds)
+    buffer[e, c] <- token t  (scatter, overflow slots dropped)
+    expert FFN on (E, C, d) via batched einsum                (MXU)
+    out[t] += gate * result[e, c]                            (scatter-add)
+
+Experts are sharded over the ``model`` ("expert") mesh axis -- expert
+parallelism.  Under GSPMD the token gather across the data axis lowers to
+an all-gather (baseline); the hillclimbed shard_map all-to-all variant
+lives in the perf notes (EXPERIMENTS.md SSPerf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ShardingRules, dense_init
+from .ffn import FFNConfig, ffn_fwd, init_ffn
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_expert: int                   # per-expert FFN hidden size (1408)
+    n_experts: int = 64
+    top_k: int = 6
+    n_shared: int = 0               # deepseek: 2 always-on shared experts
+    capacity_factor: float = 1.25
+    aux_coef: float = 0.01
+    activation: str = "silu"
+
+    @property
+    def shared_cfg(self) -> Optional[FFNConfig]:
+        if self.n_shared == 0:
+            return None
+        return FFNConfig(self.d_model, self.n_shared * self.d_expert,
+                         self.activation, gated=True)
+
+
+def init_moe(key, cfg: MoEConfig, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_expert
+    std = 1.0 / (d ** 0.5)
+    p = {
+        "router": dense_init(ks[0], (d, e), 0, jnp.float32),
+        "w_gate": (jax.random.truncated_normal(ks[1], -2, 2, (e, d, f))
+                   * std).astype(dtype),
+        "w_up": (jax.random.truncated_normal(ks[2], -2, 2, (e, d, f))
+                 * std).astype(dtype),
+        "w_down": (jax.random.truncated_normal(ks[3], -2, 2, (e, f, d))
+                   * (1.0 / f ** 0.5)).astype(dtype),
+    }
+    if cfg.n_shared:
+        p["shared"] = init_ffn(ks[4], cfg.shared_cfg, dtype)
+    return p
+
+
+MOE_AXES = {
+    "router": ("embed", None),
+    "w_gate": ("expert", "embed", None),
+    "w_up": ("expert", "embed", None),
+    "w_down": ("expert", None, "embed"),
+    "shared": {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+               "w_down": ("mlp", "embed")},
+}
+
+
+def _act(x, name):
+    return jax.nn.silu(x) if name == "silu" else jax.nn.gelu(x)
+
+
+def _rank_in_expert(flat_e: jnp.ndarray, e: int) -> jnp.ndarray:
+    """Rank of each assignment within its expert (sort-based; the one-hot
+    cumsum baseline costs O((Tk)^2 E)-class in XLA's reduce-window model,
+    measured as a 100x useful-FLOPs inflation at 1M tokens -- SSPerf A1)."""
+    from .perf import FLAGS
+    if FLAGS.get("moe_onehot_dispatch"):
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - 1
+        return jnp.take_along_axis(pos, flat_e[:, None], 1)[:, 0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    seg_start = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                 jnp.cumsum(counts)[:-1]])
+    rank_sorted = (jnp.arange(flat_e.shape[0], dtype=jnp.int32)
+                   - seg_start[sorted_e])
+    return jnp.zeros_like(flat_e).at[order].set(rank_sorted)
+
+
+def moe_fwd(p: Params, x: jnp.ndarray, cfg: MoEConfig, rules: ShardingRules
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (out, aux_loss).  x: (B, S, D).
+
+    **Locality-chunked dispatch** (SSPerf A3): tokens are grouped into
+    ``g`` chunks aligned with the data mesh axis; every chunk builds its
+    own (E, C/g) capacity buffers from its *local* tokens, so the
+    token gather and the combine scatter never cross data shards -- the
+    GSPMD-expressible equivalent of expert-parallel all-to-all.  The only
+    cross-shard traffic left is the model-axis psum of the k partial
+    expert outputs per token (which TP needs anyway).  Compared to the
+    global (E, C) formulation this removed a ~1 TB/dev all-gather of the
+    token stream (EXPERIMENTS.md SSPerf A2->A3)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    # dispatch-chunk count: the data-axis size (1 without a mesh);
+    # tiny decode batches keep g=1 so capacity floors stay exact
+    g = rules._axis_size(rules.rules.get("batch")) if rules.mesh else 1
+    if t % g or (t // g) < 256:
+        g = 1
+    tc = t // g
+    cap = max(int(cfg.capacity_factor * tc * k / e + 1), min(tc, 64))
+    xt = x.reshape(t, d)
+    xg = xt.reshape(g, tc, d)
+    xg = rules.shard(xg, ("batch", None, None))
+
+    logits = xg.astype(jnp.float32) @ p["router"]            # (g, Tc, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (g, Tc, k)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e density_e * mean-prob_e
+    density = jnp.zeros((e,), jnp.float32).at[
+        expert_idx.reshape(-1)].add(1.0 / (t * k))
+    aux = cfg.aux_coef * e * jnp.sum(
+        density * probs.reshape(t, e).mean(0))
+
+    def dispatch_chunk(xc, eidx, gates):
+        """One chunk: local buffers (E, C, D) -> expert FFN partials."""
+        flat_e = eidx.reshape(-1)                            # (Tc*k,)
+        pos_in_e = _rank_in_expert(flat_e, e)
+        slot = flat_e * cap + pos_in_e
+        slot = jnp.where(pos_in_e < cap, slot, e * cap)      # overflow
+        token_of = jnp.arange(tc, dtype=jnp.int32).repeat(k)
+        buf_tok = jnp.full((e * cap + 1,), 0, jnp.int32).at[slot].set(
+            token_of, mode="drop")[:-1].reshape(e, cap)
+        buf_used = jnp.zeros((e * cap + 1,), jnp.bool_).at[slot].set(
+            True, mode="drop")[:-1].reshape(e, cap)
+        xd = jnp.take(xc, buf_tok, axis=0) \
+            * buf_used[..., None].astype(xc.dtype)           # (E, C, D)
+        slot_gate = jnp.zeros((e * cap + 1,), jnp.float32).at[slot].set(
+            gates.reshape(-1), mode="drop")[:-1].reshape(e, cap)
+        return xd, buf_tok, slot_gate
+
+    xd, buf_tok, slot_gate = jax.vmap(dispatch_chunk)(xg, expert_idx,
+                                                      gate_vals)
+    xd = rules.shard(xd, ("batch", "expert", None, None))    # (g,E,C,D)
+
+    # batched expert FFN -- fully local: g over data, E over model
+    h = _act(jnp.einsum("gecd,edf->gecf", xd, p["w_gate"]), cfg.activation)
+    h = h * jnp.einsum("gecd,edf->gecf", xd, p["w_up"])
+    h = rules.shard(h, ("batch", "expert", None, None))
+    yd = jnp.einsum("gecf,efd->gecd", h, p["w_down"])        # (g,E,C,D)
+
+    # combine: per-chunk scatter-add (local); GSPMD psums the k expert
+    # partials over the model axis
+    weighted = yd * slot_gate[..., None].astype(yd.dtype)
+
+    def combine_chunk(w, toks):
+        return jnp.zeros((tc, d), w.dtype).at[toks.reshape(-1)].add(
+            w.reshape(e * cap, d))
+
+    out = jax.vmap(combine_chunk)(weighted, buf_tok)         # (g, Tc, D)
+    out = rules.shard(out, ("batch", None, None))
+    out = out.reshape(t, d)
+
+    if cfg.n_shared:
+        out = out + ffn_fwd(p["shared"], xt[None], cfg.shared_cfg,
+                            rules)[0]
+    return out.reshape(b, s, d).astype(x.dtype), aux

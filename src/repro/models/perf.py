@@ -1,0 +1,24 @@
+"""Perf-variant flags for the hillclimb loop (EXPERIMENTS.md SSPerf).
+
+Read at trace time by the model code; mutated by benchmarks/perf_probe.py.
+Defaults are the shipping configuration (post-hillclimb)."""
+
+FLAGS = {
+    # mLSTM: chunked query processing with static causal block skipping
+    # (replaces the (B,H,S,S) gate tensor + seq_q resharding constraint).
+    # Baseline (paper-faithful parallel form) = False; flipped by the
+    # hillclimb after measurement (EXPERIMENTS.md SSPerf).
+    "mlstm_chunked": False,
+    # MoE: baseline one-hot-cumsum dispatch (True) vs sort-based ranking
+    # (False, hillclimbed default) -- see SSPerf iteration A1
+    "moe_onehot_dispatch": False,
+    # MLA: query-row sharded attention (hillclimb B1, 9x) vs seq_kv
+    # sharding (baseline; GSPMD gathers the sharded score blocks)
+    "mla_seq_parallel": True,
+    # mamba2: explicit heads_inner constraints on xh/dt (baseline True);
+    # False lets GSPMD propagate from the in_proj column sharding
+    "mamba_head_constraints": True,
+    # save fwd collective results across remat instead of recomputing
+    # them in the backward pass (hillclimb C)
+    "remat_save_collectives": False,
+}

@@ -1,0 +1,307 @@
+"""xLSTM blocks (xlstm-350m): mLSTM (matrix memory, parallelisable) and
+sLSTM (scalar memory, sequential recurrence).
+
+* mLSTM uses the *stabilised parallel form* (xLSTM paper App. A): with
+  log-forget gates f and log-input gates i, the attention-like weight is
+
+      D[t, s] = exp( (F_t - F_s) + i_s - m_t ),   F_t = sum_{r<=t} log f_r
+
+  with a per-row max-stabiliser m_t; output = (D @ V) / max(|n|, 1).  This
+  is a quadratic masked matmul, same compute class as attention -- MXU
+  friendly.  Decode keeps the (H, P, P) matrix state recurrently.
+
+* sLSTM is inherently sequential (the paper's point: true recurrence with
+  memory mixing cannot be parallelised) -- a ``lax.scan`` over time with a
+  block-diagonal (per-head) recurrent matrix.  Documented as the
+  latency-bound layer in the roofline notes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ShardingRules, dense_init
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int = 4
+    proj_factor: float = 2.0        # mLSTM up-projection factor
+    conv_width: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.proj_factor * self.d_model)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_inner % self.n_heads == 0
+        return self.d_inner // self.n_heads
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: XLSTMConfig, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 8)
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.n_heads
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * di), 0, dtype),      # [x, z] branch
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, di))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": dense_init(ks[2], (di, di), 0, dtype),
+        "wk": dense_init(ks[3], (di, di), 0, dtype),
+        "wv": dense_init(ks[4], (di, di), 0, dtype),
+        "w_if": dense_init(ks[5], (di, 2 * h), 0, jnp.float32),  # i, f gates
+        "b_if": jnp.concatenate([jnp.zeros((h,)),
+                                 3.0 * jnp.ones((h,))]).astype(jnp.float32),
+        "norm_scale": jnp.zeros((di,), dtype),
+        "w_down": dense_init(ks[6], (di, d), 0, dtype),
+    }
+
+
+MLSTM_AXES = {
+    # wq/wk/wv are square (di, di): row-parallel (contraction over the
+    # sharded inner dim -> psum) -- both dims on "model" would be invalid
+    "w_up": ("embed", "inner"), "conv_w": (None, "inner"),
+    "conv_b": ("inner",), "wq": ("inner", None), "wk": ("inner", None),
+    "wv": ("inner", None), "w_if": ("inner", None), "b_if": (None,),
+    "norm_scale": ("inner",), "w_down": ("inner", "embed"),
+}
+
+
+def _causal_conv(x, w, b, state=None):
+    bsz, s, c = x.shape
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((bsz, width - 1, c), x.dtype)
+    padded = jnp.concatenate([state, x], axis=1)
+    out = sum(padded[:, i:i + s] * w[i][None, None, :] for i in range(width))
+    return jax.nn.silu(out + b[None, None, :]), padded[:, -(width - 1):]
+
+
+def _multihead_rms(x, scale, nh, eps=1e-6):
+    """Per-head RMS norm on (B, S, di) viewed as (B, S, H, P)."""
+    b, s, di = x.shape
+    xh = x.reshape(b, s, nh, di // nh).astype(jnp.float32)
+    var = jnp.mean(jnp.square(xh), -1, keepdims=True)
+    xh = (xh * jax.lax.rsqrt(var + eps)).reshape(b, s, di)
+    return (xh * (1 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def mlstm_fwd(p: Params, x: jnp.ndarray, cfg: XLSTMConfig,
+              rules: ShardingRules, make_cache: bool = False):
+    """Parallel (stabilised) mLSTM.  x: (B, S, D)."""
+    bsz, s, d = x.shape
+    h, pd, di = cfg.n_heads, cfg.head_dim, cfg.d_inner
+    xz = x @ p["w_up"]
+    xz = rules.shard(xz, ("batch", None, "inner"))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"])
+    q = (xc @ p["wq"]).reshape(bsz, s, h, pd).swapaxes(1, 2)   # (B,H,S,P)
+    k = (xc @ p["wk"]).reshape(bsz, s, h, pd).swapaxes(1, 2) / math.sqrt(pd)
+    v = (xi @ p["wv"]).reshape(bsz, s, h, pd).swapaxes(1, 2)
+
+    gates = xc.astype(jnp.float32) @ p["w_if"] + p["b_if"]     # (B,S,2H)
+    ig, fg = jnp.split(gates, 2, axis=-1)                      # (B,S,H)
+    logf = jax.nn.log_sigmoid(fg).swapaxes(1, 2)               # (B,H,S)
+    logi = ig.swapaxes(1, 2)                                   # (B,H,S)
+    F = jnp.cumsum(logf, axis=-1)                              # (B,H,S)
+
+    from .perf import FLAGS
+    if FLAGS.get("mlstm_chunked") and s > 1024 and s % 1024 == 0:
+        # hillclimbed variant (EXPERIMENTS.md SSPerf): process query
+        # chunks with static causal column skipping.  Exact: every s <= t
+        # of a chunk's rows lies inside the [0, q1) slice.  Removes the
+        # (B,H,S,S) tensor AND its seq_q resharding (the baseline's
+        # collective hog).
+        ys = []
+        qc = 1024
+        for q0 in range(0, s, qc):
+            q1 = q0 + qc
+            logD = (F[:, :, q0:q1, None] - F[:, :, None, :q1]
+                    + logi[:, :, None, :q1])
+            tri = (jnp.arange(q1)[None, :]
+                   <= (q0 + jnp.arange(qc))[:, None])
+            logD = jnp.where(tri[None, None], logD, -jnp.inf)
+            mrow = jnp.maximum(jnp.max(logD, axis=-1, keepdims=True), 0.0)
+            D = jnp.exp(logD - mrow)
+            sc = jnp.einsum("bhtp,bhsp->bhts", q[:, :, q0:q1],
+                            k[:, :, :q1]).astype(jnp.float32)
+            wts = sc * D
+            num = jnp.einsum("bhts,bhsp->bhtp", wts.astype(q.dtype),
+                             v[:, :, :q1])
+            den = jnp.maximum(jnp.abs(jnp.sum(wts, -1, keepdims=True)),
+                              jnp.exp(-mrow)[..., 0:1])
+            ys.append((num.astype(jnp.float32) / den).astype(x.dtype))
+        yh = jnp.concatenate(ys, axis=2)                       # (B,H,S,P)
+    else:
+        # paper-faithful stabilised parallel form (baseline).
+        # The (B, H, S, S) gate matrix is the working-set hog; with only 4
+        # heads it is sharded over the *query* sequence axis instead
+        # (sequence parallelism on the model axis).
+        logD = (F[:, :, :, None] - F[:, :, None, :] + logi[:, :, None, :])
+        logD = rules.shard(logD, ("batch", None, "seq_q", None))
+        tri = jnp.tril(jnp.ones((s, s), bool))
+        logD = jnp.where(tri[None, None], logD, -jnp.inf)
+        mrow = jnp.max(logD, axis=-1, keepdims=True)           # (B,H,S,1)
+        mrow = jnp.maximum(mrow, 0.0)                          # n >= 1 guard
+        D = jnp.exp(logD - mrow).astype(q.dtype)               # (B,H,S,S)
+
+        scores = jnp.einsum("bhtp,bhsp->bhts", q, k).astype(jnp.float32)
+        wts = scores * D.astype(jnp.float32)                   # (B,H,S,S)
+        num = jnp.einsum("bhts,bhsp->bhtp", wts.astype(q.dtype), v)
+        den = jnp.maximum(jnp.abs(jnp.sum(wts, -1, keepdims=True)),
+                          jnp.exp(-mrow)[..., 0:1])            # >= exp(-m)
+        yh = (num.astype(jnp.float32) / den).astype(x.dtype)   # (B,H,S,P)
+
+    y = yh.swapaxes(1, 2).reshape(bsz, s, di)
+    y = _multihead_rms(y, p["norm_scale"], h)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_down"]
+    out = rules.shard(out, ("batch", None, "embed"))
+    cache = None
+    if make_cache:
+        # recurrent state: C (B,H,P,P), n (B,H,P), m (B,H)
+        cache = {"conv": conv_state,
+                 "C": jnp.zeros((bsz, h, pd, pd), jnp.float32),
+                 "n": jnp.zeros((bsz, h, pd), jnp.float32),
+                 "m": jnp.full((bsz, h), -1e30, jnp.float32)}
+        # note: prefill-to-decode state handoff recomputes the final state
+        # recurrently in serve paths; the parallel form here is train-only.
+    return out, cache
+
+
+def mlstm_decode(p: Params, x: jnp.ndarray, cache, cfg: XLSTMConfig,
+                 rules: ShardingRules):
+    """O(1) recurrent mLSTM step (xLSTM eq. 19-27)."""
+    bsz = x.shape[0]
+    h, pd = cfg.n_heads, cfg.head_dim
+    xz = x @ p["w_up"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"],
+                                  state=cache["conv"])
+    q = (xc @ p["wq"]).reshape(bsz, h, pd).astype(jnp.float32)
+    k = ((xc @ p["wk"]).reshape(bsz, h, pd) / math.sqrt(pd)).astype(jnp.float32)
+    v = (xi @ p["wv"]).reshape(bsz, h, pd).astype(jnp.float32)
+    gates = xc[:, 0].astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    ig, fg = jnp.split(gates, 2, axis=-1)                      # (B,H)
+    logf = jax.nn.log_sigmoid(fg)
+
+    m_new = jnp.maximum(logf + cache["m"], ig)                 # (B,H)
+    fw = jnp.exp(logf + cache["m"] - m_new)[..., None]
+    iw = jnp.exp(ig - m_new)[..., None]
+    C = cache["C"] * fw[..., None] + iw[..., None] * v[..., :, None] * k[..., None, :]
+    n = cache["n"] * fw + iw * k
+    num = jnp.einsum("bhpq,bhq->bhp", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, q)),
+                      jnp.exp(-m_new))[..., None]
+    yh = (num / den).reshape(bsz, 1, cfg.d_inner).astype(x.dtype)
+    y = _multihead_rms(yh, p["norm_scale"], h)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_down"], {"conv": conv_state, "C": C, "n": n, "m": m_new}
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def init_slstm(key, cfg: XLSTMConfig, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 4)
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    # 4 gates (i, f, z, o), each d -> d input proj + per-head recurrent
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), 0, dtype),
+        "r_heads": (jax.random.normal(ks[1], (4, h, hd, hd))
+                    / math.sqrt(hd)).astype(jnp.float32),
+        "bias": jnp.concatenate([jnp.zeros((d,)), 3.0 * jnp.ones((d,)),
+                                 jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "norm_scale": jnp.zeros((d,), dtype),
+        # post-recurrence gated FFN (proj factor 4/3, GeLU)
+        "w_ffn_up": dense_init(ks[2], (d, 2 * int(4 * d / 3)), 0, dtype),
+        "w_ffn_down": dense_init(ks[3], (int(4 * d / 3), d), 0, dtype),
+    }
+
+
+SLSTM_AXES = {
+    "w_in": ("embed", "inner"), "r_heads": (None, None, None, None),
+    "bias": (None,), "norm_scale": (None,),
+    "w_ffn_up": ("embed", "mlp"), "w_ffn_down": ("mlp", "embed"),
+}
+
+
+def _slstm_scan(gates_seq, r_heads, bias, h, hd, state):
+    """Sequential sLSTM recurrence.  gates_seq: (S, B, 4D); state: dict of
+    (B, D) [c, n, m, y]."""
+
+    def step(carry, g_t):
+        c, n, m, y = carry
+        bsz = y.shape[0]
+        yh = y.reshape(bsz, h, hd)
+        # recurrent contribution per gate from the block-diagonal R
+        rec = jnp.einsum("ghpq,bhq->gbhp", r_heads, yh).reshape(4, bsz, h * hd)
+        z_in = g_t.astype(jnp.float32) + bias[None] \
+            + jnp.concatenate([rec[0], rec[1], rec[2], rec[3]], axis=-1)
+        d = h * hd
+        ig, fg, zg, og = (z_in[:, :d], z_in[:, d:2 * d],
+                          z_in[:, 2 * d:3 * d], z_in[:, 3 * d:])
+        logf = jax.nn.log_sigmoid(fg)
+        m_new = jnp.maximum(logf + m, ig)
+        i_st = jnp.exp(ig - m_new)
+        f_st = jnp.exp(logf + m - m_new)
+        c_new = f_st * c + i_st * jnp.tanh(zg)
+        n_new = f_st * n + i_st
+        y_new = jax.nn.sigmoid(og) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, y_new), y_new
+
+    (c, n, m, y), ys = jax.lax.scan(
+        step, (state["c"], state["n"], state["m"], state["y"]), gates_seq)
+    return ys, {"c": c, "n": n, "m": m, "y": y}
+
+
+def _slstm_zero_state(bsz, d):
+    return {"c": jnp.zeros((bsz, d), jnp.float32),
+            "n": jnp.zeros((bsz, d), jnp.float32),
+            "m": jnp.full((bsz, d), -1e30, jnp.float32),
+            "y": jnp.zeros((bsz, d), jnp.float32)}
+
+
+def slstm_fwd(p: Params, x: jnp.ndarray, cfg: XLSTMConfig,
+              rules: ShardingRules, make_cache: bool = False):
+    bsz, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    gates = (x @ p["w_in"]).swapaxes(0, 1)                     # (S, B, 4D)
+    ys, state = _slstm_scan(gates, p["r_heads"], p["bias"], h, hd,
+                            _slstm_zero_state(bsz, d))
+    y = ys.swapaxes(0, 1).astype(x.dtype)                      # (B, S, D)
+    y = _multihead_rms(y, p["norm_scale"], h)
+    # gated FFN (GeLU, pf 4/3)
+    u, g = jnp.split(y @ p["w_ffn_up"], 2, axis=-1)
+    out = (jax.nn.gelu(u) * g) @ p["w_ffn_down"]
+    out = rules.shard(out, ("batch", None, "embed"))
+    return out, (state if make_cache else None)
+
+
+def slstm_decode(p: Params, x: jnp.ndarray, cache, cfg: XLSTMConfig,
+                 rules: ShardingRules):
+    bsz, _, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    gates = (x @ p["w_in"]).swapaxes(0, 1)                     # (1, B, 4D)
+    ys, state = _slstm_scan(gates, p["r_heads"], p["bias"], h, hd, cache)
+    y = ys.swapaxes(0, 1).astype(x.dtype)
+    y = _multihead_rms(y, p["norm_scale"], h)
+    u, g = jnp.split(y @ p["w_ffn_up"], 2, axis=-1)
+    return (jax.nn.gelu(u) * g) @ p["w_ffn_down"], state

@@ -1,0 +1,98 @@
+"""AdamW in pure JAX pytrees (no optax dependency in this container).
+
+State: fp32 first/second moments (+ step counter).  With ``zero1=True`` the
+moment trees carry a ``zero1_spec`` that additionally shards them over the
+``data`` axis on the largest divisible dimension -- ZeRO-1: every data-
+parallel rank keeps 1/N of the optimizer state, at the cost of an
+all-gather of the updated params (GSPMD inserts it from the output
+sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), gn
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig,
+                 lr: Optional[jnp.ndarray] = None):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = cfg.lr if lr is None else lr
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        pp, mm, vv = upd(p, g, m, v)
+        new_p.append(pp); new_m.append(mm); new_v.append(vv)
+    return (jax.tree.unflatten(treedef, new_p),
+            {"m": jax.tree.unflatten(treedef, new_m),
+             "v": jax.tree.unflatten(treedef, new_v),
+             "step": step},
+            {"grad_norm": gn})
+
+
+def zero1_spec(param_spec, shape, data_axes=("data",), mesh=None):
+    """Extend a param PartitionSpec to shard optimizer moments over the
+    data axis on the first dimension that is (a) unsharded and (b)
+    divisible by the data-axis size (ZeRO-1).  Falls back to the param
+    spec when no dimension qualifies."""
+    from jax.sharding import PartitionSpec as P
+    if mesh is None:
+        return param_spec
+    dsize = 1
+    for a in data_axes:
+        dsize *= mesh.shape[a]
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % dsize == 0:
+            entries[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+            return P(*entries)
+    return param_spec

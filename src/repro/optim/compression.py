@@ -1,0 +1,50 @@
+"""Int8 error-feedback gradient compression (distributed-optimization trick
+for slow cross-pod links).
+
+Each gradient leaf is quantised to int8 with a per-leaf fp32 scale before
+the cross-pod reduction; the quantisation error is fed back into the next
+step's gradient (error feedback keeps SGD/Adam convergence, Karimireddy et
+al. 2019).  On a 2-pod mesh this cuts the data-parallel all-reduce volume
+over the inter-pod links by 4x (bf16 -> int8); see EXPERIMENTS.md SSPerf.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantisation: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def make_error_feedback_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def ef_compress_update(grads, ef_state):
+    """Apply error feedback then compress: returns (quantised tree of
+    (q, scale) pairs, new ef state).  The caller reduces the quantised
+    values across pods and decompresses."""
+    corrected = jax.tree.map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, ef_state)
+
+    def comp(g):
+        q, s = compress_int8(g)
+        err = g - decompress_int8(q, s)
+        return (q, s), err
+
+    flat, treedef = jax.tree.flatten(corrected)
+    qs, errs = zip(*(comp(g) for g in flat)) if flat else ((), ())
+    return (jax.tree.unflatten(treedef, list(qs)),
+            jax.tree.unflatten(treedef, list(errs)))

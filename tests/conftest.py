@@ -1,0 +1,30 @@
+"""Test harness config.
+
+8 host platform devices (NOT the dry-run's 512 -- that flag stays local to
+repro.launch.dryrun): the distributed/sharding tests need a real multi-
+device mesh, and 8 keeps single-device smoke tests fast.  Must be set
+before the first jax import in the test process.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def host_mesh():
+    import jax
+    from jax.sharding import AxisType
+    return jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+@pytest.fixture(scope="session")
+def mesh82():
+    import jax
+    from jax.sharding import AxisType
+    return jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,94 @@
+"""Checkpoint substrate: roundtrip, atomic commit, elastic resharding,
+async manager."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, save_checkpoint)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (16, 8), jnp.float32),
+                   "b": jnp.zeros((8,), jnp.bfloat16)},
+        "opt": {"m": jnp.ones((16, 8)), "step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 3, tree)
+    assert latest_step(str(tmp_path)) == 3
+    got = restore_checkpoint(str(tmp_path), 3, jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    tree = _tree()
+    out = save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, tree)
+    os.remove(os.path.join(str(tmp_path), "step_00000002", "COMMIT"))
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_gc_keeps_latest(tmp_path):
+    tree = _tree()
+    for s in range(5):
+        save_checkpoint(str(tmp_path), s, tree, keep=2)
+    steps = sorted(d for d in os.listdir(str(tmp_path))
+                   if d.startswith("step_"))
+    assert len(steps) == 2 and steps[-1] == "step_00000004"
+
+
+def test_elastic_resharding(tmp_path, host_mesh, mesh82):
+    """Save under one mesh sharding, restore under a different one."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+    sh1 = NamedSharding(host_mesh, P("data", None))
+    x1 = jax.device_put(x, sh1)
+    save_checkpoint(str(tmp_path), 0, {"x": x1})
+    sh2 = NamedSharding(mesh82, P(None, "model"))
+    got = restore_checkpoint(
+        str(tmp_path), 0, {"x": jax.ShapeDtypeStruct((8, 8), jnp.float32)},
+        shardings={"x": sh2})
+    assert got["x"].sharding == sh2
+    np.testing.assert_array_equal(np.asarray(got["x"]), np.asarray(x))
+
+
+def test_manager_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = _tree()
+    mgr.save(0, tree)
+    mgr.save(1, tree)          # joins previous write first
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 1
+    step, got = mgr.restore_latest(jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree))
+    assert step == 1
+    np.testing.assert_array_equal(
+        np.asarray(got["params"]["w"]), np.asarray(tree["params"]["w"]))
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 0, {"a": jnp.zeros((2,))})
+    with pytest.raises(KeyError):
+        restore_checkpoint(str(tmp_path), 0,
+                           {"a": jax.ShapeDtypeStruct((2,), jnp.float32),
+                            "b": jax.ShapeDtypeStruct((2,), jnp.float32)})
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 0, {"a": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), 0,
+                           {"a": jax.ShapeDtypeStruct((3,), jnp.float32)})

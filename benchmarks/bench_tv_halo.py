@@ -23,10 +23,9 @@ from repro.core.regularization import dist_minimize_tv, halo_overhead, \
 
 def run(shape=(64, 48, 48), n_iters: int = 24,
         halo_depths=(1, 2, 4, 8, 12)):
-    from jax.sharding import AxisType
+    from repro.core.compat import make_mesh
     n = jax.local_device_count()
-    mesh = jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    mesh = make_mesh((1, n), ("data", "model"))
     vol = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
     want = minimize_tv(vol, hyper=0.1, n_iters=n_iters)
     rows: List[Dict] = []

@@ -47,11 +47,9 @@ def main():
         k, v = kv.split("=")
         overrides[k] = bool(int(v))
     if args.mesh:
-        import jax
-        from jax.sharding import AxisType
+        from repro.core.compat import make_mesh
         d, m = (int(v) for v in args.mesh.split(","))
-        mesh = jax.make_mesh((d, m), ("data", "model"),
-                             axis_types=(AxisType.Auto, AxisType.Auto))
+        mesh = make_mesh((d, m), ("data", "model"))
         n_chips = d * m
     else:
         mesh = make_production_mesh(multi_pod=args.multi_pod)

@@ -18,15 +18,14 @@ import jax.numpy as jnp
 
 
 def main():
-    from jax.sharding import AxisType
     from repro.core import phantoms
     from repro.core.algorithms import ossart
     from repro.core.geometry import ConeGeometry, circular_angles
     from repro.core.operator import CTOperator
     from repro.core.regularization import dist_minimize_tv
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    from repro.core.compat import make_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
     print(f"mesh: {dict(mesh.shape)} over {len(mesh.devices.flat)} devices")
 
     geo = ConeGeometry.nice(64)

@@ -1,0 +1,65 @@
+"""Multi-tenant serving demo: three tenants share a small-memory pool.
+
+Submits a mix of reconstruction jobs -- two small in-core jobs with
+different priorities and one volume too large for a device (routed through
+the paper's out-of-core streaming path) -- to the ``repro.serve``
+scheduler, then prints per-job placement, status and accuracy.
+
+    PYTHONPATH=src python examples/serve_jobs.py
+"""
+
+import numpy as np
+
+from repro.core import phantoms
+from repro.core.geometry import ConeGeometry, circular_angles
+from repro.core.splitting import MemoryModel
+from repro.serve import ReconJob, Scheduler
+
+
+def main():
+    geo = ConeGeometry.nice(16)
+    angles = circular_angles(12)
+    vol = phantoms.sphere(geo)
+    proj = phantoms.sphere_projection_analytic(geo, angles)
+
+    big_geo = ConeGeometry.nice(32)
+    big_angles = circular_angles(16)
+    big_vol = phantoms.sphere(big_geo)
+    big_proj = phantoms.sphere_projection_analytic(big_geo, big_angles)
+
+    # two simulated 220 KiB devices: a 16^3 job is resident (~84 KiB),
+    # a 32^3 job is not and must stream
+    sched = Scheduler(n_devices=2,
+                      memory=MemoryModel(device_bytes=220 * 1024,
+                                         usable_fraction=1.0))
+    jobs = {
+        "urgent-cgls": sched.submit(ReconJob(
+            "cgls", geo, angles, proj, n_iter=4, priority=5)),
+        "batch-ossart": sched.submit(ReconJob(
+            "ossart", geo, angles, proj, n_iter=3, priority=0,
+            params={"subset_size": 6})),
+        "oversized-ossart": sched.submit(ReconJob(
+            "ossart", big_geo, big_angles, big_proj, n_iter=1, priority=1,
+            params={"subset_size": 16})),
+    }
+    sched.run()
+
+    truth = {"urgent-cgls": vol, "batch-ossart": vol,
+             "oversized-ossart": big_vol}
+    for name, jid in jobs.items():
+        rec = sched.records[jid]
+        t = truth[name]
+        rel = float(np.linalg.norm(rec.result - t) / np.linalg.norm(t))
+        print(f"{name:18s} dev={rec.device} streamed={rec.streamed!s:5s} "
+              f"iters={rec.iterations_done} status={rec.status.value:9s} "
+              f"rel_err={rel:.3f}")
+    s = sched.summary()
+    print(f"\n{s['completed']} jobs, {s['steps']} interleaved steps, "
+          f"modeled makespan {s['modeled_makespan_seconds']:.2f}s "
+          f"(device busy: "
+          f"{['%.2f' % b for b in s['device_busy_seconds']]}), "
+          f"p95 latency {s['latency_p95']:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,13 +3,37 @@
 All algorithms are written against :class:`repro.core.operator.CTOperator`
 only, so they run unchanged on the plain, streaming (out-of-core) and
 distributed backends -- the paper's modularity argument.
+
+Each algorithm exists in two equivalent forms:
+
+* the monolithic entry point (``cgls(proj, geo, angles, n_iter=...)``),
+* a resumable step-wise iterator (``cgls_init`` / ``cgls_step`` /
+  ``cgls_finalize``) registered in :mod:`.stepwise`, which the serving
+  scheduler (:mod:`repro.serve`) uses to interleave, preempt and
+  checkpoint concurrent jobs.
+
+The monolithic form is a thin loop over the step-wise form, so both
+produce bit-identical results.
 """
 
 from .fdk import fdk, filter_projections
-from .sart import sart, sirt, ossart
-from .cgls import cgls
-from .fista import fista_tv
-from .asd_pocs import asd_pocs
+from .sart import (OSSARTState, ossart, ossart_finalize, ossart_init,
+                   ossart_step, sart, sirt)
+from .cgls import CGLSState, cgls, cgls_finalize, cgls_init, cgls_step
+from .fista import (FISTAState, fista_tv, fista_tv_finalize, fista_tv_init,
+                    fista_tv_step)
+from .asd_pocs import (ASDPOCSState, asd_pocs, asd_pocs_finalize,
+                       asd_pocs_init, asd_pocs_step)
+from .stepwise import (REGISTRY, StepwiseAlgorithm, checkpoint_state,
+                       get_algorithm, restore_state)
 
 __all__ = ["fdk", "filter_projections", "sart", "sirt", "ossart", "cgls",
-           "fista_tv", "asd_pocs"]
+           "fista_tv", "asd_pocs",
+           "OSSARTState", "ossart_init", "ossart_step", "ossart_finalize",
+           "CGLSState", "cgls_init", "cgls_step", "cgls_finalize",
+           "FISTAState", "fista_tv_init", "fista_tv_step",
+           "fista_tv_finalize",
+           "ASDPOCSState", "asd_pocs_init", "asd_pocs_step",
+           "asd_pocs_finalize",
+           "StepwiseAlgorithm", "REGISTRY", "get_algorithm",
+           "checkpoint_state", "restore_state"]

@@ -2,10 +2,16 @@
 TV steepest-descent minimisation (paper SS2.3's first regulariser), with the
 adaptive step-size bookkeeping of the original algorithm (simplified as in
 TIGRE's defaults).
+
+Step-wise form (``asd_pocs_init`` / ``asd_pocs_step``): the adaptive
+scalars (dtvg, dp_first, decaying lmbda) ride along in
+:class:`ASDPOCSState` so a preempted job resumes with the exact same
+step-size schedule; :func:`asd_pocs` wraps the same steps.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Optional
 
 import jax.numpy as jnp
@@ -13,7 +19,83 @@ import numpy as np
 
 from ..operator import CTOperator
 from ..regularization import minimize_tv
-from .sart import ossart
+from .sart import OSSARTState, ossart_init, ossart_step
+
+
+@dataclasses.dataclass
+class ASDPOCSState:
+    """Resumable ASD-POCS state (iterate + adaptive step-size scalars)."""
+    op: CTOperator
+    proj: jnp.ndarray
+    angles: np.ndarray
+    subset_size: int
+    lmbda: float
+    lmbda_red: float
+    tv_iters: int
+    alpha: float
+    alpha_red: float
+    r_max: float
+    x: jnp.ndarray
+    dtvg: Optional[float] = None
+    dp_first: Optional[float] = None
+    it: int = 0
+    # cached OS-SART state: the normalisation factors are deterministic, so
+    # computing them once (lazily, also after a checkpoint restore) is
+    # bit-identical to the historical re-init every outer iteration
+    data_state: Optional[OSSARTState] = None
+
+
+def asd_pocs_init(proj, geo, angles, subset_size: int = 20,
+                  lmbda: float = 1.0, lmbda_red: float = 0.99,
+                  tv_iters: int = 20, alpha: float = 0.002,
+                  alpha_red: float = 0.95, r_max: float = 0.95,
+                  op: Optional[CTOperator] = None, **_ignored) -> ASDPOCSState:
+    angles = np.asarray(angles, np.float32)
+    if op is None:
+        op = CTOperator(geo, angles, mode="plain")
+    return ASDPOCSState(op=op, proj=jnp.asarray(proj), angles=angles,
+                        subset_size=subset_size, lmbda=lmbda,
+                        lmbda_red=lmbda_red, tv_iters=tv_iters, alpha=alpha,
+                        alpha_red=alpha_red, r_max=r_max,
+                        x=jnp.zeros(geo.n_voxel, jnp.float32))
+
+
+def asd_pocs_step(st: ASDPOCSState) -> ASDPOCSState:
+    """One ASD-POCS iteration: OS-SART data sweep + adaptive TV descent."""
+    x_prev = st.x
+    if st.data_state is None:
+        st.data_state = ossart_init(st.proj, st.op.geo, st.angles,
+                                    subset_size=st.subset_size,
+                                    lmbda=st.lmbda, op=st.op, x0=st.x)
+    else:
+        st.data_state.x = st.x
+        st.data_state.lmbda = st.lmbda
+    st.data_state = ossart_step(st.data_state)
+    x = st.data_state.x
+    st.lmbda *= st.lmbda_red
+
+    dp_vec = x - x_prev
+    dp = float(jnp.linalg.norm(dp_vec.ravel()))
+    if st.dp_first is None:
+        st.dp_first = dp
+    if st.dtvg is None:
+        st.dtvg = st.alpha * dp  # initial TV step from first data update
+
+    x_before_tv = x
+    x = minimize_tv(x, hyper=st.dtvg, n_iters=st.tv_iters)
+    dg = float(jnp.linalg.norm((x - x_before_tv).ravel()))
+
+    # adaptive step (Sidky & Pan): if TV moved more than the data step,
+    # shrink the TV step size
+    if dg > st.r_max * dp and dp > 0.01 * st.dp_first:
+        st.dtvg *= st.alpha_red
+    st.x = x
+    st.it += 1
+    return st
+
+
+def asd_pocs_finalize(st: ASDPOCSState):
+    return st.x
 
 
 def asd_pocs(proj, geo, angles, n_iter: int = 10, subset_size: int = 20,
@@ -22,36 +104,11 @@ def asd_pocs(proj, geo, angles, n_iter: int = 10, subset_size: int = 20,
              alpha_red: float = 0.95, r_max: float = 0.95,
              op: Optional[CTOperator] = None,
              callback: Optional[Callable] = None):
-    angles = np.asarray(angles, np.float32)
-    if op is None:
-        op = CTOperator(geo, angles, mode="plain")
-    proj = jnp.asarray(proj)
-
-    x = jnp.zeros(geo.n_voxel, jnp.float32)
-    dtvg = None
-    dp_first = None
-
+    st = asd_pocs_init(proj, geo, angles, subset_size=subset_size,
+                       lmbda=lmbda, lmbda_red=lmbda_red, tv_iters=tv_iters,
+                       alpha=alpha, alpha_red=alpha_red, r_max=r_max, op=op)
     for it in range(n_iter):
-        x_prev = x
-        x = ossart(proj, geo, angles, n_iter=1, subset_size=subset_size,
-                   lmbda=lmbda, op=op, x0=x)
-        lmbda *= lmbda_red
-
-        dp_vec = x - x_prev
-        dp = float(jnp.linalg.norm(dp_vec.ravel()))
-        if dp_first is None:
-            dp_first = dp
-        if dtvg is None:
-            dtvg = alpha * dp  # initial TV step from first data update
-
-        x_before_tv = x
-        x = minimize_tv(x, hyper=dtvg, n_iters=tv_iters)
-        dg = float(jnp.linalg.norm((x - x_before_tv).ravel()))
-
-        # adaptive step (Sidky & Pan): if TV moved more than the data step,
-        # shrink the TV step size
-        if dg > r_max * dp and dp > 0.01 * dp_first:
-            dtvg *= alpha_red
+        st = asd_pocs_step(st)
         if callback is not None:
-            callback(it, x)
-    return x
+            callback(it, st.x)
+    return asd_pocs_finalize(st)

@@ -7,10 +7,16 @@
 
 The proximal operator is the ROF denoiser (paper SS2.3's second
 regulariser); L is estimated by power iteration on A^T A.
+
+Step-wise form (``fista_tv_init`` / ``fista_tv_step``): the momentum
+variables (x, y, t) live in a :class:`FISTAState` so the serving scheduler
+can interleave iterations across jobs; :func:`fista_tv` wraps the same
+steps.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Optional
 
 import jax.numpy as jnp
@@ -20,27 +26,58 @@ from ..operator import CTOperator
 from ..regularization import rof_denoise
 
 
-def fista_tv(proj, geo, angles, n_iter: int = 20, tv_lambda: float = 20.0,
-             tv_iters: int = 20, L: Optional[float] = None,
-             op: Optional[CTOperator] = None,
-             callback: Optional[Callable] = None):
+@dataclasses.dataclass
+class FISTAState:
+    """Resumable FISTA state (iterate, extrapolated point, momentum)."""
+    op: CTOperator
+    b: jnp.ndarray
+    L: float
+    tv_lambda: float
+    tv_iters: int
+    x: jnp.ndarray
+    y: jnp.ndarray
+    t: float = 1.0
+    it: int = 0
+
+
+def fista_tv_init(proj, geo, angles, tv_lambda: float = 20.0,
+                  tv_iters: int = 20, L: Optional[float] = None,
+                  op: Optional[CTOperator] = None, **_ignored) -> FISTAState:
     angles = np.asarray(angles, np.float32)
     if op is None:
         op = CTOperator(geo, angles, mode="plain", bp_weight="matched")
     if L is None:
         L = op.norm_squared_est(n_iter=6) * 1.05
     b = jnp.asarray(proj)
-
     x = jnp.zeros(geo.n_voxel, jnp.float32)
-    y = x
-    t = 1.0
+    return FISTAState(op=op, b=b, L=L, tv_lambda=tv_lambda,
+                      tv_iters=tv_iters, x=x, y=x)
+
+
+def fista_tv_step(st: FISTAState) -> FISTAState:
+    """One FISTA iteration: gradient step + TV prox + momentum update."""
+    grad = st.op.At(st.op.A(st.y) - st.b, weight="matched")
+    z = st.y - grad / st.L
+    x_new = rof_denoise(z, lam=st.tv_lambda * st.L, n_iters=st.tv_iters)
+    t_new = (1.0 + float(np.sqrt(1.0 + 4.0 * st.t * st.t))) / 2.0
+    st.y = x_new + ((st.t - 1.0) / t_new) * (x_new - st.x)
+    st.x, st.t = x_new, t_new
+    st.it += 1
+    return st
+
+
+def fista_tv_finalize(st: FISTAState):
+    return st.x
+
+
+def fista_tv(proj, geo, angles, n_iter: int = 20, tv_lambda: float = 20.0,
+             tv_iters: int = 20, L: Optional[float] = None,
+             op: Optional[CTOperator] = None,
+             callback: Optional[Callable] = None):
+    st = fista_tv_init(proj, geo, angles, tv_lambda=tv_lambda,
+                       tv_iters=tv_iters, L=L, op=op)
     for it in range(n_iter):
-        grad = op.At(op.A(y) - b, weight="matched")
-        z = y - grad / L
-        x_new = rof_denoise(z, lam=tv_lambda * L, n_iters=tv_iters)
-        t_new = (1.0 + float(np.sqrt(1.0 + 4.0 * t * t))) / 2.0
-        y = x_new + ((t - 1.0) / t_new) * (x_new - x)
-        x, t = x_new, t_new
+        st = fista_tv_step(st)
         if callback is not None:
-            callback(it, x)
-    return x
+            callback(it, st.x)
+    return fista_tv_finalize(st)

@@ -10,11 +10,18 @@ normalisation), computed per angle subset ``s``:
 * SIRT     : one subset = all angles.
 * SART     : one subset per angle.
 * OS-SART  : blocks of ``subset_size`` angles (paper used 200).
+
+The algorithm is expressed as a resumable step-wise iterator
+(``ossart_init`` / ``ossart_step``) so that the serving scheduler
+(:mod:`repro.serve`) can interleave iterations of competing jobs; the
+monolithic entry points below are thin wrappers over the same steps and
+produce bit-identical results.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Optional
+import dataclasses
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,29 +44,65 @@ def _norm_factors(op: CTOperator, idx: np.ndarray):
     return W, V
 
 
-def ossart(proj, geo, angles, n_iter: int = 20, subset_size: int = 20,
-           lmbda: float = 1.0, op: Optional[CTOperator] = None,
-           x0=None, callback: Optional[Callable] = None,
-           bp_weight: str = "pmatched"):
-    """OS-SART.  ``subset_size=len(angles)`` gives SIRT; ``1`` gives SART."""
+@dataclasses.dataclass
+class OSSARTState:
+    """Resumable OS-SART iteration state (one entry per outer iteration)."""
+    op: CTOperator
+    proj: jnp.ndarray
+    angles: np.ndarray
+    subsets: List[np.ndarray]
+    factors: list
+    lmbda: float
+    bp_weight: str
+    x: jnp.ndarray
+    it: int = 0
+
+
+def ossart_init(proj, geo, angles, subset_size: int = 20, lmbda: float = 1.0,
+                op: Optional[CTOperator] = None, x0=None,
+                bp_weight: str = "pmatched", **_ignored) -> OSSARTState:
+    """Build the OS-SART state: normalisation factors + initial image."""
     angles = np.asarray(angles, np.float32)
     if op is None:
         op = CTOperator(geo, angles, mode="plain")
     subsets = op.subset_indices(subset_size)
     factors = [_norm_factors(op, idx) for idx in subsets]
     x = jnp.zeros(geo.n_voxel, jnp.float32) if x0 is None else jnp.asarray(x0)
-    proj = jnp.asarray(proj)
+    return OSSARTState(op=op, proj=jnp.asarray(proj), angles=angles,
+                       subsets=subsets, factors=factors, lmbda=lmbda,
+                       bp_weight=bp_weight, x=x)
 
+
+def ossart_step(st: OSSARTState) -> OSSARTState:
+    """One outer OS-SART iteration (a full sweep over all subsets)."""
+    x = st.x
+    for idx, (W, V) in zip(st.subsets, st.factors):
+        a_sub = jnp.asarray(st.angles[idx])
+        b_sub = st.proj[jnp.asarray(idx)]
+        resid = W * (b_sub - st.op.A(x, a_sub))
+        upd = st.op.At(resid, a_sub, weight=st.bp_weight)
+        x = x + st.lmbda * V * upd
+    st.x = x
+    st.it += 1
+    return st
+
+
+def ossart_finalize(st: OSSARTState):
+    return st.x
+
+
+def ossart(proj, geo, angles, n_iter: int = 20, subset_size: int = 20,
+           lmbda: float = 1.0, op: Optional[CTOperator] = None,
+           x0=None, callback: Optional[Callable] = None,
+           bp_weight: str = "pmatched"):
+    """OS-SART.  ``subset_size=len(angles)`` gives SIRT; ``1`` gives SART."""
+    st = ossart_init(proj, geo, angles, subset_size=subset_size, lmbda=lmbda,
+                     op=op, x0=x0, bp_weight=bp_weight)
     for it in range(n_iter):
-        for idx, (W, V) in zip(subsets, factors):
-            a_sub = jnp.asarray(angles[idx])
-            b_sub = proj[jnp.asarray(idx)]
-            resid = W * (b_sub - op.A(x, a_sub))
-            upd = op.At(resid, a_sub, weight=bp_weight)
-            x = x + lmbda * V * upd
+        st = ossart_step(st)
         if callback is not None:
-            callback(it, x)
-    return x
+            callback(it, st.x)
+    return ossart_finalize(st)
 
 
 def sirt(proj, geo, angles, n_iter: int = 20, lmbda: float = 1.0, **kw):

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .compat import axis_size as compat_axis_size, shard_map
 from .geometry import ConeGeometry
 from .projector import (_joseph_xdom_one_angle, _rotate_vol_90,
                         backproject_voxel)
@@ -94,7 +95,7 @@ def dist_forward_project(mesh: Mesh, geo: ConeGeometry,
         acc, _ = jax.lax.fori_loop(0, n_model - 1, hop, (part, part))
         return acc
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(model_axis, None, None), P(data_axis)),
         out_specs=P(data_axis, None, None), check_vma=False)
@@ -121,7 +122,41 @@ def dist_backproject(mesh: Mesh, geo: ConeGeometry, weight: str = "fdk",
                                  z_start=z0, z_planes=planes)
         return jax.lax.psum(slab, data_axis)
 
-    fn = jax.shard_map(
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(data_axis, None, None), P(data_axis)),
+        out_specs=P(model_axis, None, None), check_vma=False)
+    return jax.jit(fn)
+
+
+def dist_backproject_matched(mesh: Mesh, geo: ConeGeometry,
+                             data_axis: str = "data",
+                             model_axis: str = "model"):
+    """Exact adjoint BP: per-shard vjp of the partial forward projection.
+
+    Each device computes the vjp of its angle shard's FP restricted to its
+    z slab, then partial slab updates are summed over ``data`` — linearity
+    over disjoint angle sets makes the stacked result the monolithic A^T
+    exactly, so CGLS/FISTA keep their convergence guarantees on the
+    distributed backend (same argument as the streaming matched adjoint).
+    """
+    n_model = mesh.shape[model_axis]
+    nz = geo.n_voxel[0]
+    if nz % n_model:
+        raise ValueError(f"Nz={nz} not divisible by model axis {n_model}")
+    planes = nz // n_model
+
+    def body(proj_local, angles_local):
+        z0 = jax.lax.axis_index(model_axis) * planes
+        zeros = jnp.zeros((planes,) + tuple(geo.n_voxel[1:]), jnp.float32)
+
+        def fwd(slab):
+            return _fp_local(slab, angles_local, geo, z0)
+
+        _, vjp = jax.vjp(fwd, zeros)
+        return jax.lax.psum(vjp(proj_local)[0], data_axis)
+
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(data_axis, None, None), P(data_axis)),
         out_specs=P(model_axis, None, None), check_vma=False)
@@ -131,8 +166,11 @@ def dist_backproject(mesh: Mesh, geo: ConeGeometry, weight: str = "fdk",
 def pad_angles(angles: np.ndarray, multiple: int):
     """Pad the angle set to a multiple of the data-axis size.
 
-    Padded entries repeat the last angle; callers must mask the padded
-    projections (``valid`` mask returned).
+    Padded entries repeat the last angle; callers must consume the returned
+    ``valid`` mask — drop the padded rows of a padded forward projection,
+    and zero the padded rows before a backprojection (BP is linear, so zero
+    rows add nothing to the slab sums).  ``CTOperator`` (mode="dist") does
+    both automatically for non-divisible angle counts.
     """
     n = len(angles)
     n_pad = (-n) % multiple
@@ -152,7 +190,7 @@ def halo_exchange(x: jnp.ndarray, depth: int, axis_name: str):
     communication the split TV regulariser performs every ``N_in`` inner
     iterations.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = compat_axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     top = x[-depth:]      # send up (to idx+1)
     bot = x[:depth]       # send down (to idx-1)

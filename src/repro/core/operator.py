@@ -63,11 +63,15 @@ class CTOperator:
         elif mode == "dist":
             if mesh is None:
                 raise ValueError("mode='dist' needs a mesh")
-            from .distributed import dist_backproject, dist_forward_project
+            from .distributed import (dist_backproject,
+                                      dist_backproject_matched,
+                                      dist_forward_project)
             self._a = dist_forward_project(mesh, geo)
             self._at_fdk = dist_backproject(mesh, geo, weight="fdk")
             self._at_none = dist_backproject(mesh, geo, weight="none")
             self._at_pm = dist_backproject(mesh, geo, weight="pmatched")
+            self._at_matched = dist_backproject_matched(mesh, geo)
+            self._data_axis_size = mesh.shape["data"]
         elif mode == "stream":
             n_dev = len(devices) if devices else 1
             self.plan_f = plan_forward(geo, len(self.angles_np), n_dev,
@@ -94,8 +98,16 @@ class CTOperator:
             return stream_forward(np.asarray(vol), self.geo, a, self.plan_f,
                                   devices=self.devices)
         if self.mode == "dist":
-            angles = self.angles if angles is None else angles
-            return self._a(vol, angles)
+            from .distributed import pad_angles
+            angles_np = self.angles_np if angles is None else \
+                np.asarray(angles, np.float32)
+            # shard_map needs the angle count divisible by the data axis;
+            # pad with duplicates and drop the padded projections afterwards
+            padded, valid = pad_angles(angles_np, self._data_axis_size)
+            out = self._a(vol, jnp.asarray(padded))
+            if valid.all():
+                return out
+            return out[:len(angles_np)]   # padding is always a suffix
         angles_np = self.angles_np if angles is None else np.asarray(angles)
         return self._plain_fp(angles_np)(vol, jnp.asarray(angles_np))
 
@@ -111,10 +123,24 @@ class CTOperator:
                                    np.asarray(angles), self.plan_b,
                                    weight=weight, devices=self.devices)
         if self.mode == "dist":
+            from .distributed import pad_angles
+            angles_np = np.asarray(angles, np.float32)
+            padded, valid = pad_angles(angles_np, self._data_axis_size)
+            if not valid.all():
+                # zero the padded duplicate projections: BP is linear in the
+                # projections, so zero rows contribute nothing to the sums
+                n_pad = len(padded) - len(angles_np)
+                proj = jnp.concatenate(
+                    [jnp.asarray(proj),
+                     jnp.zeros((n_pad,) + tuple(self.geo.n_detector),
+                               jnp.float32)], axis=0)
+            angles = jnp.asarray(padded)
             if weight == "fdk":
                 return self._at_fdk(proj, angles)
             if weight == "none":
                 return self._at_none(proj, angles)
+            if weight == "matched":
+                return self._at_matched(proj, angles)
             return self._at_pm(proj, angles)
         if weight == "matched":
             # exact adjoint via vjp of the jitted forward

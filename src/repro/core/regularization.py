@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .compat import shard_map
 from .distributed import halo_exchange
 
 
@@ -202,9 +203,9 @@ def dist_minimize_tv(mesh: Mesh, hyper: float, n_iters: int, n_inner: int,
 
         return jax.lax.fori_loop(0, n_outer, outer, vol_slab)
 
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=P(model_axis, None, None),
-                       out_specs=P(model_axis, None, None), check_vma=False)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=P(model_axis, None, None),
+                   out_specs=P(model_axis, None, None), check_vma=False)
     return jax.jit(fn)
 
 
@@ -264,7 +265,7 @@ def dist_rof_denoise(mesh: Mesh, lam: float, n_iters: int, n_inner: int,
                  - _div3(*p) / lam)
         return u_pad[1:1 + planes]
 
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=P(model_axis, None, None),
-                       out_specs=P(model_axis, None, None), check_vma=False)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=P(model_axis, None, None),
+                   out_specs=P(model_axis, None, None), check_vma=False)
     return jax.jit(fn)

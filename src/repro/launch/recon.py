@@ -1,14 +1,18 @@
-"""Reconstruction driver: the paper's end-to-end use case.
+"""Reconstruction driver: a thin client of the serving scheduler.
 
-Runs any TIGRE algorithm against any operator backend (plain / streaming
-out-of-core / distributed shard_map) on an analytic phantom, reporting
-error against ground truth -- the stand-in for the paper's SS3.2 coffee-bean
-(CGLS) and ichthyosaur (OS-SART) reconstructions.
+Builds a :class:`repro.serve.ReconJob` from the CLI arguments and submits
+it to a single-device :class:`repro.serve.Scheduler`; the scheduler picks
+the backend (in-core "plain" vs out-of-core "stream") from the planner's
+footprint estimate unless ``--mode`` forces one.  ``--mode dist`` bypasses
+the scheduler and runs the shard_map backend over the local device mesh.
+
+Numerics are identical to the old monolithic driver: the scheduler steps
+the same algorithm iterators the monolithic entry points wrap.
 
 Usage::
 
     PYTHONPATH=src python -m repro.launch.recon --alg cgls --n 64 \
-        --angles 96 --iters 10 --mode plain
+        --angles 96 --iters 10 --mode auto
 """
 
 from __future__ import annotations
@@ -17,41 +21,45 @@ import argparse
 import time
 
 import numpy as np
-import jax.numpy as jnp
 
 from repro.core.geometry import ConeGeometry
 from repro.core.operator import CTOperator
 from repro.core.splitting import MemoryModel
 from repro.core import algorithms as alg
 from repro.data import make_ct_dataset
+from repro.serve import ReconJob, Scheduler
+
+
+def _job_params(algname: str, n_angles: int) -> dict:
+    if algname == "ossart":
+        return {"subset_size": max(n_angles // 8, 1)}
+    return {}
 
 
 def reconstruct(algname: str = "cgls", n: int = 64, n_angles: int = 96,
-                iters: int = 10, mode: str = "plain",
+                iters: int = 10, mode: str = "auto",
                 device_bytes: int = 0, verbose: bool = True):
     geo = ConeGeometry.nice(n)
     vol, angles, proj = make_ct_dataset(geo, n_angles)
     mem = (MemoryModel(device_bytes=device_bytes)
            if device_bytes else MemoryModel())
-    op = CTOperator(geo, angles, mode=mode,
-                    bp_weight="matched" if algname in ("cgls", "fista")
-                    else "pmatched", memory=mem)
     t0 = time.time()
-    if algname == "cgls":
-        rec = alg.cgls(proj, geo, angles, n_iter=iters, op=op)
-    elif algname == "ossart":
-        rec = alg.ossart(proj, geo, angles, n_iter=iters,
-                         subset_size=max(n_angles // 8, 1), op=op)
-    elif algname == "sirt":
-        rec = alg.sirt(proj, geo, angles, n_iter=iters, op=op)
-    elif algname == "fdk":
-        rec = alg.fdk(proj, geo, angles, op=op)
-    elif algname == "fista":
-        rec = alg.fista_tv(proj, geo, angles, n_iter=iters, op=op)
-    elif algname == "asd_pocs":
-        rec = alg.asd_pocs(proj, geo, angles, n_iter=iters, op=op)
+    if mode == "dist":
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(model_axis=1)
+        op = CTOperator(geo, angles, mode="dist", mesh=mesh,
+                        bp_weight="matched" if algname in ("cgls", "fista")
+                        else "pmatched")
+        with mesh:
+            rec = _run_monolithic(algname, proj, geo, angles, iters, op)
     else:
-        raise ValueError(f"unknown algorithm {algname!r}")
+        sched = Scheduler(n_devices=1, memory=mem)
+        jid = sched.submit(ReconJob(
+            algname, geo, angles, proj, n_iter=iters,
+            params=_job_params(algname, n_angles),
+            mode=None if mode == "auto" else mode))
+        sched.run()
+        rec = sched.result(jid)
     dt = time.time() - t0
     rec = np.asarray(rec)
     rel = float(np.linalg.norm(rec - vol) / np.linalg.norm(vol))
@@ -61,16 +69,35 @@ def reconstruct(algname: str = "cgls", n: int = 64, n_angles: int = 96,
     return rec, rel
 
 
+def _run_monolithic(algname, proj, geo, angles, iters, op):
+    """Direct (non-scheduled) path for backends the scheduler doesn't own."""
+    if algname == "cgls":
+        return alg.cgls(proj, geo, angles, n_iter=iters, op=op)
+    if algname == "ossart":
+        return alg.ossart(proj, geo, angles, n_iter=iters,
+                          subset_size=max(len(np.asarray(angles)) // 8, 1),
+                          op=op)
+    if algname == "sirt":
+        return alg.sirt(proj, geo, angles, n_iter=iters, op=op)
+    if algname == "fdk":
+        return alg.fdk(proj, geo, angles, op=op)
+    if algname == "fista":
+        return alg.fista_tv(proj, geo, angles, n_iter=iters, op=op)
+    if algname == "asd_pocs":
+        return alg.asd_pocs(proj, geo, angles, n_iter=iters, op=op)
+    raise ValueError(f"unknown algorithm {algname!r}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--alg", default="cgls")
     ap.add_argument("--n", type=int, default=64)
     ap.add_argument("--angles", type=int, default=96)
     ap.add_argument("--iters", type=int, default=10)
-    ap.add_argument("--mode", default="plain",
-                    choices=("plain", "stream", "dist"))
+    ap.add_argument("--mode", default="auto",
+                    choices=("auto", "plain", "stream", "dist"))
     ap.add_argument("--device-bytes", type=int, default=0,
-                    help="streaming-mode per-device memory budget")
+                    help="per-device memory budget (streaming/placement)")
     args = ap.parse_args()
     reconstruct(args.alg, args.n, args.angles, args.iters, args.mode,
                 args.device_bytes)

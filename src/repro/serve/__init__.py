@@ -1,0 +1,41 @@
+"""``repro.serve`` — multi-tenant reconstruction job serving.
+
+The paper makes one reconstruction fit on arbitrarily small devices; this
+subsystem makes *many* reconstructions share a device pool.  A
+:class:`ReconJob` (geometry + data + algorithm + priority) is submitted to
+a :class:`Scheduler`, which
+
+* estimates the job's per-device footprint with the paper's planners
+  (``plan_forward`` / ``plan_backward``),
+* packs several small jobs per device and routes oversized jobs through
+  the out-of-core streaming executors,
+* interleaves one outer iteration per job per quantum (fair share) using
+  the step-wise algorithm iterators in
+  :mod:`repro.core.algorithms.stepwise`,
+* preempts lower-priority work for urgent arrivals, checkpointing the
+  evicted job's resumable state so it later finishes bit-identically,
+* exposes throughput / latency metrics (:class:`ServeMetrics`).
+
+Quick start::
+
+    from repro.serve import ReconJob, Scheduler
+    from repro.core.splitting import MemoryModel
+
+    sched = Scheduler(n_devices=4, memory=MemoryModel())
+    jid = sched.submit(ReconJob("cgls", geo, angles, proj, n_iter=10,
+                                priority=1))
+    sched.run()
+    image = sched.result(jid)
+"""
+
+from .job import JobRecord, JobStatus, ReconJob
+from .queue import PriorityJobQueue
+from .executor import JobExecutor, clear_operator_cache
+from .metrics import ServeMetrics, percentile
+from .scheduler import (DevicePool, DeviceSlot, JobFootprint, Scheduler,
+                        estimate_job_footprint)
+
+__all__ = ["ReconJob", "JobRecord", "JobStatus", "PriorityJobQueue",
+           "JobExecutor", "clear_operator_cache", "ServeMetrics",
+           "percentile", "DevicePool", "DeviceSlot", "JobFootprint",
+           "Scheduler", "estimate_job_footprint"]

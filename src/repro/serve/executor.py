@@ -1,0 +1,130 @@
+"""Step-wise job executor: one placed job's operator + algorithm state.
+
+The executor owns what the scheduler placed on a device: it builds the
+:class:`~repro.core.operator.CTOperator` for the backend the placement
+chose ("plain" for resident jobs packed next to other tenants, "stream"
+for jobs routed through the paper's out-of-core path), instantiates the
+algorithm's resumable state from the step-wise registry, and advances it
+one outer iteration per call.  Between any two calls the scheduler may
+checkpoint the executor (preemption) and later rebuild it from the
+checkpoint — results are bit-identical to an uninterrupted run because
+``init`` is deterministic and the checkpoint carries every recurrence
+variable.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from typing import Any, Dict, Optional, Sequence
+
+import numpy as np
+
+from ..core.algorithms.stepwise import (checkpoint_state, get_algorithm,
+                                        restore_state)
+from ..core.operator import CTOperator
+from ..core.splitting import MemoryModel
+from .job import ReconJob
+
+# Operator cache shared across jobs: tenants with the same acquisition
+# (geometry + angles + backend + weighting + budget + device) reuse one
+# CTOperator and therefore its jit-compiled kernels -- the dominant cost
+# of admitting a job.  Bounded LRU so a long-lived scheduler serving many
+# distinct geometries cannot grow without limit.
+_OP_CACHE_MAX = 32
+_op_cache: "OrderedDict[tuple, CTOperator]" = OrderedDict()
+
+
+def clear_operator_cache() -> None:
+    """Drop all cached operators (frees their compiled executables)."""
+    _op_cache.clear()
+
+
+def _get_operator(geo, angles: np.ndarray, mode: str, bp_weight: str,
+                  memory: MemoryModel,
+                  devices: Optional[Sequence]) -> CTOperator:
+    key = (geo, angles.tobytes(), mode, bp_weight,
+           memory.device_bytes, memory.usable_fraction,
+           tuple(getattr(d, "id", id(d)) for d in devices or ()))
+    op = _op_cache.get(key)
+    if op is None:
+        op = CTOperator(geo, angles, mode=mode, bp_weight=bp_weight,
+                        memory=memory, devices=devices)
+        _op_cache[key] = op
+        if len(_op_cache) > _OP_CACHE_MAX:
+            _op_cache.popitem(last=False)
+    else:
+        _op_cache.move_to_end(key)
+    return op
+
+
+class JobExecutor:
+    """Runs one :class:`ReconJob` step by step on its assigned backend."""
+
+    def __init__(self, job: ReconJob, mode: str,
+                 memory: Optional[MemoryModel] = None,
+                 devices: Optional[Sequence] = None):
+        self.job = job
+        self.alg = get_algorithm(job.algorithm)
+        self.mode = mode
+        self.memory = memory or MemoryModel()
+        self.devices = devices
+        self._state = None
+        self.init_seconds = 0.0
+
+    @property
+    def total_steps(self) -> int:
+        return max(1, self.job.n_iter) if self.alg.iterative else 1
+
+    @property
+    def iterations_done(self) -> int:
+        return 0 if self._state is None else int(self._state.it)
+
+    @property
+    def started(self) -> bool:
+        return self._state is not None
+
+    @property
+    def done(self) -> bool:
+        return self.started and self.iterations_done >= self.total_steps
+
+    def start(self, checkpoint: Optional[Dict[str, Any]] = None) -> None:
+        """Resolve data, build the operator, init (or restore) the state."""
+        t0 = time.monotonic()
+        proj = self.job.resolve_projections()
+        op = _get_operator(self.job.geo, self.job.angles, self.mode,
+                           self.alg.default_bp_weight, self.memory,
+                           self.devices)
+        params = dict(self.job.params)
+        if checkpoint is not None:
+            # feed checkpointed scalars back through init so restore does
+            # not recompute them (e.g. FISTA's power-iteration L)
+            for k in self.alg.resume_params:
+                if k in checkpoint:
+                    params[k] = checkpoint[k]
+        state = self.alg.init(proj, self.job.geo, self.job.angles, op=op,
+                              **params)
+        if checkpoint is not None:
+            state = restore_state(self.alg, state, checkpoint)
+        self._state = state
+        self.init_seconds = time.monotonic() - t0
+
+    def step(self) -> int:
+        """Advance one outer iteration; returns iterations done so far."""
+        if self._state is None:
+            raise RuntimeError(f"{self.job.job_id}: step() before start()")
+        self._state = self.alg.step(self._state)
+        return self.iterations_done
+
+    def checkpoint(self) -> Dict[str, Any]:
+        """Host-side snapshot of the resumable state (for preemption)."""
+        if self._state is None:
+            raise RuntimeError(f"{self.job.job_id}: no state to checkpoint")
+        return checkpoint_state(self.alg, self._state)
+
+    def result(self) -> np.ndarray:
+        return np.asarray(self.alg.finalize(self._state))
+
+    def release(self) -> None:
+        """Drop the state so device buffers can be reclaimed."""
+        self._state = None

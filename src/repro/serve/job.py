@@ -1,0 +1,118 @@
+"""Job specification and lifecycle records for the serving layer.
+
+A :class:`ReconJob` is the unit of work accepted by the scheduler: one
+reconstruction (geometry + angles + projection data + algorithm + iteration
+budget), annotated with a priority and an optional memory hint.  The
+projection data may be given as a concrete array or as a zero-argument
+callable (a *data ref*) that is resolved lazily only when the job is
+admitted — queued jobs then cost no host memory.
+
+:class:`JobRecord` is the scheduler's bookkeeping for one job: status,
+timing, placement, preemption count, and (once finished) the result.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Any, Callable, Dict, Optional, Union
+
+import numpy as np
+
+from ..core.geometry import ConeGeometry
+
+
+class JobStatus(enum.Enum):
+    PENDING = "pending"        # queued, not yet placed
+    RUNNING = "running"        # placed on a device, being stepped
+    PREEMPTED = "preempted"    # checkpointed + requeued by a higher prio job
+    COMPLETED = "completed"
+    FAILED = "failed"
+    CANCELLED = "cancelled"
+
+
+_job_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class ReconJob:
+    """One reconstruction request.
+
+    Parameters
+    ----------
+    algorithm : registry name (``repro.core.algorithms.stepwise.REGISTRY``):
+        "cgls", "ossart", "sirt", "sart", "fista", "asd_pocs", "fdk", ...
+    geo, angles : acquisition geometry and gantry angles.
+    projections : ``(n_angles, nv, nu)`` array **or** a zero-arg callable
+        returning it (lazy data ref, resolved at admission).
+    n_iter : outer-iteration budget (ignored for direct algorithms).
+    priority : higher values are scheduled first and may preempt lower ones.
+    params : extra keyword arguments for the algorithm's ``init``.
+    memory_hint_bytes : optional override of the planner's footprint
+        estimate (0 = use the estimate).
+    mode : force the execution backend ("plain" | "stream"); ``None`` lets
+        the scheduler choose from the footprint vs. the device budget.
+    """
+
+    algorithm: str
+    geo: ConeGeometry
+    angles: np.ndarray
+    projections: Union[np.ndarray, Callable[[], np.ndarray]]
+    n_iter: int = 10
+    priority: int = 0
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    memory_hint_bytes: int = 0
+    mode: Optional[str] = None
+    job_id: str = ""
+
+    def __post_init__(self):
+        if not self.job_id:
+            self.job_id = f"job-{next(_job_counter):05d}"
+        self.angles = np.asarray(self.angles, np.float32)
+
+    @property
+    def n_angles(self) -> int:
+        return len(self.angles)
+
+    def resolve_projections(self) -> np.ndarray:
+        if callable(self.projections):
+            return np.asarray(self.projections())
+        return np.asarray(self.projections)
+
+
+@dataclasses.dataclass
+class JobRecord:
+    """Scheduler-side lifecycle record for one submitted job."""
+    job: ReconJob
+    seq: int                                  # submission order (FIFO tiebreak)
+    status: JobStatus = JobStatus.PENDING
+    submit_time: float = 0.0
+    start_time: Optional[float] = None        # first admission
+    end_time: Optional[float] = None
+    iterations_done: int = 0
+    preemptions: int = 0
+    device: Optional[int] = None
+    footprint_bytes: int = 0
+    streamed: bool = False                    # routed through out-of-core path
+    checkpoint: Optional[Dict[str, Any]] = None
+    result: Optional[np.ndarray] = None
+    error: Optional[str] = None
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Submit-to-completion wall-clock seconds (None while in flight)."""
+        if self.end_time is None:
+            return None
+        return self.end_time - self.submit_time
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        if self.start_time is None:
+            return None
+        return self.start_time - self.submit_time
+
+    @property
+    def done(self) -> bool:
+        return self.status in (JobStatus.COMPLETED, JobStatus.FAILED,
+                               JobStatus.CANCELLED)

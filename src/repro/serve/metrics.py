@@ -1,0 +1,91 @@
+"""Serving metrics: throughput, latency percentiles, device utilisation.
+
+Wall-clock numbers are measured (``time.monotonic``); *modeled* numbers
+additionally use the per-device busy clocks maintained by the pool, which
+treat the pool's devices as executing in parallel — on a single-host CPU
+test rig the devices are simulated, so the modeled makespan
+(``max`` over device busy time) is the honest stand-in for real
+multi-accelerator wall-clock, exactly like the paper's per-GPU timelines
+(Fig 3/5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+def percentile(xs: List[float], p: float) -> float:
+    """Nearest-rank percentile (p in [0, 100]); 0.0 on empty input."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    k = max(0, min(len(s) - 1, int(round(p / 100.0 * (len(s) - 1)))))
+    return s[k]
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    """Counters + samples accumulated by one scheduler instance."""
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    cancelled: int = 0
+    preemptions: int = 0
+    steps: int = 0
+    streamed_jobs: int = 0
+
+    step_seconds: List[float] = dataclasses.field(default_factory=list)
+    latencies: List[float] = dataclasses.field(default_factory=list)
+    queue_waits: List[float] = dataclasses.field(default_factory=list)
+
+    wall_start: Optional[float] = None
+    wall_end: Optional[float] = None
+
+    def record_step(self, seconds: float) -> None:
+        self.steps += 1
+        self.step_seconds.append(seconds)
+
+    def record_completion(self, latency: float, queue_wait: float) -> None:
+        self.completed += 1
+        self.latencies.append(latency)
+        self.queue_waits.append(queue_wait)
+
+    # ---- summaries ---------------------------------------------------------
+
+    @property
+    def wall_seconds(self) -> float:
+        if self.wall_start is None or self.wall_end is None:
+            return 0.0
+        return self.wall_end - self.wall_start
+
+    @property
+    def busy_seconds(self) -> float:
+        """Total compute time across all steps (serial-equivalent time)."""
+        return sum(self.step_seconds)
+
+    def summary(self, device_busy: Optional[List[float]] = None) -> Dict:
+        """Aggregate view; pass the pool's per-device busy clocks to get the
+        modeled (device-parallel) makespan and throughput."""
+        out = {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "failed": self.failed,
+            "preemptions": self.preemptions,
+            "steps": self.steps,
+            "streamed_jobs": self.streamed_jobs,
+            "wall_seconds": self.wall_seconds,
+            "busy_seconds": self.busy_seconds,
+            "latency_p50": percentile(self.latencies, 50),
+            "latency_p95": percentile(self.latencies, 95),
+            "queue_wait_p50": percentile(self.queue_waits, 50),
+            "jobs_per_sec_wall": (self.completed / self.wall_seconds
+                                  if self.wall_seconds > 0 else 0.0),
+        }
+        if device_busy is not None:
+            makespan = max(device_busy) if device_busy else 0.0
+            out["modeled_makespan_seconds"] = makespan
+            out["device_busy_seconds"] = list(device_busy)
+            out["jobs_per_sec_modeled"] = (self.completed / makespan
+                                           if makespan > 0 else 0.0)
+        return out

@@ -1,0 +1,402 @@
+"""Multi-tenant job scheduler: placement, fair-share interleaving, preemption.
+
+This is the serving layer the paper's planners make possible: because
+``plan_forward`` / ``plan_backward`` can *predict* a reconstruction's
+per-device footprint before any array is allocated, the scheduler can pack
+several small jobs onto one device, route oversized jobs through the
+out-of-core streaming path (whose working set is bounded by the device
+budget no matter how large the volume), and know ahead of time that a
+placement fits.
+
+Execution model
+---------------
+Jobs advance in *quanta*: each quantum, every running job is stepped by one
+outer iteration of its algorithm (fair-share round-robin), so a long
+low-priority reconstruction cannot starve short jobs that land next to it.
+Priorities order admission, and a high-priority arrival that does not fit
+preempts the lowest-priority running job: its resumable state (see
+``repro.core.algorithms.stepwise``) is checkpointed to host memory, its
+device reservation is released, and it re-enters the queue with its
+original position, resuming later with bit-identical results.
+
+A :class:`~repro.checkpoint.preemption.PreemptionGuard` can be attached;
+when the guard fires (SIGTERM on a cloud host), the scheduler drains at the
+next quantum boundary: all running jobs are checkpointed and requeued, so a
+restarted scheduler resumes them without losing completed iterations.
+
+The device pool is either real (one slot per JAX device) or simulated
+(slots with a byte budget only) — placement logic is identical, which is
+how the tests drive a "multi-GPU" pool on a CPU host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Dict, List, Optional, Sequence, Set
+
+from ..core.algorithms.stepwise import get_algorithm
+from ..core.splitting import MemoryModel, plan_backward, plan_forward
+from .executor import JobExecutor
+from .job import JobRecord, JobStatus, ReconJob
+from .metrics import ServeMetrics
+from .queue import PriorityJobQueue
+
+F32 = 4
+
+# Peak live arrays per algorithm: (volume-sized, projection-set-sized).
+# Used for the *resident* footprint of in-core jobs; streaming jobs are
+# bounded by the planner's slab + buffer working set instead.
+_ALG_WORKSPACE = {
+    "cgls": (3, 3),        # x, p, s  /  b, r, q
+    "fista": (3, 2),       # x, y, z  /  b, A(y)
+    "fista_tv": (3, 2),
+    "ossart": (3, 3),      # x, upd, V / proj, resid, W
+    "sirt": (3, 3),
+    "sart": (3, 3),
+    "asd_pocs": (4, 3),    # ossart set + x_prev
+    "fdk": (2, 2),         # vol, acc / proj, filtered
+}
+_DEFAULT_WORKSPACE = (4, 3)
+
+
+@dataclasses.dataclass(frozen=True)
+class JobFootprint:
+    """Planner-derived placement requirements for one job."""
+    bytes_on_device: int
+    streams: bool           # must run through the out-of-core executor
+
+
+def estimate_job_footprint(job: ReconJob,
+                           memory: MemoryModel) -> JobFootprint:
+    """Per-device bytes the job needs under ``memory``, and whether it must
+    stream.  Mirrors the paper's "check GPU memory / split" decision
+    (Alg 1-2): if the planners would split the volume, the job cannot be
+    held resident and is routed out-of-core."""
+    geo, n_angles = job.geo, job.n_angles
+    plan_f = plan_forward(geo, n_angles, 1, memory)
+    plan_b = plan_backward(geo, n_angles, 1, memory)
+    streams = plan_f.n_slabs > 1 or plan_b.n_slabs > 1
+    if job.mode == "plain":
+        streams = False
+    elif job.mode == "stream":
+        streams = True
+
+    if streams:
+        bytes_needed = max(
+            plan_f.bytes_image_slab + plan_f.bytes_proj_buffers,
+            plan_b.bytes_image_slab + plan_b.bytes_proj_buffers)
+    else:
+        nz, ny, nx = geo.n_voxel
+        nv, nu = geo.n_detector
+        n_vol, n_proj = _ALG_WORKSPACE.get(job.algorithm,
+                                           _DEFAULT_WORKSPACE)
+        bytes_needed = (n_vol * nz * ny * nx * F32
+                        + n_proj * n_angles * nv * nu * F32)
+    if job.memory_hint_bytes:
+        bytes_needed = job.memory_hint_bytes
+    return JobFootprint(bytes_needed, streams)
+
+
+@dataclasses.dataclass
+class DeviceSlot:
+    """One device's capacity ledger (real JAX device or simulated)."""
+    index: int
+    memory: MemoryModel
+    jax_device: Optional[Any] = None
+    committed_bytes: int = 0
+    busy_seconds: float = 0.0           # virtual per-device clock
+    jobs: Set[str] = dataclasses.field(default_factory=set)
+
+    @property
+    def free_bytes(self) -> int:
+        return self.memory.usable - self.committed_bytes
+
+
+class DevicePool:
+    """Homogeneous pool of device slots.
+
+    ``policy`` selects the placement heuristic among the slots that fit:
+
+    * ``"spread"`` (default): least-loaded first (fewest resident jobs,
+      then most free bytes) — maximises device parallelism, the serving
+      throughput choice.
+    * ``"pack"``: tightest fit first — minimises fragmentation, keeps
+      large holes open for large jobs.
+    """
+
+    def __init__(self, n_devices: int = 1,
+                 memory: Optional[MemoryModel] = None,
+                 jax_devices: Optional[Sequence] = None,
+                 max_jobs_per_device: Optional[int] = None,
+                 policy: str = "spread"):
+        if policy not in ("spread", "pack"):
+            raise ValueError(f"unknown placement policy {policy!r}")
+        self.memory = memory or MemoryModel()
+        if jax_devices is not None:
+            n_devices = len(jax_devices)
+        self.slots = [
+            DeviceSlot(i, self.memory,
+                       jax_devices[i] if jax_devices is not None else None)
+            for i in range(n_devices)]
+        self.max_jobs_per_device = max_jobs_per_device
+        self.policy = policy
+
+    def best_fit(self, bytes_needed: int) -> Optional[DeviceSlot]:
+        """Pick a slot that fits ``bytes_needed`` under the pool policy."""
+        candidates = [
+            s for s in self.slots
+            if s.free_bytes >= bytes_needed
+            and (self.max_jobs_per_device is None
+                 or len(s.jobs) < self.max_jobs_per_device)]
+        if not candidates:
+            return None
+        if self.policy == "pack":
+            return min(candidates, key=lambda s: (s.free_bytes, s.index))
+        return min(candidates,
+                   key=lambda s: (len(s.jobs), -s.free_bytes, s.index))
+
+    def commit(self, slot: DeviceSlot, job_id: str, nbytes: int) -> None:
+        slot.committed_bytes += nbytes
+        slot.jobs.add(job_id)
+
+    def release(self, slot: DeviceSlot, job_id: str, nbytes: int) -> None:
+        slot.committed_bytes -= nbytes
+        slot.jobs.discard(job_id)
+
+    def busy_clocks(self) -> List[float]:
+        return [s.busy_seconds for s in self.slots]
+
+    @property
+    def fits_nowhere_bytes(self) -> int:
+        """A job above this can never be placed, even on an empty pool."""
+        return self.memory.usable
+
+
+@dataclasses.dataclass
+class _Running:
+    record: JobRecord
+    executor: JobExecutor
+    slot: DeviceSlot
+
+
+class Scheduler:
+    """Accepts :class:`ReconJob` submissions and drives them to completion.
+
+    Usage::
+
+        sched = Scheduler(n_devices=4, memory=MemoryModel(...))
+        sched.submit(job_a); sched.submit(job_b)
+        sched.run()
+        rec = sched.records[job_a.job_id].result
+    """
+
+    def __init__(self, pool: Optional[DevicePool] = None,
+                 n_devices: int = 1,
+                 memory: Optional[MemoryModel] = None,
+                 metrics: Optional[ServeMetrics] = None,
+                 guard=None):
+        self.pool = pool or DevicePool(n_devices, memory)
+        self.queue = PriorityJobQueue()
+        self.records: Dict[str, JobRecord] = {}
+        self.running: Dict[str, _Running] = {}
+        self.metrics = metrics or ServeMetrics()
+        self.guard = guard
+        self._seq = itertools.count()
+
+    # ---- client API --------------------------------------------------------
+
+    def submit(self, job: ReconJob) -> str:
+        get_algorithm(job.algorithm)   # fail fast on unknown algorithms
+        rec = JobRecord(job=job, seq=next(self._seq),
+                        submit_time=time.monotonic())
+        self.records[job.job_id] = rec
+        self.queue.push(rec)
+        self.metrics.submitted += 1
+        return job.job_id
+
+    def cancel(self, job_id: str) -> bool:
+        """Cancel a queued (not yet running) job."""
+        ok = self.queue.cancel(job_id)
+        if ok:
+            self.metrics.cancelled += 1
+        return ok
+
+    def result(self, job_id: str):
+        rec = self.records[job_id]
+        if rec.status is not JobStatus.COMPLETED:
+            raise RuntimeError(f"{job_id} is {rec.status.value}"
+                               + (f": {rec.error}" if rec.error else ""))
+        return rec.result
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.running
+
+    # ---- placement ---------------------------------------------------------
+
+    def _fail(self, rec: JobRecord, msg: str) -> None:
+        rec.status = JobStatus.FAILED
+        rec.error = msg
+        rec.end_time = time.monotonic()
+        self.metrics.failed += 1
+
+    def _place(self, rec: JobRecord) -> bool:
+        """Try to admit one record onto the pool.  Returns True if the
+        record was consumed (placed, completed trivially, or failed)."""
+        try:
+            fp = estimate_job_footprint(rec.job, self.pool.memory)
+        except MemoryError as e:
+            self._fail(rec, f"unplannable under device budget: {e}")
+            return True
+        if fp.bytes_on_device > self.pool.fits_nowhere_bytes:
+            self._fail(rec, f"footprint {fp.bytes_on_device} B exceeds the "
+                            f"device budget {self.pool.fits_nowhere_bytes} B "
+                            f"even on an empty device")
+            return True
+        slot = self.pool.best_fit(fp.bytes_on_device)
+        if slot is None:
+            return False
+
+        try:
+            # one tenant's bad geometry / data ref / algorithm params must
+            # fail that job alone, never the scheduler serving the others
+            executor = JobExecutor(
+                rec.job, mode="stream" if fp.streams else "plain",
+                memory=self.pool.memory,
+                devices=([slot.jax_device] if slot.jax_device is not None
+                         else None))
+            executor.start(checkpoint=rec.checkpoint)
+        except Exception as e:
+            self._fail(rec, f"init failed: {e!r}")
+            return True
+        rec.checkpoint = None
+        rec.status = JobStatus.RUNNING
+        rec.device = slot.index
+        rec.footprint_bytes = fp.bytes_on_device
+        rec.streamed = fp.streams
+        if fp.streams:
+            self.metrics.streamed_jobs += 1
+        if rec.start_time is None:
+            rec.start_time = time.monotonic()
+        slot.busy_seconds += executor.init_seconds
+        self.pool.commit(slot, rec.job.job_id, fp.bytes_on_device)
+        self.running[rec.job.job_id] = _Running(rec, executor, slot)
+        return True
+
+    def _try_admit(self) -> None:
+        """Admit queued jobs in priority order; on a full pool, preempt
+        strictly-lower-priority running work for the head job."""
+        while True:
+            if self.queue.peek_priority() is None:
+                return
+            rec = self.queue.pop()
+            if rec is None:
+                return
+            if self._place(rec):
+                continue
+            if self._preempt_for(rec):
+                continue
+            # head job cannot be placed: put it back and stop admitting
+            # (strict priority order -- no backfilling past the head).
+            self.queue.push(rec)
+            return
+
+    def _preempt_for(self, rec: JobRecord) -> bool:
+        """Evict lowest-priority running jobs (strictly below ``rec``'s
+        priority) until ``rec`` fits; undo nothing if it never fits."""
+        while True:
+            victims = [r for r in self.running.values()
+                       if r.record.job.priority < rec.job.priority]
+            if not victims:
+                return False
+            victim = min(victims,
+                         key=lambda r: (r.record.job.priority,
+                                        -r.record.seq))
+            self._preempt(victim)
+            if self._place(rec):
+                return True
+
+    def _preempt(self, run: _Running) -> None:
+        rec = run.record
+        rec.checkpoint = run.executor.checkpoint()
+        rec.status = JobStatus.PREEMPTED
+        rec.preemptions += 1
+        self.metrics.preemptions += 1
+        run.executor.release()
+        self.pool.release(run.slot, rec.job.job_id, rec.footprint_bytes)
+        del self.running[rec.job.job_id]
+        self.queue.push(rec)   # original seq: regains its queue position
+
+    # ---- execution ---------------------------------------------------------
+
+    def _complete(self, run: _Running) -> None:
+        rec = run.record
+        rec.result = run.executor.result()
+        rec.status = JobStatus.COMPLETED
+        rec.end_time = time.monotonic()
+        self.metrics.record_completion(rec.latency, rec.queue_wait)
+        run.executor.release()
+        self.pool.release(run.slot, rec.job.job_id, rec.footprint_bytes)
+        del self.running[rec.job.job_id]
+
+    def step_quantum(self) -> int:
+        """One scheduling quantum: admit, then advance every running job by
+        one outer iteration (fair-share round-robin).  Returns the number
+        of iteration steps executed."""
+        self._try_admit()
+        executed = 0
+        # deterministic order: device index, then submission order
+        for run in sorted(self.running.values(),
+                          key=lambda r: (r.slot.index, r.record.seq)):
+            if run.record.job.job_id not in self.running:
+                continue   # evicted mid-quantum (defensive)
+            rec = run.record
+            if not run.executor.done:
+                t0 = time.monotonic()
+                try:
+                    rec.iterations_done = run.executor.step()
+                except Exception as e:
+                    self._fail(rec, f"step failed: {e!r}")
+                    run.executor.release()
+                    self.pool.release(run.slot, rec.job.job_id,
+                                      rec.footprint_bytes)
+                    del self.running[rec.job.job_id]
+                    continue
+                dt = time.monotonic() - t0
+                run.slot.busy_seconds += dt
+                self.metrics.record_step(dt)
+                executed += 1
+            if run.executor.done:
+                self._complete(run)
+        return executed
+
+    def run(self, max_quanta: Optional[int] = None) -> ServeMetrics:
+        """Drive the system until all work is done (or the guard fires, or
+        ``max_quanta`` is reached).  Safe to call again to resume."""
+        if self.metrics.wall_start is None:
+            self.metrics.wall_start = time.monotonic()
+        quanta = 0
+        while not self.idle:
+            if self.guard is not None and self.guard.preempted:
+                self.drain()
+                break
+            if max_quanta is not None and quanta >= max_quanta:
+                break
+            self.step_quantum()
+            quanta += 1
+        self.metrics.wall_end = time.monotonic()
+        return self.metrics
+
+    def drain(self) -> int:
+        """Checkpoint + requeue every running job (host preemption path).
+        Returns how many jobs were parked."""
+        parked = 0
+        for run in list(self.running.values()):
+            self._preempt(run)
+            parked += 1
+        return parked
+
+    def summary(self) -> Dict:
+        return self.metrics.summary(device_busy=self.pool.busy_clocks())

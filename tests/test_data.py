@@ -3,6 +3,7 @@ shard independence, distributional sanity."""
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data import TokenPipeline, TokenPipelineConfig

@@ -50,6 +50,7 @@ def test_preemption_guard_manual_trigger():
     assert g.preempted
 
 
+@pytest.mark.slow
 def test_preempt_checkpoint_resume_exact(tmp_path):
     """Kill training via the preemption guard at step k, restart, and check
     the resumed run produces the SAME losses as an uninterrupted run --
@@ -58,7 +59,7 @@ def test_preempt_checkpoint_resume_exact(tmp_path):
 
     ckpt = str(tmp_path / "ckpt")
     # uninterrupted reference
-    _, _, ref_losses = train("stablelm-1.6b", steps=8, batch=2, seq=32,
+    _, _, ref_losses = train("stablelm-1.6b", steps=6, batch=2, seq=32,
                              ckpt_dir=None, verbose=False)
 
     class TriggerAt(PreemptionGuard):
@@ -72,14 +73,14 @@ def test_preempt_checkpoint_resume_exact(tmp_path):
             self.count += 1
             return self.count > self.at
 
-    # run 1: preempted partway (checkpoints every 4 anyway)
-    _, _, losses1 = train("stablelm-1.6b", steps=8, batch=2, seq=32,
-                          ckpt_dir=ckpt, ckpt_every=4, verbose=False,
-                          guard=TriggerAt(5))
-    assert len(losses1) < 8
+    # run 1: preempted partway (checkpoints every 3 anyway)
+    _, _, losses1 = train("stablelm-1.6b", steps=6, batch=2, seq=32,
+                          ckpt_dir=ckpt, ckpt_every=3, verbose=False,
+                          guard=TriggerAt(4))
+    assert len(losses1) < 6
     # run 2: resumes from the committed checkpoint and finishes
-    _, _, losses2 = train("stablelm-1.6b", steps=8, batch=2, seq=32,
-                          ckpt_dir=ckpt, ckpt_every=4, verbose=False)
+    _, _, losses2 = train("stablelm-1.6b", steps=6, batch=2, seq=32,
+                          ckpt_dir=ckpt, ckpt_every=3, verbose=False)
     combined = losses1[:len(losses1)] + losses2
     # the resumed tail must match the uninterrupted run's tail exactly-ish
     np.testing.assert_allclose(combined[-len(losses2):],

@@ -15,6 +15,15 @@ from repro.models.lm import make_model
 B, S = 2, 32
 KEY = jax.random.PRNGKey(0)
 
+# tier-1 keeps one cheap representative arch; the full matrix runs with
+# ``-m slow`` (large reduced configs dominate the suite's wall-clock)
+_FAST_ARCHS = ("stablelm-1.6b",)
+
+
+def _arch_params(names):
+    return [n if n in _FAST_ARCHS
+            else pytest.param(n, marks=pytest.mark.slow) for n in names]
+
 
 def _inputs(cfg, key=KEY, b=B, s=S):
     if cfg.encoder_only or cfg.family == "audio":
@@ -27,7 +36,7 @@ def _inputs(cfg, key=KEY, b=B, s=S):
     return tokens, labels, ctx
 
 
-@pytest.mark.parametrize("name", ARCH_NAMES)
+@pytest.mark.parametrize("name", _arch_params(ARCH_NAMES))
 def test_arch_forward_smoke(name):
     cfg = reduced(name)
     model = make_model(cfg)
@@ -41,7 +50,7 @@ def test_arch_forward_smoke(name):
     assert not bool(jnp.any(jnp.isnan(logits)))
 
 
-@pytest.mark.parametrize("name", ARCH_NAMES)
+@pytest.mark.parametrize("name", _arch_params(ARCH_NAMES))
 def test_arch_train_step_smoke(name):
     """One real SGD step decreases nothing catastrophic: loss finite,
     grads finite, params updated."""
@@ -60,8 +69,8 @@ def test_arch_train_step_smoke(name):
     assert gnorm > 0
 
 
-@pytest.mark.parametrize("name", [n for n in ARCH_NAMES
-                                  if not get_config(n).encoder_only])
+@pytest.mark.parametrize("name", _arch_params(
+    [n for n in ARCH_NAMES if not get_config(n).encoder_only]))
 def test_arch_decode_matches_forward_fp32(name):
     cfg = dataclasses.replace(reduced(name), dtype=jnp.float32)
     model = make_model(cfg)

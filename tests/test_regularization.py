@@ -43,8 +43,11 @@ def test_dist_tv_approx_norm_converges(host_mesh):
     rel = float(jnp.linalg.norm(approx - exact)
                 / jnp.linalg.norm(exact))
     assert rel < 0.02, rel
-    # and both reduce TV versus the input
-    assert float(tv_value(approx)) < float(tv_value(v))
+    # and both reduce TV versus the input (materialise to host first: on
+    # some jax versions elementwise graphs evaluated directly on the
+    # mesh-sharded output produce wrong values)
+    approx_host = jnp.asarray(np.asarray(approx))
+    assert float(tv_value(approx_host)) < float(tv_value(v))
 
 
 @pytest.mark.parametrize("n_inner", [2, 4])

@@ -1,0 +1,279 @@
+"""repro.serve: queue ordering, planner-driven placement, step-wise
+equivalence, preemption, and end-to-end concurrent mixed-size serving."""
+
+import numpy as np
+import pytest
+
+from repro.core import phantoms
+from repro.core.algorithms import (asd_pocs, cgls, fista_tv, ossart,
+                                   get_algorithm)
+from repro.core.geometry import ConeGeometry, circular_angles
+from repro.core.splitting import MemoryModel
+from repro.checkpoint import PreemptionGuard
+from repro.serve import (DevicePool, JobStatus, PriorityJobQueue, ReconJob,
+                         Scheduler, estimate_job_footprint)
+from repro.serve.job import JobRecord
+
+GEO = ConeGeometry.nice(16)
+ANGLES = circular_angles(12)
+PROJ = phantoms.sphere_projection_analytic(GEO, ANGLES)
+
+BIG_GEO = ConeGeometry.nice(32)
+BIG_ANGLES = circular_angles(16)
+
+KIB = 1024
+
+
+def _mem(kib, frac=1.0):
+    return MemoryModel(device_bytes=kib * KIB, usable_fraction=frac)
+
+
+def _job(alg="cgls", prio=0, n_iter=2, **kw):
+    return ReconJob(alg, GEO, ANGLES, PROJ, n_iter=n_iter, priority=prio,
+                    **kw)
+
+
+def _rec(job, seq):
+    return JobRecord(job=job, seq=seq)
+
+
+# --------------------------------------------------------------------------
+# queue
+# --------------------------------------------------------------------------
+
+def test_queue_priority_then_fifo():
+    q = PriorityJobQueue()
+    lo1, hi, lo2 = _job(prio=0), _job(prio=5), _job(prio=0)
+    q.push(_rec(lo1, 0)); q.push(_rec(hi, 1)); q.push(_rec(lo2, 2))
+    assert q.peek_priority() == 5
+    order = [q.pop().job.job_id for _ in range(3)]
+    assert order == [hi.job_id, lo1.job_id, lo2.job_id]
+    assert q.pop() is None
+
+
+def test_queue_requeue_preserves_position():
+    """A preempted job re-enters ahead of later arrivals of equal prio."""
+    q = PriorityJobQueue()
+    first, second = _job(prio=1), _job(prio=1)
+    q.push(_rec(first, 0)); q.push(_rec(second, 1))
+    got = q.pop()
+    assert got.job.job_id == first.job_id
+    q.push(got)                     # preemption path: same record, same seq
+    assert q.pop().job.job_id == first.job_id
+
+
+def test_queue_cancel():
+    q = PriorityJobQueue()
+    a, b = _job(), _job()
+    q.push(_rec(a, 0)); q.push(_rec(b, 1))
+    assert q.cancel(a.job_id)
+    assert not q.cancel("nope")
+    assert q.pop().job.job_id == b.job_id
+    assert len(q) == 0
+
+
+# --------------------------------------------------------------------------
+# footprint estimation + placement
+# --------------------------------------------------------------------------
+
+def test_footprint_small_job_resident():
+    fp = estimate_job_footprint(_job("cgls"), _mem(1024))
+    assert not fp.streams
+    # 3 volume copies + 3 projection-set copies for CGLS at 16^3 / 12 angles
+    assert fp.bytes_on_device == 3 * 16**3 * 4 + 3 * 12 * 16 * 16 * 4
+
+
+def test_footprint_oversized_job_streams():
+    job = ReconJob("ossart", BIG_GEO, BIG_ANGLES, lambda: None)
+    fp = estimate_job_footprint(job, _mem(220))
+    assert fp.streams
+    assert fp.bytes_on_device <= _mem(220).usable
+
+
+def test_footprint_respects_forced_mode_and_hint():
+    assert estimate_job_footprint(_job(mode="stream"), _mem(1024)).streams
+    fp = estimate_job_footprint(_job(memory_hint_bytes=12345), _mem(1024))
+    assert fp.bytes_on_device == 12345
+
+
+def test_pool_placement_respects_budget():
+    pool = DevicePool(n_devices=2, memory=_mem(100))
+    cap = pool.memory.usable
+    s1 = pool.best_fit(60 * KIB)
+    pool.commit(s1, "a", 60 * KIB)
+    s2 = pool.best_fit(60 * KIB)          # does not fit next to "a"
+    assert s2 is not s1
+    pool.commit(s2, "b", 60 * KIB)
+    assert pool.best_fit(60 * KIB) is None   # pool full for this size
+    assert pool.best_fit(cap - 60 * KIB) is not None  # small one still fits
+    pool.release(s1, "a", 60 * KIB)
+    assert pool.best_fit(60 * KIB) is s1
+    assert s1.free_bytes == cap
+
+
+def test_pool_spread_vs_pack():
+    spread = DevicePool(n_devices=2, memory=_mem(100))
+    a = spread.best_fit(10 * KIB); spread.commit(a, "a", 10 * KIB)
+    assert spread.best_fit(10 * KIB) is not a      # least-loaded first
+    pack = DevicePool(n_devices=2, memory=_mem(100), policy="pack")
+    b = pack.best_fit(10 * KIB); pack.commit(b, "b", 10 * KIB)
+    assert pack.best_fit(10 * KIB) is b            # tightest fit first
+
+
+def test_scheduler_isolates_bad_tenants():
+    sched = Scheduler(n_devices=1)
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        sched.submit(_job("not-an-algorithm"))
+    # a job whose init blows up (bad data ref) fails alone; the scheduler
+    # keeps serving the healthy tenant
+    bad = sched.submit(ReconJob("cgls", GEO, ANGLES,
+                                lambda: 1 / 0, n_iter=2))
+    good = sched.submit(_job("cgls", n_iter=2))
+    sched.run()
+    assert sched.records[bad].status is JobStatus.FAILED
+    assert "init failed" in sched.records[bad].error
+    assert sched.records[good].status is JobStatus.COMPLETED
+    np.testing.assert_array_equal(sched.result(good), _mono("cgls", 2))
+
+
+def test_scheduler_fails_never_fitting_job():
+    sched = Scheduler(n_devices=1, memory=_mem(100))
+    jid = sched.submit(_job("cgls", memory_hint_bytes=10 * 1024 * KIB))
+    sched.run(max_quanta=2)
+    rec = sched.records[jid]
+    assert rec.status is JobStatus.FAILED
+    assert "exceeds" in rec.error
+    with pytest.raises(RuntimeError):
+        sched.result(jid)
+
+
+# --------------------------------------------------------------------------
+# step-wise iterators == monolithic algorithms (bit-for-bit)
+# --------------------------------------------------------------------------
+
+_MONO_MEMO = {}
+
+
+def _mono(alg, n_iter):
+    if (alg, n_iter) in _MONO_MEMO:
+        return _MONO_MEMO[(alg, n_iter)]
+    _MONO_MEMO[(alg, n_iter)] = _mono_run(alg, n_iter)
+    return _MONO_MEMO[(alg, n_iter)]
+
+
+def _mono_run(alg, n_iter):
+    if alg == "cgls":
+        return np.asarray(cgls(PROJ, GEO, ANGLES, n_iter=n_iter))
+    if alg == "ossart":
+        return np.asarray(ossart(PROJ, GEO, ANGLES, n_iter=n_iter,
+                                 subset_size=4))
+    if alg == "fista":
+        return np.asarray(fista_tv(PROJ, GEO, ANGLES, n_iter=n_iter,
+                                   tv_iters=3, L=100.0))
+    if alg == "asd_pocs":
+        return np.asarray(asd_pocs(PROJ, GEO, ANGLES, n_iter=n_iter,
+                                   subset_size=4, tv_iters=3))
+    raise AssertionError(alg)
+
+
+_PARAMS = {"ossart": {"subset_size": 4},
+           "fista": {"tv_iters": 3, "L": 100.0},   # fixed L skips power it.
+           "asd_pocs": {"subset_size": 4, "tv_iters": 3}, "cgls": {}}
+
+
+@pytest.mark.parametrize("alg", ["cgls", "ossart", "fista", "asd_pocs"])
+def test_stepwise_matches_monolithic_bitwise(alg):
+    n_iter = 2
+    a = get_algorithm(alg)
+    st = a.init(PROJ, GEO, ANGLES, **_PARAMS[alg])
+    for _ in range(n_iter):
+        st = a.step(st)
+    got = np.asarray(a.finalize(st))
+    np.testing.assert_array_equal(got, _mono(alg, n_iter))
+
+
+# --------------------------------------------------------------------------
+# preemption
+# --------------------------------------------------------------------------
+
+def test_preemption_prioritizes_urgent_job_and_preserves_result():
+    # budget fits exactly one resident small job (84 KiB < 100 KiB < 168)
+    sched = Scheduler(n_devices=1, memory=_mem(100))
+    lo = sched.submit(_job("ossart", prio=0, n_iter=4,
+                           params={"subset_size": 4}))
+    sched.run(max_quanta=2)          # low-prio makes some progress
+    assert sched.records[lo].iterations_done >= 1
+    hi = sched.submit(_job("cgls", prio=9, n_iter=2))
+    sched.run()
+    rec_lo, rec_hi = sched.records[lo], sched.records[hi]
+    assert rec_lo.preemptions >= 1
+    assert rec_hi.end_time <= rec_lo.end_time
+    assert sched.metrics.preemptions >= 1
+    # both results bit-identical to uninterrupted monolithic runs
+    np.testing.assert_array_equal(
+        sched.result(lo), np.asarray(ossart(PROJ, GEO, ANGLES, n_iter=4,
+                                            subset_size=4)))
+    np.testing.assert_array_equal(sched.result(hi), _mono("cgls", 2))
+
+
+def test_guard_drain_and_resume_with_lazy_data_ref():
+    calls = []
+
+    def ref():                       # lazy data ref, resolved at admission
+        calls.append(1)
+        return PROJ
+
+    guard = PreemptionGuard(install_handler=False)
+    sched = Scheduler(n_devices=1, guard=guard)
+    jid = sched.submit(ReconJob("cgls", GEO, ANGLES, ref, n_iter=3))
+    assert not calls                 # nothing resolved at submit time
+    sched.run(max_quanta=1)
+    assert calls == [1]
+    guard.trigger()                  # host SIGTERM equivalent
+    sched.run()
+    rec = sched.records[jid]
+    assert rec.status is JobStatus.PREEMPTED
+    assert rec.checkpoint is not None
+    sched.guard = None               # "restarted" host
+    sched.run()
+    assert rec.status is JobStatus.COMPLETED
+    assert calls == [1, 1]           # re-resolved on re-admission
+    np.testing.assert_array_equal(sched.result(jid), _mono("cgls", 3))
+
+
+# --------------------------------------------------------------------------
+# end-to-end: concurrent mixed-size serving
+# --------------------------------------------------------------------------
+
+def test_concurrent_mixed_size_jobs_match_solo_runs():
+    """>= 3 jobs of mixed sizes share a small-memory pool concurrently;
+    every result is numerically identical to a solo monolithic run."""
+    big_proj = phantoms.sphere_projection_analytic(BIG_GEO, BIG_ANGLES)
+    sched = Scheduler(n_devices=3, memory=_mem(220))
+    jids = [
+        sched.submit(_job("cgls", n_iter=2)),
+        sched.submit(_job("ossart", n_iter=2, params={"subset_size": 4})),
+        sched.submit(_job("cgls", n_iter=3)),
+        sched.submit(ReconJob("ossart", BIG_GEO, BIG_ANGLES, big_proj,
+                              n_iter=1, params={"subset_size": 16})),
+    ]
+    max_running = 0
+    while not sched.idle:
+        sched.step_quantum()
+        max_running = max(max_running, len(sched.running))
+    assert max_running >= 3          # genuinely concurrent
+    recs = [sched.records[j] for j in jids]
+    assert all(r.status is JobStatus.COMPLETED for r in recs)
+    assert recs[3].streamed          # the big one went out-of-core
+    assert len({r.device for r in recs[:3]}) > 1   # packed across devices
+
+    np.testing.assert_array_equal(sched.result(jids[0]), _mono("cgls", 2))
+    np.testing.assert_array_equal(sched.result(jids[1]),
+                                  _mono("ossart", 2))
+    np.testing.assert_array_equal(sched.result(jids[2]), _mono("cgls", 3))
+    solo_big = np.asarray(ossart(big_proj, BIG_GEO, BIG_ANGLES, n_iter=1,
+                                 subset_size=16))
+    got_big = sched.result(jids[3])
+    np.testing.assert_allclose(got_big, solo_big, rtol=2e-3, atol=2e-3)
+
+

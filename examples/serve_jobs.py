@@ -3,7 +3,9 @@
 Submits a mix of reconstruction jobs -- two small in-core jobs with
 different priorities and one volume too large for a device (routed through
 the paper's out-of-core streaming path) -- to the ``repro.serve``
-scheduler, then prints per-job placement, status and accuracy.
+scheduler, drives them with the threaded ``AsyncDriver`` (one worker
+thread per device, so both simulated devices step their resident jobs
+concurrently), then prints per-job placement, status and accuracy.
 
     PYTHONPATH=src python examples/serve_jobs.py
 """
@@ -13,7 +15,7 @@ import numpy as np
 from repro.core import phantoms
 from repro.core.geometry import ConeGeometry, circular_angles
 from repro.core.splitting import MemoryModel
-from repro.serve import ReconJob, Scheduler
+from repro.serve import AsyncDriver, ReconJob, Scheduler
 
 
 def main():
@@ -42,7 +44,7 @@ def main():
             "ossart", big_geo, big_angles, big_proj, n_iter=1, priority=1,
             params={"subset_size": 16})),
     }
-    sched.run()
+    AsyncDriver(sched).run()
 
     truth = {"urgent-cgls": vol, "batch-ossart": vol,
              "oversized-ossart": big_vol}

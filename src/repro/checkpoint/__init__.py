@@ -2,8 +2,8 @@
 resharding on restore, async save, and a preemption (SIGTERM) hook."""
 
 from .sharded import (CheckpointManager, save_checkpoint, restore_checkpoint,
-                      latest_step)
+                      latest_step, manifest_target)
 from .preemption import PreemptionGuard
 
 __all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
-           "latest_step", "PreemptionGuard"]
+           "latest_step", "manifest_target", "PreemptionGuard"]

@@ -94,6 +94,34 @@ def _gc(ckpt_dir: str, keep: int):
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
+def manifest_target(ckpt_dir: str, step: int) -> Dict[str, np.ndarray]:
+    """Rebuild a zeros pytree from a saved checkpoint's manifest.
+
+    ``restore_checkpoint`` validates shapes against a *target* tree, which
+    a restarted process that lost its in-memory state cannot supply.  For
+    checkpoints whose tree is a flat ``{name: array}`` dict (the serving
+    layer's job checkpoints), the manifest alone determines the structure:
+    every leaf path is ``['name']``, so the dict can be reconstructed with
+    placeholder zeros of the recorded shape/dtype and fed back to
+    ``restore_checkpoint``.
+    """
+    src = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)
+    out: Dict[str, np.ndarray] = {}
+    for path, meta in manifest["leaves"].items():
+        if not (path.startswith("['") and path.endswith("']")) \
+                or "']['" in path:
+            raise ValueError(
+                f"manifest leaf {path!r} is not a flat dict key; "
+                f"manifest_target only supports flat {{name: array}} trees")
+        name = path[2:-2]
+        np_dtype = (np.uint16 if meta["dtype"] == _BF16
+                    else np.dtype(meta["dtype"]))
+        out[name] = np.zeros(tuple(meta["shape"]), np_dtype)
+    return out
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
     """Highest committed step, or None (uncommitted dirs are ignored)."""
     if not os.path.isdir(ckpt_dir):

@@ -193,6 +193,9 @@ def stream_backward(proj: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
     its resident image slab (paper Fig 5)."""
     if devices is None:
         devices = jax.local_devices()[: plan.n_devices]
+    if len(devices) < plan.n_devices:
+        raise ValueError(f"plan wants {plan.n_devices} devices, "
+                         f"got {len(devices)}")
     angles = np.asarray(angles, np.float32)
     n_angles = len(angles)
     vol_out = np.zeros(geo.n_voxel, np.float32)
@@ -203,7 +206,7 @@ def stream_backward(proj: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
 
     # Slab queue per device (paper: "a queue of image pieces is added").
     for k, (z0, z1) in enumerate(plan.slab_ranges):
-        dev = devices[plan.device_of_slab[k] % len(devices)]
+        dev = devices[plan.device_of_slab[k]]
         bp = None if weight == "matched" else _bp_slab_fn(geo, z1 - z0,
                                                           weight)
         acc = jax.device_put(jnp.zeros((z1 - z0,) + tuple(geo.n_voxel[1:]),

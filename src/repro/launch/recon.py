@@ -1,10 +1,14 @@
 """Reconstruction driver: a thin client of the serving scheduler.
 
-Builds a :class:`repro.serve.ReconJob` from the CLI arguments and submits
-it to a single-device :class:`repro.serve.Scheduler`; the scheduler picks
-the backend (in-core "plain" vs out-of-core "stream") from the planner's
-footprint estimate unless ``--mode`` forces one.  ``--mode dist`` bypasses
-the scheduler and runs the shard_map backend over the local device mesh.
+Builds a :class:`repro.serve.ReconJob` from the CLI arguments, submits it
+to a :class:`repro.serve.Scheduler` and drives it with the threaded
+:class:`repro.serve.AsyncDriver`; the scheduler picks the backend
+(in-core "plain" vs out-of-core "stream") from the planner's footprint
+estimate unless ``--mode`` forces one.  ``--mode dist`` bypasses the
+scheduler and runs the shard_map backend over the local device mesh.
+``--snapshot-dir`` makes the run restart-safe: a SIGTERM parks the job's
+step-wise checkpoint durably, and re-running the same command resumes it
+bit-identically instead of starting over.
 
 Numerics are identical to the old monolithic driver: the scheduler steps
 the same algorithm iterators the monolithic entry points wrap.
@@ -27,7 +31,7 @@ from repro.core.operator import CTOperator
 from repro.core.splitting import MemoryModel
 from repro.core import algorithms as alg
 from repro.data import make_ct_dataset
-from repro.serve import ReconJob, Scheduler
+from repro.serve import AsyncDriver, JobStatus, ReconJob, Scheduler
 
 
 def _job_params(algname: str, n_angles: int) -> dict:
@@ -38,7 +42,8 @@ def _job_params(algname: str, n_angles: int) -> dict:
 
 def reconstruct(algname: str = "cgls", n: int = 64, n_angles: int = 96,
                 iters: int = 10, mode: str = "auto",
-                device_bytes: int = 0, verbose: bool = True):
+                device_bytes: int = 0, verbose: bool = True,
+                snapshot_dir: str = ""):
     geo = ConeGeometry.nice(n)
     vol, angles, proj = make_ct_dataset(geo, n_angles)
     mem = (MemoryModel(device_bytes=device_bytes)
@@ -53,12 +58,31 @@ def reconstruct(algname: str = "cgls", n: int = 64, n_angles: int = 96,
         with mesh:
             rec = _run_monolithic(algname, proj, geo, angles, iters, op)
     else:
-        sched = Scheduler(n_devices=1, memory=mem)
-        jid = sched.submit(ReconJob(
-            algname, geo, angles, proj, n_iter=iters,
-            params=_job_params(algname, n_angles),
-            mode=None if mode == "auto" else mode))
-        sched.run()
+        from repro.checkpoint import PreemptionGuard
+        sched = Scheduler(n_devices=1, memory=mem,
+                          guard=PreemptionGuard(),
+                          snapshot_dir=snapshot_dir or None)
+        if snapshot_dir and sched.restore(snapshot_dir):
+            jid = next(iter(sched.records))   # resume the parked job
+            if verbose:
+                done = sched.records[jid].iterations_done
+                print(f"[recon] resuming {jid} from snapshot "
+                      f"({done} iterations already done)")
+        else:
+            jid = sched.submit(ReconJob(
+                algname, geo, angles, proj, n_iter=iters,
+                params=_job_params(algname, n_angles),
+                mode=None if mode == "auto" else mode))
+        AsyncDriver(sched).run()
+        record = sched.records[jid]
+        if record.status is JobStatus.PREEMPTED:   # SIGTERM parked it
+            if verbose:
+                where = (f"; snapshot in {snapshot_dir} -- re-run to resume"
+                         if snapshot_dir
+                         else " (no --snapshot-dir: progress lost)")
+                print(f"[recon] preempted after "
+                      f"{record.iterations_done}/{iters} iterations{where}")
+            return None, None
         rec = sched.result(jid)
     dt = time.time() - t0
     rec = np.asarray(rec)
@@ -98,9 +122,12 @@ def main():
                     choices=("auto", "plain", "stream", "dist"))
     ap.add_argument("--device-bytes", type=int, default=0,
                     help="per-device memory budget (streaming/placement)")
+    ap.add_argument("--snapshot-dir", default="",
+                    help="durable checkpoint directory: SIGTERM parks the "
+                         "job there; re-running resumes bit-identically")
     args = ap.parse_args()
     reconstruct(args.alg, args.n, args.angles, args.iters, args.mode,
-                args.device_bytes)
+                args.device_bytes, snapshot_dir=args.snapshot_dir)
 
 
 if __name__ == "__main__":

@@ -12,19 +12,28 @@ a :class:`Scheduler`, which
 * interleaves one outer iteration per job per quantum (fair share) using
   the step-wise algorithm iterators in
   :mod:`repro.core.algorithms.stepwise`,
-* preempts lower-priority work for urgent arrivals, checkpointing the
-  evicted job's resumable state so it later finishes bit-identically,
+* preempts lower-priority work for urgent arrivals — per device, evicting
+  only the cheapest victim set on the one slot where eviction makes the
+  arrival fit — checkpointing the evicted job's resumable state so it
+  later finishes bit-identically,
+* rejects jobs whose ``deadline_seconds`` cannot be met under the modeled
+  completion time (observed init/step costs),
 * exposes throughput / latency metrics (:class:`ServeMetrics`).
+
+Two drivers share that scheduler core: the cooperative single-thread
+``Scheduler.run()`` loop, and the threaded :class:`AsyncDriver` (one
+worker per device + background admission/snapshot thread) whose durable
+snapshots + :meth:`Scheduler.restore` survive process death.
 
 Quick start::
 
-    from repro.serve import ReconJob, Scheduler
+    from repro.serve import AsyncDriver, ReconJob, Scheduler
     from repro.core.splitting import MemoryModel
 
     sched = Scheduler(n_devices=4, memory=MemoryModel())
     jid = sched.submit(ReconJob("cgls", geo, angles, proj, n_iter=10,
                                 priority=1))
-    sched.run()
+    AsyncDriver(sched).run()
     image = sched.result(jid)
 """
 
@@ -33,9 +42,11 @@ from .queue import PriorityJobQueue
 from .executor import JobExecutor, clear_operator_cache
 from .metrics import ServeMetrics, percentile
 from .scheduler import (DevicePool, DeviceSlot, JobFootprint, Scheduler,
-                        estimate_job_footprint)
+                        estimate_job_footprint, fair_share_weight)
+from .driver import AsyncDriver
 
 __all__ = ["ReconJob", "JobRecord", "JobStatus", "PriorityJobQueue",
            "JobExecutor", "clear_operator_cache", "ServeMetrics",
            "percentile", "DevicePool", "DeviceSlot", "JobFootprint",
-           "Scheduler", "estimate_job_footprint"]
+           "Scheduler", "estimate_job_footprint", "fair_share_weight",
+           "AsyncDriver"]

@@ -14,10 +14,12 @@ variable.
 
 from __future__ import annotations
 
+import threading
 import time
 from collections import OrderedDict
 from typing import Any, Dict, Optional, Sequence
 
+import jax
 import numpy as np
 
 from ..core.algorithms.stepwise import (checkpoint_state, get_algorithm,
@@ -33,11 +35,13 @@ from .job import ReconJob
 # distinct geometries cannot grow without limit.
 _OP_CACHE_MAX = 32
 _op_cache: "OrderedDict[tuple, CTOperator]" = OrderedDict()
+_op_cache_lock = threading.Lock()   # admission may run in several schedulers
 
 
 def clear_operator_cache() -> None:
     """Drop all cached operators (frees their compiled executables)."""
-    _op_cache.clear()
+    with _op_cache_lock:
+        _op_cache.clear()
 
 
 def _get_operator(geo, angles: np.ndarray, mode: str, bp_weight: str,
@@ -46,16 +50,33 @@ def _get_operator(geo, angles: np.ndarray, mode: str, bp_weight: str,
     key = (geo, angles.tobytes(), mode, bp_weight,
            memory.device_bytes, memory.usable_fraction,
            tuple(getattr(d, "id", id(d)) for d in devices or ()))
-    op = _op_cache.get(key)
-    if op is None:
-        op = CTOperator(geo, angles, mode=mode, bp_weight=bp_weight,
-                        memory=memory, devices=devices)
+    with _op_cache_lock:
+        op = _op_cache.get(key)
+        if op is not None:
+            _op_cache.move_to_end(key)
+            return op
+    op = CTOperator(geo, angles, mode=mode, bp_weight=bp_weight,
+                    memory=memory, devices=devices)
+    with _op_cache_lock:
         _op_cache[key] = op
         if len(_op_cache) > _OP_CACHE_MAX:
             _op_cache.popitem(last=False)
-    else:
-        _op_cache.move_to_end(key)
     return op
+
+
+def _block_on_state(state) -> None:
+    """Wait for every device array reachable from ``state`` to finish.
+
+    JAX dispatch is asynchronous: ``alg.step`` returns as soon as the work
+    is *enqueued*, so any wall-clock measurement taken around it would time
+    the enqueue, not the compute.  Blocking on the state's arrays makes the
+    step boundary a real synchronisation point — step timings, per-device
+    busy clocks, and the modeled makespan all depend on it.
+    """
+    for leaf in jax.tree_util.tree_leaves(vars(state)):
+        block = getattr(leaf, "block_until_ready", None)
+        if block is not None:
+            block()
 
 
 class JobExecutor:
@@ -106,14 +127,20 @@ class JobExecutor:
                               **params)
         if checkpoint is not None:
             state = restore_state(self.alg, state, checkpoint)
+        _block_on_state(state)
         self._state = state
         self.init_seconds = time.monotonic() - t0
 
     def step(self) -> int:
-        """Advance one outer iteration; returns iterations done so far."""
+        """Advance one outer iteration; returns iterations done so far.
+
+        Blocks until the iteration's compute has actually finished (not
+        just been dispatched), so the caller's ``dt`` around this call is
+        honest compute time."""
         if self._state is None:
             raise RuntimeError(f"{self.job.job_id}: step() before start()")
         self._state = self.alg.step(self._state)
+        _block_on_state(self._state)
         return self.iterations_done
 
     def checkpoint(self) -> Dict[str, Any]:

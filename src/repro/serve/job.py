@@ -53,6 +53,11 @@ class ReconJob:
         estimate (0 = use the estimate).
     mode : force the execution backend ("plain" | "stream"); ``None`` lets
         the scheduler choose from the footprint vs. the device budget.
+    deadline_seconds : SLO budget measured from submission (0 = none).  At
+        admission the scheduler models the job's completion time from the
+        observed init/step costs and *rejects* the job outright if the
+        model says the deadline cannot be met — failing fast beats burning
+        device time on a reconstruction that will be late anyway.
     """
 
     algorithm: str
@@ -64,6 +69,7 @@ class ReconJob:
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     memory_hint_bytes: int = 0
     mode: Optional[str] = None
+    deadline_seconds: float = 0.0
     job_id: str = ""
 
     def __post_init__(self):

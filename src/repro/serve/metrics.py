@@ -34,6 +34,7 @@ class ServeMetrics:
     preemptions: int = 0
     steps: int = 0
     streamed_jobs: int = 0
+    deadline_rejected: int = 0      # jobs refused by deadline admission
 
     step_seconds: List[float] = dataclasses.field(default_factory=list)
     latencies: List[float] = dataclasses.field(default_factory=list)
@@ -72,6 +73,7 @@ class ServeMetrics:
             "completed": self.completed,
             "failed": self.failed,
             "preemptions": self.preemptions,
+            "deadline_rejected": self.deadline_rejected,
             "steps": self.steps,
             "streamed_jobs": self.streamed_jobs,
             "wall_seconds": self.wall_seconds,

@@ -54,6 +54,16 @@ class PriorityJobQueue:
                 heapq.heappop(self._heap)   # drop cancelled/stale entry
             return None
 
+    def pending_records(self) -> List[JobRecord]:
+        """Thread-safe snapshot of the queued (non-cancelled) records in
+        pop order — the scheduler persists exactly these on a snapshot."""
+        with self._lock:
+            live = [(entry, self._records[entry[2]])
+                    for entry in self._heap
+                    if entry[2] in self._records
+                    and self._records[entry[2]].status != JobStatus.CANCELLED]
+            return [rec for _, rec in sorted(live, key=lambda t: t[0])]
+
     def cancel(self, job_id: str) -> bool:
         """Mark a queued job cancelled (lazily removed on pop)."""
         with self._lock:

@@ -10,33 +10,68 @@ placement fits.
 
 Execution model
 ---------------
-Jobs advance in *quanta*: each quantum, every running job is stepped by one
-outer iteration of its algorithm (fair-share round-robin), so a long
-low-priority reconstruction cannot starve short jobs that land next to it.
-Priorities order admission, and a high-priority arrival that does not fit
-preempts the lowest-priority running job: its resumable state (see
+Jobs advance in *quanta* of outer iterations.  Under the cooperative
+:meth:`Scheduler.run` loop one thread steps every running job in turn;
+under the threaded :class:`~repro.serve.driver.AsyncDriver` one worker
+thread per device claims and steps that device's resident jobs
+concurrently (the paper's "executed for all available GPUs
+simultaneously").  Either way the share is *weighted*: a job receives step
+quanta proportional to ``1 + priority``, so a long low-priority
+reconstruction cannot starve short jobs that land next to it, and urgent
+work drains faster even when nothing needs evicting.
+
+Priorities also order admission.  A high-priority arrival that does not
+fit preempts strictly-lower-priority running work — but only on the single
+device where evicting the cheapest victim set actually makes the arrival
+fit (freed bytes on *different* devices never combine, so pool-wide
+eviction would kill jobs to no effect).  A victim's resumable state (see
 ``repro.core.algorithms.stepwise``) is checkpointed to host memory, its
 device reservation is released, and it re-enters the queue with its
 original position, resuming later with bit-identical results.
 
+Deadline admission: a job may carry ``deadline_seconds``; at admission the
+scheduler models its completion time from the observed init/step costs
+(EMAs over previous jobs) and rejects it outright if the model says the
+deadline cannot be met.
+
 A :class:`~repro.checkpoint.preemption.PreemptionGuard` can be attached;
-when the guard fires (SIGTERM on a cloud host), the scheduler drains at the
-next quantum boundary: all running jobs are checkpointed and requeued, so a
-restarted scheduler resumes them without losing completed iterations.
+when the guard fires (SIGTERM on a cloud host), the scheduler drains at
+the next step boundary: all running jobs are checkpointed and requeued,
+and — when a snapshot directory is configured — every parked job is
+persisted through :mod:`repro.checkpoint.sharded` (manifest + COMMIT
+marker, one directory per job), so a *restarted process* rebuilds the
+queue with :meth:`Scheduler.restore` and resumes bit-identically.
 
 The device pool is either real (one slot per JAX device) or simulated
 (slots with a byte budget only) — placement logic is identical, which is
 how the tests drive a "multi-GPU" pool on a CPU host.
+
+All public methods are thread-safe: one re-entrant lock guards every
+mutation of the pool / records / running set (the job queue carries its
+own lock); executor steps themselves run *outside* the lock so device
+compute genuinely overlaps across worker threads.  Known limitation:
+executor *init* (data-ref resolution + operator build/JIT) still runs
+inside the admission critical section, so a first-seen geometry briefly
+stalls claims on other slots — the shared operator cache makes repeats
+cheap; moving init out of the lock is a ROADMAP item.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import json
+import os
+import threading
 import time
-from typing import Any, Dict, List, Optional, Sequence, Set
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
+import numpy as np
+
+from ..checkpoint.sharded import (latest_step, manifest_target,
+                                  restore_checkpoint, save_checkpoint)
 from ..core.algorithms.stepwise import get_algorithm
+from ..core.geometry import ConeGeometry
 from ..core.splitting import MemoryModel, plan_backward, plan_forward
 from .executor import JobExecutor
 from .job import JobRecord, JobStatus, ReconJob
@@ -44,6 +79,12 @@ from .metrics import ServeMetrics
 from .queue import PriorityJobQueue
 
 F32 = 4
+
+
+def fair_share_weight(priority: int) -> int:
+    """Step quanta awarded per scheduling round: proportional to priority
+    (floor 1 so zero/negative priorities still make progress)."""
+    return max(1, 1 + priority)
 
 # Peak live arrays per algorithm: (volume-sized, projection-set-sized).
 # Used for the *resident* footprint of in-core jobs; streaming jobs are
@@ -179,6 +220,10 @@ class _Running:
     record: JobRecord
     executor: JobExecutor
     slot: DeviceSlot
+    # -- async-driver bookkeeping (all mutated under the scheduler lock) --
+    claimed: bool = False             # a worker thread is mid-step
+    preempt_requested: bool = False   # park at the next step boundary
+    vtime: float = 0.0                # stride-scheduling virtual time
 
 
 class Scheduler:
@@ -196,32 +241,49 @@ class Scheduler:
                  n_devices: int = 1,
                  memory: Optional[MemoryModel] = None,
                  metrics: Optional[ServeMetrics] = None,
-                 guard=None):
+                 guard=None,
+                 snapshot_dir: Optional[str] = None):
         self.pool = pool or DevicePool(n_devices, memory)
         self.queue = PriorityJobQueue()
         self.records: Dict[str, JobRecord] = {}
         self.running: Dict[str, _Running] = {}
         self.metrics = metrics or ServeMetrics()
         self.guard = guard
+        self.snapshot_dir = snapshot_dir
         self._seq = itertools.count()
+        self._lock = threading.RLock()
+        # admission-model cost estimates (EMAs over observed jobs)
+        self._step_ema: Optional[float] = None
+        self._init_ema: Optional[float] = None
+        self._ema_alpha = 0.3
+        # per-job progress fingerprint at last snapshot (dedups the
+        # periodic snapshot's disk writes for unchanged parked jobs)
+        self._snapshotted: Dict[str, tuple] = {}
 
     # ---- client API --------------------------------------------------------
 
     def submit(self, job: ReconJob) -> str:
         get_algorithm(job.algorithm)   # fail fast on unknown algorithms
-        rec = JobRecord(job=job, seq=next(self._seq),
-                        submit_time=time.monotonic())
-        self.records[job.job_id] = rec
-        self.queue.push(rec)
-        self.metrics.submitted += 1
+        with self._lock:
+            rec = JobRecord(job=job, seq=next(self._seq),
+                            submit_time=time.monotonic())
+            self.records[job.job_id] = rec
+            self.queue.push(rec)
+            self.metrics.submitted += 1
         return job.job_id
 
     def cancel(self, job_id: str) -> bool:
         """Cancel a queued (not yet running) job."""
-        ok = self.queue.cancel(job_id)
-        if ok:
-            self.metrics.cancelled += 1
-        return ok
+        with self._lock:
+            ok = self.queue.cancel(job_id)
+            if ok:
+                self.metrics.cancelled += 1
+                rec = self.records.get(job_id)
+                if rec is not None:
+                    # a snapshot may have persisted this job while parked;
+                    # stale it out so restore() cannot resurrect it
+                    self._mark_terminal_on_disk(rec)
+            return ok
 
     def result(self, job_id: str):
         rec = self.records[job_id]
@@ -232,7 +294,11 @@ class Scheduler:
 
     @property
     def idle(self) -> bool:
-        return not self.queue and not self.running
+        # under the lock: admission pops + places in one critical section,
+        # so a job mid-admission (in neither queue nor running) can never
+        # be observed as "all done" by a concurrent waiter
+        with self._lock:
+            return not self.queue and not self.running
 
     # ---- placement ---------------------------------------------------------
 
@@ -241,14 +307,37 @@ class Scheduler:
         rec.error = msg
         rec.end_time = time.monotonic()
         self.metrics.failed += 1
+        self._mark_terminal_on_disk(rec)
+
+    def _mark_terminal_on_disk(self, rec: JobRecord) -> None:
+        """Flip a previously-snapshotted job's spec to its terminal status
+        so a later :meth:`restore` does not resurrect stale parked state
+        for work that already finished."""
+        if self.snapshot_dir is None:
+            return
+        spec_path = os.path.join(self.snapshot_dir, "jobs",
+                                 rec.job.job_id, "spec.json")
+        if not os.path.isfile(spec_path):
+            return
+        try:
+            with open(spec_path) as f:
+                spec = json.load(f)
+            spec["status"] = rec.status.value
+            tmp = spec_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(spec, f, indent=1)
+            os.replace(tmp, spec_path)
+        except (OSError, ValueError):
+            # snapshot dir vanished or spec corrupt: nothing to stale-out
+            pass
 
     def _place(self, rec: JobRecord) -> bool:
         """Try to admit one record onto the pool.  Returns True if the
         record was consumed (placed, completed trivially, or failed)."""
         try:
             fp = estimate_job_footprint(rec.job, self.pool.memory)
-        except MemoryError as e:
-            self._fail(rec, f"unplannable under device budget: {e}")
+        except Exception as e:   # bad geometry/budget is this tenant's fault
+            self._fail(rec, f"unplannable under device budget: {e!r}")
             return True
         if fp.bytes_on_device > self.pool.fits_nowhere_bytes:
             self._fail(rec, f"footprint {fp.bytes_on_device} B exceeds the "
@@ -259,6 +348,7 @@ class Scheduler:
         if slot is None:
             return False
 
+        executor = None
         try:
             # one tenant's bad geometry / data ref / algorithm params must
             # fail that job alone, never the scheduler serving the others
@@ -269,8 +359,15 @@ class Scheduler:
                          else None))
             executor.start(checkpoint=rec.checkpoint)
         except Exception as e:
+            if executor is not None:
+                # start() may have built device state before raising --
+                # drop it so the buffers are reclaimed
+                executor.release()
             self._fail(rec, f"init failed: {e!r}")
             return True
+        self._init_ema = (executor.init_seconds if self._init_ema is None
+                          else self._ema_alpha * executor.init_seconds
+                          + (1 - self._ema_alpha) * self._init_ema)
         rec.checkpoint = None
         rec.status = JobStatus.RUNNING
         rec.device = slot.index
@@ -282,8 +379,19 @@ class Scheduler:
             rec.start_time = time.monotonic()
         slot.busy_seconds += executor.init_seconds
         self.pool.commit(slot, rec.job.job_id, fp.bytes_on_device)
-        self.running[rec.job.job_id] = _Running(rec, executor, slot)
+        # join stride scheduling at the slot's current virtual time: a
+        # newcomer starting at vtime 0 would monopolize the device until
+        # it "caught up" with long-resident jobs
+        peers = [r.vtime for r in self.running.values() if r.slot is slot]
+        self.running[rec.job.job_id] = _Running(
+            rec, executor, slot, vtime=min(peers, default=0.0))
         return True
+
+    def admit(self) -> None:
+        """Thread-safe admission pass (the driver's scheduler loop calls
+        this; the cooperative loop calls it at each quantum)."""
+        with self._lock:
+            self._try_admit()
 
     def _try_admit(self) -> None:
         """Admit queued jobs in priority order; on a full pool, preempt
@@ -294,6 +402,8 @@ class Scheduler:
             rec = self.queue.pop()
             if rec is None:
                 return
+            if self._reject_for_deadline(rec):
+                continue
             if self._place(rec):
                 continue
             if self._preempt_for(rec):
@@ -303,20 +413,107 @@ class Scheduler:
             self.queue.push(rec)
             return
 
+    # ---- deadline admission ------------------------------------------------
+
+    def modeled_completion_seconds(self, rec: JobRecord) -> Optional[float]:
+        """Modeled submit-to-completion time if ``rec`` were admitted now:
+        elapsed queue wait + modeled (re)init + remaining iterations at the
+        observed step cost.  ``None`` until a step has been observed."""
+        if self._step_ema is None:
+            return None
+        alg = get_algorithm(rec.job.algorithm)
+        total = max(1, rec.job.n_iter) if alg.iterative else 1
+        remaining = max(0, total - rec.iterations_done)
+        elapsed = time.monotonic() - rec.submit_time
+        return elapsed + (self._init_ema or 0.0) + remaining * self._step_ema
+
+    def _reject_for_deadline(self, rec: JobRecord) -> bool:
+        """True if the record was consumed by deadline admission control."""
+        if rec.job.deadline_seconds <= 0:
+            return False
+        est = self.modeled_completion_seconds(rec)
+        if est is not None and est > rec.job.deadline_seconds:
+            self.metrics.deadline_rejected += 1
+            self._fail(rec, f"deadline {rec.job.deadline_seconds:.3f}s "
+                            f"unmeetable: modeled completion {est:.3f}s")
+            return True
+        return False
+
+    # ---- preemption --------------------------------------------------------
+
+    def _slot_eviction_plan(self, slot: DeviceSlot, rec: JobRecord,
+                            needed: int) -> Optional[List[_Running]]:
+        """Cheapest set of strictly-lower-priority victims on ``slot``
+        whose eviction makes ``rec`` fit there, or None if no set does.
+        Victims already flagged for preemption count as free-in-flight
+        (their bytes will return at the next step boundary) and are never
+        evicted twice."""
+        free = slot.free_bytes
+        n_jobs = len(slot.jobs)
+        candidates = []
+        for run in self.running.values():
+            if run.slot is not slot:
+                continue
+            if run.preempt_requested:
+                free += run.record.footprint_bytes
+                n_jobs -= 1
+            elif run.record.job.priority < rec.job.priority:
+                candidates.append(run)
+        # cheapest first: lowest priority, then latest arrival
+        candidates.sort(key=lambda r: (r.record.job.priority,
+                                       -r.record.seq))
+        cap = self.pool.max_jobs_per_device
+
+        def fits():
+            return free >= needed and (cap is None or n_jobs < cap)
+
+        victims: List[_Running] = []
+        while not fits() and candidates:
+            run = candidates.pop(0)
+            victims.append(run)
+            free += run.record.footprint_bytes
+            n_jobs -= 1
+        return victims if fits() else None
+
     def _preempt_for(self, rec: JobRecord) -> bool:
-        """Evict lowest-priority running jobs (strictly below ``rec``'s
-        priority) until ``rec`` fits; undo nothing if it never fits."""
-        while True:
-            victims = [r for r in self.running.values()
-                       if r.record.job.priority < rec.job.priority]
+        """Per-device preemption: pick the slot where evicting the
+        cheapest set of strictly-lower-priority victims makes ``rec``
+        fit, and evict only those.  Jobs on devices that could never make
+        room keep running.  Returns False (leaving ``rec`` for the next
+        admission pass) when the only viable victims are mid-step — they
+        are flagged and park at their step boundary."""
+        try:
+            fp = estimate_job_footprint(rec.job, self.pool.memory)
+        except Exception:
+            return False      # _place already failed the unplannable job
+        needed = fp.bytes_on_device
+
+        best: Optional[Tuple[tuple, DeviceSlot, List[_Running]]] = None
+        for slot in self.pool.slots:
+            victims = self._slot_eviction_plan(slot, rec, needed)
+            if victims is None:
+                continue
             if not victims:
+                # fits once in-flight preemptions land: just wait
                 return False
-            victim = min(victims,
-                         key=lambda r: (r.record.job.priority,
-                                        -r.record.seq))
-            self._preempt(victim)
-            if self._place(rec):
-                return True
+            score = (len(victims),
+                     max(v.record.job.priority for v in victims),
+                     slot.index)
+            if best is None or score < best[0]:
+                best = (score, slot, victims)
+        if best is None:
+            return False
+        _, _, victims = best
+        deferred = False
+        for run in victims:
+            if run.claimed:
+                run.preempt_requested = True   # park at the step boundary
+                deferred = True
+            else:
+                self._preempt(run)
+        if deferred:
+            return False
+        return self._place(rec)
 
     def _preempt(self, run: _Running) -> None:
         rec = run.record
@@ -336,51 +533,126 @@ class Scheduler:
         rec.result = run.executor.result()
         rec.status = JobStatus.COMPLETED
         rec.end_time = time.monotonic()
+        self._mark_terminal_on_disk(rec)
         self.metrics.record_completion(rec.latency, rec.queue_wait)
         run.executor.release()
         self.pool.release(run.slot, rec.job.job_id, rec.footprint_bytes)
         del self.running[rec.job.job_id]
 
+    def _observe_step(self, run: _Running, dt: float) -> None:
+        run.slot.busy_seconds += dt
+        self.metrics.record_step(dt)
+        self._step_ema = (dt if self._step_ema is None
+                          else self._ema_alpha * dt
+                          + (1 - self._ema_alpha) * self._step_ema)
+
+    def _fail_running(self, run: _Running, err: Exception) -> None:
+        rec = run.record
+        self._fail(rec, f"step failed: {err!r}")
+        run.executor.release()
+        self.pool.release(run.slot, rec.job.job_id, rec.footprint_bytes)
+        del self.running[rec.job.job_id]
+
     def step_quantum(self) -> int:
-        """One scheduling quantum: admit, then advance every running job by
-        one outer iteration (fair-share round-robin).  Returns the number
-        of iteration steps executed."""
-        self._try_admit()
-        executed = 0
-        # deterministic order: device index, then submission order
-        for run in sorted(self.running.values(),
-                          key=lambda r: (r.slot.index, r.record.seq)):
-            if run.record.job.job_id not in self.running:
-                continue   # evicted mid-quantum (defensive)
+        """One cooperative scheduling quantum: admit, then advance every
+        running job by its fair share of outer iterations — step quanta
+        proportional to ``1 + priority``.  Returns the number of iteration
+        steps executed."""
+        with self._lock:
+            self._try_admit()
+            executed = 0
+            # deterministic order: device index, then submission order
+            for run in sorted(self.running.values(),
+                              key=lambda r: (r.slot.index, r.record.seq)):
+                if run.record.job.job_id not in self.running:
+                    continue   # evicted mid-quantum (defensive)
+                rec = run.record
+                for _ in range(fair_share_weight(rec.job.priority)):
+                    if run.executor.done:
+                        break
+                    t0 = time.monotonic()
+                    try:
+                        rec.iterations_done = run.executor.step()
+                    except Exception as e:
+                        self._fail_running(run, e)
+                        break
+                    self._observe_step(run, time.monotonic() - t0)
+                    executed += 1
+                if rec.job.job_id in self.running and run.executor.done:
+                    try:
+                        self._complete(run)
+                    except Exception as e:   # tenant finalize() failure
+                        self._fail_running(run, e)
+            return executed
+
+    # ---- async-driver execution API ---------------------------------------
+
+    def claim_step(self, slot: DeviceSlot) -> Optional[_Running]:
+        """Claim the next job to step on ``slot`` for a worker thread.
+
+        Weighted fair share via stride scheduling: each claim advances the
+        job's virtual time by ``1 / weight(priority)``, and the runnable
+        job with the smallest virtual time wins — so over any window a
+        job's share of the device is proportional to its weight.  Returns
+        None when nothing on the slot is runnable.  The caller MUST pair
+        every claim with :meth:`finish_step`.
+        """
+        with self._lock:
+            runnable = [r for r in self.running.values()
+                        if r.slot is slot and not r.claimed
+                        and not r.preempt_requested
+                        and not r.executor.done]
+            if not runnable:
+                return None
+            run = min(runnable, key=lambda r: (r.vtime, r.record.seq))
+            run.claimed = True
+            run.vtime += 1.0 / fair_share_weight(run.record.job.priority)
+            return run
+
+    def finish_step(self, run: _Running, dt: float,
+                    err: Optional[Exception] = None) -> None:
+        """Account for a completed worker step (taken *outside* the lock)
+        and resolve any state transition that queued up during it:
+        failure, deferred preemption, or completion."""
+        with self._lock:
+            run.claimed = False
             rec = run.record
-            if not run.executor.done:
-                t0 = time.monotonic()
-                try:
-                    rec.iterations_done = run.executor.step()
-                except Exception as e:
-                    self._fail(rec, f"step failed: {e!r}")
-                    run.executor.release()
-                    self.pool.release(run.slot, rec.job.job_id,
-                                      rec.footprint_bytes)
-                    del self.running[rec.job.job_id]
-                    continue
-                dt = time.monotonic() - t0
-                run.slot.busy_seconds += dt
-                self.metrics.record_step(dt)
-                executed += 1
-            if run.executor.done:
-                self._complete(run)
-        return executed
+            if rec.job.job_id not in self.running:     # defensive
+                return
+            if err is not None:
+                self._fail_running(run, err)
+                return
+            rec.iterations_done = run.executor.iterations_done
+            self._observe_step(run, dt)
+            try:
+                if run.executor.done:
+                    # done wins over a pending preempt flag: parking a
+                    # finished job would persist it as resumable work and
+                    # pay a full re-init just to mark it done later
+                    run.preempt_requested = False
+                    self._complete(run)
+                elif run.preempt_requested:
+                    run.preempt_requested = False
+                    self._preempt(run)
+            except Exception as e:
+                # a tenant's finalize()/checkpoint() must fail that job
+                # alone, never kill the worker thread servicing the slot
+                if rec.job.job_id in self.running:
+                    self._fail_running(run, e)
+
+    # ---- cooperative loop / drain -----------------------------------------
 
     def run(self, max_quanta: Optional[int] = None) -> ServeMetrics:
-        """Drive the system until all work is done (or the guard fires, or
-        ``max_quanta`` is reached).  Safe to call again to resume."""
+        """Drive the system to completion on the calling thread (or until
+        the guard fires / ``max_quanta``).  Safe to call again to resume.
+        For true per-device overlap use
+        :class:`repro.serve.driver.AsyncDriver` instead."""
         if self.metrics.wall_start is None:
             self.metrics.wall_start = time.monotonic()
         quanta = 0
         while not self.idle:
             if self.guard is not None and self.guard.preempted:
-                self.drain()
+                self.drain(self.snapshot_dir)
                 break
             if max_quanta is not None and quanta >= max_quanta:
                 break
@@ -389,14 +661,258 @@ class Scheduler:
         self.metrics.wall_end = time.monotonic()
         return self.metrics
 
-    def drain(self) -> int:
+    def drain(self, ckpt_dir: Optional[str] = None,
+              timeout: float = 60.0) -> int:
         """Checkpoint + requeue every running job (host preemption path).
-        Returns how many jobs were parked."""
-        parked = 0
-        for run in list(self.running.values()):
-            self._preempt(run)
-            parked += 1
+
+        Jobs mid-step under the async driver are flagged and park at
+        their step boundary; this call waits (up to ``timeout``) for the
+        running set to empty.  If ``ckpt_dir`` is given, every parked job
+        is then persisted there (see :meth:`snapshot`), making the drain
+        durable across process death.  Returns how many jobs were parked.
+        """
+        deadline = time.monotonic() + timeout
+        before: Optional[Set[str]] = None
+        while True:
+            with self._lock:
+                if before is None:
+                    before = set(self.running)
+                for run in list(self.running.values()):
+                    if run.claimed:
+                        run.preempt_requested = True
+                    else:
+                        self._preempt(run)
+                if not self.running:
+                    break
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"drain: {len(self.running)} jobs still mid-step after "
+                    f"{timeout}s")
+            time.sleep(0.001)
+        with self._lock:
+            parked = sum(
+                1 for jid in before
+                if self.records[jid].status is JobStatus.PREEMPTED)
+            if ckpt_dir is not None:
+                self.snapshot(ckpt_dir)
         return parked
+
+    # ---- durable snapshots / restore --------------------------------------
+
+    def snapshot(self, ckpt_dir: str) -> int:
+        """Persist every *parked* job (queued, with or without a step-wise
+        checkpoint) under ``ckpt_dir`` — one directory per job, each write
+        going through :func:`repro.checkpoint.sharded.save_checkpoint`
+        (manifest + COMMIT marker, atomic rename), so a crash mid-snapshot
+        can never corrupt an earlier snapshot of the same job.
+
+        Only the payload *capture* holds the scheduler lock; the disk
+        writes happen outside it, so worker threads keep stepping while a
+        periodic snapshot streams arrays to disk.  A job whose persisted
+        progress hasn't changed since the last snapshot from this
+        scheduler is skipped (a parked job would otherwise rewrite its
+        full projections array every period).  Returns the number of jobs
+        persisted."""
+        with self._lock:
+            payloads = []
+            for rec in self.queue.pending_records():
+                fingerprint = (rec.iterations_done, rec.status.value,
+                               rec.preemptions)
+                if self._snapshotted.get(rec.job.job_id) == fingerprint:
+                    continue
+                payloads.append(_job_payload(rec) + (fingerprint,))
+        for job_id, spec, tree, step, fingerprint in payloads:
+            _write_job(ckpt_dir, job_id, spec, tree, step)
+            with self._lock:
+                self._snapshotted[job_id] = fingerprint
+        return len(payloads)
+
+    def restore(self, ckpt_dir: str,
+                data_refs: Optional[Dict[str, Callable]] = None) -> int:
+        """Rebuild queue + records from a snapshot directory after process
+        death.  Each restored job re-enters the queue with its original
+        sequence number and its persisted step-wise checkpoint, so it
+        resumes bit-identically to an uninterrupted run.
+
+        ``data_refs`` supplies projection callables for jobs whose data
+        was a lazy ref at snapshot time (refs cannot be persisted).
+
+        Two-phase: every job directory is loaded and validated before the
+        scheduler is touched, so a missing data ref (which raises) leaves
+        it unchanged and the call can simply be retried.  Returns the
+        number of jobs restored."""
+        jobs_root = os.path.join(ckpt_dir, "jobs")
+        if not os.path.isdir(jobs_root):
+            return 0
+        loaded = []
+        for job_id in sorted(os.listdir(jobs_root)):
+            rec = _load_job(os.path.join(jobs_root, job_id), data_refs or {})
+            if rec is not None:
+                loaded.append(rec)
+        with self._lock:
+            dupes = [r.job.job_id for r in loaded
+                     if r.job.job_id in self.records]
+            if dupes:
+                raise ValueError(
+                    f"restore: jobs already known to this scheduler: "
+                    f"{dupes}")
+            for rec in loaded:
+                self.records[rec.job.job_id] = rec
+                self.queue.push(rec)
+                self.metrics.submitted += 1
+            if loaded:
+                current = next(self._seq)
+                self._seq = itertools.count(
+                    max(current, max(r.seq for r in loaded) + 1))
+        return len(loaded)
 
     def summary(self) -> Dict:
         return self.metrics.summary(device_busy=self.pool.busy_clocks())
+
+
+# --------------------------------------------------------------------------
+# durable job persistence (one directory per job under <ckpt_dir>/jobs/)
+#
+#   jobs/<job_id>/
+#     spec.json              # job spec + record metadata (atomic replace)
+#     step_XXXXXXXX/         # save_checkpoint output: manifest + COMMIT
+#       manifest.json
+#       leaf_*.npy           # angles, projections, state.<field> leaves
+#       COMMIT
+#
+# The step number is the job's completed iteration count, so repeated
+# snapshots of a progressing job accumulate (GC keeps the latest two) and
+# latest_step() always names the most advanced committed state.
+# --------------------------------------------------------------------------
+
+_STATE_PREFIX = "state."
+_TERMINAL = ("completed", "failed", "cancelled")
+
+
+def _scalar_tag(v) -> str:
+    """Python-type tag for a checkpoint field, so disk restore hands back
+    exactly the types the in-memory preemption path produces (np.save
+    would otherwise widen e.g. a python int into a 0-d int64 array)."""
+    if v is None:
+        return "none"
+    if isinstance(v, bool):
+        return "bool"
+    if isinstance(v, int):
+        return "int"
+    if isinstance(v, float):
+        return "float"
+    return "array"
+
+
+def _job_payload(rec: JobRecord) -> Tuple[str, Dict, Dict[str, Any], int]:
+    """Capture everything :func:`_write_job` needs, under the scheduler
+    lock: a shallow copy of the checkpoint dict (the arrays themselves are
+    never mutated, only replaced) so a concurrent re-admission clearing
+    ``rec.checkpoint`` cannot race the disk write."""
+    job = rec.job
+    tree: Dict[str, Any] = {"angles": np.asarray(job.angles, np.float32)}
+    projections_persisted = not callable(job.projections)
+    if projections_persisted:
+        tree["projections"] = np.asarray(job.projections)
+    scalar_types: Dict[str, str] = {}
+    if rec.checkpoint is not None:
+        for k, v in rec.checkpoint.items():
+            tag = _scalar_tag(v)
+            scalar_types[k] = tag
+            if tag != "none":      # None fields rebuilt from the tag alone
+                tree[_STATE_PREFIX + k] = v
+    spec = {
+        "job_id": job.job_id,
+        "algorithm": job.algorithm,
+        "geo": dataclasses.asdict(job.geo),
+        "n_iter": job.n_iter,
+        "priority": job.priority,
+        "params": job.params,
+        "memory_hint_bytes": job.memory_hint_bytes,
+        "mode": job.mode,
+        "deadline_seconds": job.deadline_seconds,
+        "seq": rec.seq,
+        "status": rec.status.value,
+        "iterations_done": rec.iterations_done,
+        "preemptions": rec.preemptions,
+        "has_state": rec.checkpoint is not None,
+        "scalar_types": scalar_types,
+        "projections_persisted": projections_persisted,
+    }
+    return job.job_id, spec, tree, rec.iterations_done
+
+
+def _write_job(ckpt_dir: str, job_id: str, spec: Dict,
+               tree: Dict[str, Any], step: int) -> None:
+    job_dir = os.path.join(ckpt_dir, "jobs", job_id)
+    os.makedirs(job_dir, exist_ok=True)
+    # step data commits before the spec: a crash in between leaves an old
+    # spec next to a newer committed step (harmless — _load_job trusts the
+    # committed step for progress), never a new spec pointing at state
+    # that was never committed
+    save_checkpoint(job_dir, step=step, tree=tree, keep=2)
+    tmp = os.path.join(job_dir, "spec.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(spec, f, indent=1)
+    os.replace(tmp, os.path.join(job_dir, "spec.json"))
+
+
+def _geo_from_spec(d: Dict) -> ConeGeometry:
+    return ConeGeometry(**{k: tuple(v) if isinstance(v, list) else v
+                           for k, v in d.items()})
+
+
+def _load_job(job_dir: str,
+              data_refs: Dict[str, Callable]) -> Optional[JobRecord]:
+    spec_path = os.path.join(job_dir, "spec.json")
+    if not os.path.isfile(spec_path):
+        return None
+    with open(spec_path) as f:
+        spec = json.load(f)
+    if spec["status"] in _TERMINAL:
+        return None
+    step = latest_step(job_dir)
+    if step is None:
+        return None            # never committed: nothing trustworthy
+    tree = restore_checkpoint(job_dir, step, manifest_target(job_dir, step))
+    angles = np.asarray(tree.pop("angles"), np.float32)
+    if spec["projections_persisted"]:
+        projections: Any = np.asarray(tree.pop("projections"))
+    else:
+        projections = data_refs.get(spec["job_id"])
+        if projections is None:
+            raise ValueError(
+                f"restore: job {spec['job_id']} was submitted with a lazy "
+                f"data ref, which cannot be persisted; pass "
+                f"data_refs={{{spec['job_id']!r}: <callable>}}")
+    ckpt: Optional[Dict[str, Any]] = None
+    if spec["has_state"]:
+        ckpt = {}
+        for name, tag in spec["scalar_types"].items():
+            if tag == "none":
+                ckpt[name] = None
+            elif tag == "bool":
+                ckpt[name] = bool(tree[_STATE_PREFIX + name])
+            elif tag == "int":
+                ckpt[name] = int(tree[_STATE_PREFIX + name])
+            elif tag == "float":
+                ckpt[name] = float(tree[_STATE_PREFIX + name])
+            else:
+                ckpt[name] = np.asarray(tree[_STATE_PREFIX + name])
+    job = ReconJob(spec["algorithm"], _geo_from_spec(spec["geo"]), angles,
+                   projections, n_iter=spec["n_iter"],
+                   priority=spec["priority"], params=spec["params"],
+                   memory_hint_bytes=spec["memory_hint_bytes"],
+                   mode=spec["mode"],
+                   deadline_seconds=spec["deadline_seconds"],
+                   job_id=spec["job_id"])
+    return JobRecord(
+        job=job, seq=spec["seq"],
+        status=JobStatus.PREEMPTED if ckpt is not None else JobStatus.PENDING,
+        submit_time=time.monotonic(),
+        # progress comes from the *committed* step, not the spec: the two
+        # can disagree only across a crash window, and the step directory
+        # is what the job will actually resume from
+        iterations_done=step,
+        preemptions=spec["preemptions"],
+        checkpoint=ckpt)

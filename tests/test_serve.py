@@ -1,6 +1,15 @@
 """repro.serve: queue ordering, planner-driven placement, step-wise
-equivalence, preemption, and end-to-end concurrent mixed-size serving."""
+equivalence, preemption (per-device), weighted fair share, deadline
+admission, the threaded AsyncDriver, durable kill/rebuild resume, and
+end-to-end concurrent mixed-size serving."""
 
+import dataclasses
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -10,8 +19,9 @@ from repro.core.algorithms import (asd_pocs, cgls, fista_tv, ossart,
 from repro.core.geometry import ConeGeometry, circular_angles
 from repro.core.splitting import MemoryModel
 from repro.checkpoint import PreemptionGuard
-from repro.serve import (DevicePool, JobStatus, PriorityJobQueue, ReconJob,
-                         Scheduler, estimate_job_footprint)
+from repro.serve import (AsyncDriver, DevicePool, JobStatus, JobExecutor,
+                         PriorityJobQueue, ReconJob, Scheduler,
+                         estimate_job_footprint, percentile)
 from repro.serve.job import JobRecord
 
 GEO = ConeGeometry.nice(16)
@@ -70,6 +80,84 @@ def test_queue_cancel():
     assert not q.cancel("nope")
     assert q.pop().job.job_id == b.job_id
     assert len(q) == 0
+
+
+def test_queue_concurrent_submit_cancel_pop():
+    """Hammer the queue from several threads: every job must come out
+    exactly once (popped XOR successfully cancelled), with no errors."""
+    q = PriorityJobQueue()
+    n_per_thread, n_submitters = 150, 2
+    submitted = [[] for _ in range(n_submitters)]
+    popped, cancelled = [], []
+    errors = []
+    done = threading.Event()
+
+    def submitter(t):
+        try:
+            for i in range(n_per_thread):
+                job = _job(prio=i % 5)
+                q.push(_rec(job, t * n_per_thread + i))
+                submitted[t].append(job.job_id)
+        except Exception as e:           # pragma: no cover
+            errors.append(e)
+
+    def canceller():
+        try:
+            while not done.is_set():
+                for t in range(n_submitters):
+                    for jid in submitted[t][-3:]:
+                        if q.cancel(jid):
+                            cancelled.append(jid)
+                time.sleep(0)
+        except Exception as e:           # pragma: no cover
+            errors.append(e)
+
+    def popper(out):
+        try:
+            while True:
+                rec = q.pop()
+                if rec is not None:
+                    out.append(rec.job.job_id)
+                elif done.is_set():
+                    return
+        except Exception as e:           # pragma: no cover
+            errors.append(e)
+
+    outs = [[], []]
+    threads = ([threading.Thread(target=submitter, args=(t,))
+                for t in range(n_submitters)]
+               + [threading.Thread(target=canceller)]
+               + [threading.Thread(target=popper, args=(o,)) for o in outs])
+    for t in threads:
+        t.start()
+    for t in threads[:n_submitters]:
+        t.join()
+    time.sleep(0.05)                     # let poppers/canceller drain
+    done.set()
+    for t in threads[n_submitters:]:
+        t.join()
+
+    assert not errors
+    popped = outs[0] + outs[1]
+    all_ids = {jid for ids in submitted for jid in ids}
+    assert len(popped) == len(set(popped))          # no duplicates
+    assert set(popped).isdisjoint(cancelled)        # popped XOR cancelled
+    assert set(popped) | set(cancelled) == all_ids  # nothing lost
+    assert len(q) == 0
+
+
+# --------------------------------------------------------------------------
+# metrics
+# --------------------------------------------------------------------------
+
+def test_percentile_edge_cases():
+    assert percentile([], 50) == 0.0
+    for p in (0, 50, 100):               # single sample: always that sample
+        assert percentile([3.5], p) == 3.5
+    xs = [4.0, 1.0, 3.0, 2.0]
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 4.0
+    assert percentile(xs, 50) == 3.0     # nearest-rank on the sorted list
 
 
 # --------------------------------------------------------------------------
@@ -275,5 +363,318 @@ def test_concurrent_mixed_size_jobs_match_solo_runs():
                                  subset_size=16))
     got_big = sched.result(jids[3])
     np.testing.assert_allclose(got_big, solo_big, rtol=2e-3, atol=2e-3)
+
+
+# --------------------------------------------------------------------------
+# step accounting under async dispatch
+# --------------------------------------------------------------------------
+
+def test_step_time_includes_compute_not_just_dispatch(monkeypatch):
+    """JAX dispatch is async: without blocking on the state's arrays the
+    timed 'step' is just the enqueue.  A sleep-instrumented kernel makes
+    the difference observable: the measured step must take at least the
+    kernel's sleep."""
+    from repro.core.algorithms import stepwise
+
+    delay = 0.1
+
+    @dataclasses.dataclass
+    class SleepyState:
+        x: jnp.ndarray
+        it: int = 0
+
+    def sleepy_init(proj, geo, angles, op=None, **_params):
+        return SleepyState(x=jnp.zeros(geo.n_voxel, jnp.float32))
+
+    def sleepy_step(st):
+        def slow_kernel(x):
+            time.sleep(delay)
+            return x
+
+        out = jax.ShapeDtypeStruct(st.x.shape, st.x.dtype)
+        st.x = jax.jit(
+            lambda x: jax.pure_callback(slow_kernel, out, x))(st.x)
+        st.it += 1
+        return st
+
+    alg = stepwise.StepwiseAlgorithm(
+        "sleepy", sleepy_init, sleepy_step, lambda st: st.x,
+        ckpt_fields=("x", "it"))
+    monkeypatch.setitem(stepwise.REGISTRY, "sleepy", alg)
+
+    ex = JobExecutor(ReconJob("sleepy", GEO, ANGLES, PROJ, n_iter=1),
+                     mode="plain", memory=_mem(1024))
+    ex.start()
+    t0 = time.monotonic()
+    ex.step()
+    assert time.monotonic() - t0 >= delay
+
+
+def test_place_releases_executor_when_start_raises(monkeypatch):
+    released = []
+    orig_release = JobExecutor.release
+
+    def tracking_release(self):
+        released.append(self.job.job_id)
+        orig_release(self)
+
+    monkeypatch.setattr(JobExecutor, "release", tracking_release)
+    sched = Scheduler(n_devices=1)
+    bad = sched.submit(ReconJob("cgls", GEO, ANGLES,
+                                lambda: 1 / 0, n_iter=1))
+    sched.run()
+    assert sched.records[bad].status is JobStatus.FAILED
+    assert bad in released
+
+
+# --------------------------------------------------------------------------
+# weighted fair share
+# --------------------------------------------------------------------------
+
+def test_weighted_fair_share_cooperative_quantum():
+    """Per quantum, a job receives 1 + priority steps."""
+    sched = Scheduler(n_devices=1, memory=_mem(1024))
+    lo = sched.submit(_job("cgls", prio=0, n_iter=8))
+    hi = sched.submit(_job("cgls", prio=3, n_iter=8))
+    sched.step_quantum()
+    assert sched.records[hi].iterations_done == 4
+    assert sched.records[lo].iterations_done == 1
+
+
+def test_weighted_fair_share_stride_claims():
+    """The driver-facing claim API awards device steps proportional to
+    priority weights (stride scheduling over virtual time)."""
+    sched = Scheduler(n_devices=1, memory=_mem(1024))
+    lo = sched.submit(_job("cgls", prio=0, n_iter=100))
+    hi = sched.submit(_job("cgls", prio=3, n_iter=100))
+    sched.admit()
+    slot = sched.pool.slots[0]
+    counts = {lo: 0, hi: 0}
+    for _ in range(10):
+        run = sched.claim_step(slot)
+        counts[run.record.job.job_id] += 1
+        sched.finish_step(run, 0.0)     # bookkeeping only, no compute
+    assert counts[hi] == 8              # weight 4 of 5
+    assert counts[lo] == 2              # weight 1 of 5
+
+
+# --------------------------------------------------------------------------
+# per-device preemption
+# --------------------------------------------------------------------------
+
+def test_preemption_is_per_device():
+    """Freed bytes on different slots don't combine: the scheduler must
+    evict only on the one device where eviction makes the arrival fit.
+    Layout (100 KiB devices): dev0 = H(50K, prio 9) + V0(30K, prio 0);
+    dev1 = V1(80K, prio 0).  A 60K prio-5 arrival fits dev1 after
+    evicting V1, but never fits dev0 (H is higher priority) — so V0 must
+    keep running untouched."""
+    sched = Scheduler(n_devices=2, memory=_mem(100))
+    h = sched.submit(_job("cgls", prio=9, n_iter=30,
+                          memory_hint_bytes=50 * KIB))
+    v1 = sched.submit(_job("cgls", prio=0, n_iter=6,
+                           memory_hint_bytes=80 * KIB))
+    v0 = sched.submit(_job("cgls", prio=0, n_iter=6,
+                           memory_hint_bytes=30 * KIB))
+    sched.run(max_quanta=1)
+    assert sched.records[h].device == 0
+    assert sched.records[v1].device == 1
+    assert sched.records[v0].device == 0
+    p = sched.submit(_job("cgls", prio=5, n_iter=1,
+                          memory_hint_bytes=60 * KIB))
+    sched.step_quantum()
+    assert sched.records[v1].preemptions == 1      # dev1's victim parked
+    assert sched.records[v0].preemptions == 0      # dev0's job untouched
+    assert sched.records[v0].status is JobStatus.RUNNING
+    assert sched.records[p].device == 1
+    sched.run()
+    assert all(sched.records[j].status is JobStatus.COMPLETED
+               for j in (h, v1, v0, p))
+    np.testing.assert_array_equal(sched.result(v1), _mono("cgls", 6))
+
+
+# --------------------------------------------------------------------------
+# deadline-aware admission
+# --------------------------------------------------------------------------
+
+def test_deadline_admission_rejects_unmeetable_jobs():
+    sched = Scheduler(n_devices=1, memory=_mem(1024))
+    warm = sched.submit(_job("cgls", n_iter=2))    # seeds the step-cost EMA
+    sched.run()
+    late = sched.submit(_job("cgls", n_iter=50, deadline_seconds=1e-6))
+    fine = sched.submit(_job("cgls", n_iter=2, deadline_seconds=3600.0))
+    sched.run()
+    assert sched.records[warm].status is JobStatus.COMPLETED
+    assert sched.records[late].status is JobStatus.FAILED
+    assert "deadline" in sched.records[late].error
+    assert sched.records[fine].status is JobStatus.COMPLETED
+    assert sched.metrics.deadline_rejected == 1
+
+
+def test_deadline_admission_optimistic_without_observations():
+    """With no observed step costs the model abstains and admits."""
+    sched = Scheduler(n_devices=1, memory=_mem(1024))
+    jid = sched.submit(_job("cgls", n_iter=2, deadline_seconds=1e-6))
+    sched.run()
+    assert sched.records[jid].status is JobStatus.COMPLETED
+
+
+# --------------------------------------------------------------------------
+# threaded AsyncDriver
+# --------------------------------------------------------------------------
+
+def test_async_driver_matches_solo_runs_across_devices():
+    sched = Scheduler(n_devices=2, memory=_mem(220))
+    jids = [
+        sched.submit(_job("cgls", n_iter=2)),
+        sched.submit(_job("ossart", n_iter=2, params={"subset_size": 4})),
+        sched.submit(_job("cgls", n_iter=3)),
+        sched.submit(_job("fista", n_iter=2,
+                          params={"tv_iters": 3, "L": 100.0})),
+    ]
+    metrics = AsyncDriver(sched).run(timeout=300)
+    recs = [sched.records[j] for j in jids]
+    assert all(r.status is JobStatus.COMPLETED for r in recs)
+    assert metrics.completed == 4
+    busy = sched.pool.busy_clocks()
+    assert all(b > 0 for b in busy)      # both worker threads did real work
+    assert len({r.device for r in recs}) == 2
+    np.testing.assert_array_equal(sched.result(jids[0]), _mono("cgls", 2))
+    np.testing.assert_array_equal(sched.result(jids[1]), _mono("ossart", 2))
+    np.testing.assert_array_equal(sched.result(jids[2]), _mono("cgls", 3))
+    np.testing.assert_array_equal(sched.result(jids[3]), _mono("fista", 2))
+
+
+def test_async_driver_kill_rebuild_restores_bit_identical(tmp_path):
+    """Kill the threaded driver mid-run, drain durably, rebuild a fresh
+    scheduler from the on-disk snapshot (manifest + COMMIT per job), and
+    finish: final volumes are bit-identical to uninterrupted runs."""
+    ckpt_dir = str(tmp_path / "serve-ckpt")
+    s1 = Scheduler(n_devices=1, memory=_mem(100))   # one resident at a time
+    a = s1.submit(_job("ossart", n_iter=12, params={"subset_size": 4}))
+    b = s1.submit(_job("cgls", n_iter=10))
+    driver = AsyncDriver(s1)
+    driver.start()
+    deadline = time.monotonic() + 60
+    while time.monotonic() < deadline:
+        if s1.records[a].iterations_done >= 1:
+            break
+        time.sleep(0.001)
+    driver.stop()                                    # "kill": step boundary
+    assert s1.records[a].iterations_done >= 1
+    parked = s1.drain(ckpt_dir)
+    assert parked >= 1
+    live = [j for j in (a, b) if not s1.records[j].done]
+    assert live                                      # something to restore
+    for jid in live:                                 # committed snapshots
+        job_dir = os.path.join(ckpt_dir, "jobs", jid)
+        steps = [d for d in os.listdir(job_dir) if d.startswith("step_")]
+        assert steps
+        assert all(os.path.exists(os.path.join(job_dir, d, "COMMIT"))
+                   for d in steps)
+
+    s2 = Scheduler(n_devices=1, memory=_mem(100),    # "process restart"
+                   snapshot_dir=ckpt_dir)
+    assert s2.restore(ckpt_dir) == len(live)
+    for jid in live:
+        assert s2.records[jid].iterations_done == \
+            s1.records[jid].iterations_done
+    AsyncDriver(s2).run(timeout=300)
+
+    want = {a: _mono("ossart", 12), b: _mono("cgls", 10)}
+    for jid in (a, b):
+        src = s2 if jid in s2.records else s1
+        np.testing.assert_array_equal(src.result(jid), want[jid])
+
+    # completion flips the on-disk specs terminal: a third restart finds
+    # no resurrectable work
+    assert Scheduler(n_devices=1, memory=_mem(100)).restore(ckpt_dir) == 0
+
+
+def test_async_driver_guard_preemption_drains_durably(tmp_path):
+    """A SIGTERM-equivalent mid-run under the driver parks + persists the
+    running job; a fresh scheduler restores and finishes bit-identically."""
+    ckpt_dir = str(tmp_path / "serve-ckpt")
+    guard = PreemptionGuard(install_handler=False)
+    sched = Scheduler(n_devices=1, guard=guard, snapshot_dir=ckpt_dir)
+    jid = sched.submit(_job("cgls", n_iter=30))
+
+    def trigger_after_progress():
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            if sched.records[jid].iterations_done >= 1:
+                break
+            time.sleep(0.001)
+        guard.trigger()
+
+    killer = threading.Thread(target=trigger_after_progress)
+    killer.start()
+    AsyncDriver(sched).run(timeout=300)
+    killer.join()
+    rec = sched.records[jid]
+    assert rec.status is JobStatus.PREEMPTED
+    assert 1 <= rec.iterations_done < 30
+    assert rec.checkpoint is not None
+
+    s2 = Scheduler(n_devices=1)
+    assert s2.restore(ckpt_dir) == 1
+    s2.run()
+    np.testing.assert_array_equal(s2.result(jid), _mono("cgls", 30))
+
+
+def test_cancel_stales_out_persisted_snapshot(tmp_path):
+    """Cancelling a queued job after it was snapshotted must prevent a
+    later restore from resurrecting (and executing) it."""
+    ckpt_dir = str(tmp_path / "serve-ckpt")
+    sched = Scheduler(n_devices=1, memory=_mem(100),
+                      snapshot_dir=ckpt_dir)
+    busy = sched.submit(_job("cgls", n_iter=4))      # holds the only slot
+    victim = sched.submit(_job("cgls", n_iter=2))
+    sched.step_quantum()
+    assert sched.records[victim].status is JobStatus.PENDING
+    assert sched.snapshot(ckpt_dir) == 1             # persists the victim
+    assert sched.cancel(victim)
+    sched.run()
+    assert sched.records[busy].status is JobStatus.COMPLETED
+    assert Scheduler(n_devices=1).restore(ckpt_dir) == 0
+
+
+def test_async_driver_surfaces_internal_errors(monkeypatch, tmp_path):
+    """An internal failure (here: the periodic snapshot machinery) must
+    stop the driver and raise, not silently kill a daemon thread and
+    hang run() forever."""
+    sched = Scheduler(n_devices=1, memory=_mem(1024))
+    sched.submit(_job("cgls", n_iter=50))
+
+    def broken_snapshot(ckpt_dir):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(sched, "snapshot", broken_snapshot)
+    driver = AsyncDriver(sched, snapshot_dir=str(tmp_path / "snap"),
+                         snapshot_every_seconds=1e-4)
+    with pytest.raises(RuntimeError, match="internal error"):
+        driver.run(timeout=120)
+    assert isinstance(driver.error, OSError)
+
+
+def test_restore_requires_data_ref_for_lazy_jobs(tmp_path):
+    ckpt_dir = str(tmp_path / "serve-ckpt")
+    calls = []
+
+    def ref():
+        calls.append(1)
+        return PROJ
+
+    s1 = Scheduler(n_devices=1)
+    jid = s1.submit(ReconJob("cgls", GEO, ANGLES, ref, n_iter=3))
+    s1.run(max_quanta=1)
+    s1.drain(ckpt_dir)
+    s2 = Scheduler(n_devices=1)
+    with pytest.raises(ValueError, match="lazy"):
+        s2.restore(ckpt_dir)
+    s3 = Scheduler(n_devices=1)
+    assert s3.restore(ckpt_dir, data_refs={jid: ref}) == 1
+    s3.run()
+    np.testing.assert_array_equal(s3.result(jid), _mono("cgls", 3))
 
 

@@ -65,6 +65,22 @@ def test_stream_backward_multidevice():
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
+def test_stream_rejects_fewer_devices_than_planned():
+    """Both streaming executors must refuse a device list shorter than the
+    plan (the backward path used to wrap around silently, piling several
+    devices' slab queues onto one device)."""
+    vol = np.asarray(jax.random.normal(jax.random.PRNGKey(5), GEO.n_voxel))
+    proj = np.asarray(jax.random.normal(jax.random.PRNGKey(6),
+                                        (len(ANGLES),) + GEO.n_detector))
+    one_dev = jax.local_devices()[:1]
+    pf = plan_forward(GEO, len(ANGLES), 2, _tiny_memory(), angle_chunk=4)
+    with pytest.raises(ValueError, match="2 devices"):
+        stream_forward(vol, GEO, ANGLES, pf, devices=one_dev)
+    pb = plan_backward(GEO, len(ANGLES), 2, _tiny_memory(), angle_chunk=4)
+    with pytest.raises(ValueError, match="2 devices"):
+        stream_backward(proj, GEO, ANGLES, pb, devices=one_dev)
+
+
 def test_timeline_bins():
     vol = np.asarray(jax.random.normal(jax.random.PRNGKey(4), GEO.n_voxel))
     plan = plan_forward(GEO, len(ANGLES), 1, _tiny_memory(), angle_chunk=4)

@@ -1,7 +1,7 @@
 """Serving benchmark: aggregate throughput + latency under a mixed
 small/large reconstruction workload (jobs/sec, p50/p95 latency).
 
-Three configurations over the *same* job set:
+Single-pod section — three configurations over the *same* job set:
 
 * ``serial``      -- one device, one job at a time (the pre-scheduler
   world: every reconstruction runs alone, back to back).
@@ -13,7 +13,19 @@ Three configurations over the *same* job set:
   the way per-GPU queues overlap in the paper, so *wall-clock* jobs/sec
   improves, not just the modeled makespan.
 
-Every step now blocks on its compute (no async-dispatch mis-timing), so
+Multi-pod section — heavier in-core jobs (``make_multipod_workload``)
+under an *imbalanced* arrival pattern (most tenants pinned to pod 0, the
+static-partitioning world where each tenant has "their" host group):
+
+* ``static``   -- two pods, no stealing: pod 0 grinds through its
+  backlog while pod 1 idles after its own few jobs.
+* ``stealing`` -- identical pinning, but idle pods steal parked jobs
+  from loaded ones (checkpoint -> manifest+COMMIT transfer ->
+  bit-identical resume), so the fleet's wall jobs/sec approaches the
+  balanced optimum.  Every stolen job's final volume is re-run unstolen
+  on a fresh single scheduler and asserted bit-identical.
+
+Every step blocks on its compute (no async-dispatch mis-timing), so
 both the wall numbers and the per-device busy clocks are honest.  The
 modeled makespan (max over device busy clocks) remains the stand-in for
 real multi-accelerator wall-clock on a single-host rig, exactly like the
@@ -25,12 +37,17 @@ paper's per-GPU timelines (Fig 3/5).
 from __future__ import annotations
 
 import argparse
+import tempfile
 from typing import Dict, List
+
+import numpy as np
 
 from repro.core.geometry import ConeGeometry, circular_angles
 from repro.core import phantoms
 from repro.core.splitting import MemoryModel
-from repro.serve import AsyncDriver, DevicePool, ReconJob, Scheduler
+from repro.serve import (AsyncDriver, DevicePool, MultiPodDriver,
+                         MultiPodScheduler, Pod, PodSpec, ReconJob,
+                         Scheduler)
 
 KIB = 1024
 
@@ -84,6 +101,74 @@ CONFIGS = (("serial", 1, False),
            ("threaded", None, True))
 
 
+# ---------------------------------------------------------------------------
+# multi-pod: static per-pod partitioning vs work stealing
+# ---------------------------------------------------------------------------
+
+def make_multipod_workload(n_jobs: int) -> List[ReconJob]:
+    """Heavier in-core jobs (32^3 under an 800 KiB budget) for the
+    multi-pod comparison: each step carries enough real compute to
+    release the GIL, so two pod worker threads genuinely overlap on a
+    small host and the wall-clock numbers measure balancing, not Python
+    dispatch contention."""
+    geo = ConeGeometry.nice(32)
+    ang = circular_angles(16)
+    proj = phantoms.sphere_projection_analytic(geo, ang)
+    jobs = []
+    for i in range(n_jobs):
+        if i % 2 == 0:
+            jobs.append(ReconJob("cgls", geo, ang, proj, n_iter=2,
+                                 priority=i % 3))
+        else:
+            jobs.append(ReconJob("ossart", geo, ang, proj, n_iter=2,
+                                 priority=i % 3,
+                                 params={"subset_size": 8}))
+    return jobs
+
+
+def imbalanced_pins(n_jobs: int, n_pods: int, skew: int = 5) -> List[int]:
+    """Tenant-affinity pinning where only every ``skew``-th job lands off
+    pod 0 — the imbalanced arrival pattern stealing exists to fix."""
+    if n_pods == 1:
+        return [0] * n_jobs
+    pins = []
+    for i in range(n_jobs):
+        if i % skew == skew - 1:
+            pins.append(1 + (i // skew) % (n_pods - 1))
+        else:
+            pins.append(0)
+    return pins
+
+
+def run_multipod(name: str, jobs: List[ReconJob], n_pods: int,
+                 devices_per_pod: int, budget_kib: int,
+                 steal: bool) -> Dict:
+    mem = MemoryModel(device_bytes=budget_kib * KIB, usable_fraction=1.0)
+    mps = MultiPodScheduler(
+        [Pod(PodSpec(f"pod{i}", n_devices=devices_per_pod, memory=mem))
+         for i in range(n_pods)],
+        steal=steal, transfer_dir=tempfile.mkdtemp(prefix="bench-steal-"))
+    pins = imbalanced_pins(len(jobs), n_pods)
+    by_id = {}
+    for job, pin in zip(jobs, pins):
+        by_id[mps.submit(job, pod=pin)] = job
+    MultiPodDriver(mps).run(timeout=600)
+    s = mps.summary()
+    assert s["completed"] == len(jobs), (name, s)
+    if steal:
+        # acceptance: a stolen job's final volume must be bit-identical
+        # to the same job run unstolen (fresh single-pod scheduler with
+        # the same memory model => identical mode decision + numerics)
+        for jid in mps.stolen_jobs:
+            solo = Scheduler(pool=DevicePool(n_devices=1, memory=mem))
+            solo.submit(by_id[jid])
+            solo.run()
+            np.testing.assert_array_equal(mps.result(jid),
+                                          solo.result(jid))
+        s["stolen_verified"] = len(mps.stolen_jobs)
+    return s
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--small", type=int, default=12)
@@ -92,6 +177,16 @@ def main():
     ap.add_argument("--budget-kib", type=int, default=220,
                     help="per-device budget; 220 KiB fits two 16^3 jobs "
                          "and forces the 32^3 jobs out-of-core")
+    ap.add_argument("--pods", type=int, default=2,
+                    help="pods in the multi-pod section (0 skips it)")
+    ap.add_argument("--devices-per-pod", type=int, default=1,
+                    help="slots per pod; keep pods*devices_per_pod <= "
+                         "physical cores so the wall-clock comparison is "
+                         "honest (oversubscribed worker threads hide the "
+                         "idle capacity stealing exists to reclaim)")
+    ap.add_argument("--mp-budget-kib", type=int, default=800,
+                    help="per-device budget in the multi-pod section: 800 "
+                         "KiB holds one 32^3 job resident per device")
     args = ap.parse_args()
 
     # Unmeasured warm-up pass: the scheduler's shared operator cache (and
@@ -129,6 +224,32 @@ def main():
           f"{packed_speedup:.2f}x")
     print(f"# threaded vs cooperative (WALL jobs/sec): "
           f"{threaded_speedup:.2f}x; p95 latency {p95_ratio:.2f}x lower")
+
+    if args.pods >= 2:
+        n_mp_jobs = args.small + args.large
+        # separate warm-up: the shared operator cache keys on the memory
+        # model, so the multi-pod budget needs its own compile pass
+        run_config("mp-warmup", make_multipod_workload(2), 1,
+                   args.mp_budget_kib)
+        print("\nconfig,pods,jobs,stolen,wall_s,jobs_per_sec_wall,"
+              "latency_p95_s")
+        mp = {}
+        for name, steal in (("static", False), ("stealing", True)):
+            jobs = make_multipod_workload(n_mp_jobs)
+            mp[name] = run_multipod(name, jobs, args.pods,
+                                    args.devices_per_pod,
+                                    args.mp_budget_kib, steal=steal)
+            s = mp[name]
+            print(f"{name},{args.pods},{s['completed']},"
+                  f"{s['stolen_in']},{s['wall_seconds']:.2f},"
+                  f"{s['jobs_per_sec_wall']:.3f},{s['latency_p95']:.2f}")
+        steal_speedup = (mp["stealing"]["jobs_per_sec_wall"]
+                         / max(mp["static"]["jobs_per_sec_wall"], 1e-12))
+        print(f"# stealing vs static partitioning (WALL jobs/sec, "
+              f"imbalanced arrivals): {steal_speedup:.2f}x; "
+              f"{mp['stealing']['stolen_in']} jobs stolen, "
+              f"{mp['stealing'].get('stolen_verified', 0)} verified "
+              f"bit-identical to unstolen runs")
 
 
 if __name__ == "__main__":

@@ -1,66 +1,171 @@
-"""Multi-tenant serving demo: three tenants share a small-memory pool.
+"""Multi-tenant serving walkthrough (companion to ``docs/serve.md``).
 
-Submits a mix of reconstruction jobs -- two small in-core jobs with
-different priorities and one volume too large for a device (routed through
-the paper's out-of-core streaming path) -- to the ``repro.serve``
-scheduler, drives them with the threaded ``AsyncDriver`` (one worker
-thread per device, so both simulated devices step their resident jobs
-concurrently), then prints per-job placement, status and accuracy.
+Three tenants share a small-memory device pool:
+
+* an *urgent* CGLS job (priority 5) — placed first, may preempt others;
+* a *batch* OS-SART job (priority 0) — fills leftover capacity;
+* an *oversized* OS-SART job whose volume does not fit a device — the
+  scheduler routes it through the paper's out-of-core streaming path
+  instead of rejecting it.
+
+The default run drives one scheduler with the threaded ``AsyncDriver``
+(one worker thread per device, so both simulated devices step their
+resident jobs concurrently).  With ``--pods 2`` the same tenants are
+served by a *fleet*: every job is pinned to pod 0 (tenant affinity), and
+the idle pod steals parked work through the checkpoint-transfer protocol
+— the printout then shows which pod each job actually completed on and
+how many jobs moved.
 
     PYTHONPATH=src python examples/serve_jobs.py
+    PYTHONPATH=src python examples/serve_jobs.py --pods 2
+    PYTHONPATH=src python examples/serve_jobs.py --help
 """
+
+import argparse
+import tempfile
 
 import numpy as np
 
 from repro.core import phantoms
 from repro.core.geometry import ConeGeometry, circular_angles
 from repro.core.splitting import MemoryModel
-from repro.serve import AsyncDriver, ReconJob, Scheduler
+from repro.serve import (AsyncDriver, MultiPodDriver, MultiPodScheduler,
+                         Pod, PodSpec, ReconJob, Scheduler)
+
+KIB = 1024
 
 
-def main():
+def build_jobs(iters: int):
+    """The three tenants' jobs plus the ground-truth volumes used for
+    the accuracy column in the report."""
+    # -- small acquisition: a 16^3 sphere phantom, 12 projection angles.
+    #    ~84 KiB resident footprint => two such jobs share one 220 KiB
+    #    device.
     geo = ConeGeometry.nice(16)
     angles = circular_angles(12)
     vol = phantoms.sphere(geo)
     proj = phantoms.sphere_projection_analytic(geo, angles)
 
+    # -- large acquisition: 32^3.  Its in-core footprint exceeds the
+    #    device budget, so the planners will route it out-of-core
+    #    (JobRecord.streamed becomes True).
     big_geo = ConeGeometry.nice(32)
     big_angles = circular_angles(16)
     big_vol = phantoms.sphere(big_geo)
     big_proj = phantoms.sphere_projection_analytic(big_geo, big_angles)
 
-    # two simulated 220 KiB devices: a 16^3 job is resident (~84 KiB),
-    # a 32^3 job is not and must stream
-    sched = Scheduler(n_devices=2,
-                      memory=MemoryModel(device_bytes=220 * 1024,
-                                         usable_fraction=1.0))
     jobs = {
-        "urgent-cgls": sched.submit(ReconJob(
-            "cgls", geo, angles, proj, n_iter=4, priority=5)),
-        "batch-ossart": sched.submit(ReconJob(
-            "ossart", geo, angles, proj, n_iter=3, priority=0,
-            params={"subset_size": 6})),
-        "oversized-ossart": sched.submit(ReconJob(
-            "ossart", big_geo, big_angles, big_proj, n_iter=1, priority=1,
-            params={"subset_size": 16})),
+        "urgent-cgls": ReconJob("cgls", geo, angles, proj,
+                                n_iter=2 * iters, priority=5),
+        "batch-ossart": ReconJob("ossart", geo, angles, proj,
+                                 n_iter=iters, priority=0,
+                                 params={"subset_size": 6}),
+        "oversized-ossart": ReconJob("ossart", big_geo, big_angles,
+                                     big_proj, n_iter=1, priority=1,
+                                     params={"subset_size": 16}),
     }
-    AsyncDriver(sched).run()
-
     truth = {"urgent-cgls": vol, "batch-ossart": vol,
              "oversized-ossart": big_vol}
-    for name, jid in jobs.items():
-        rec = sched.records[jid]
-        t = truth[name]
-        rel = float(np.linalg.norm(rec.result - t) / np.linalg.norm(t))
-        print(f"{name:18s} dev={rec.device} streamed={rec.streamed!s:5s} "
-              f"iters={rec.iterations_done} status={rec.status.value:9s} "
-              f"rel_err={rel:.3f}")
+    return jobs, truth
+
+
+def report(name, rec, truth, pod=""):
+    """One line per job: placement, streaming route, status, accuracy."""
+    rel = float(np.linalg.norm(rec.result - truth)
+                / np.linalg.norm(truth))
+    where = f"{pod + ':' if pod else ''}dev{rec.device}"
+    print(f"{name:18s} {where:8s} streamed={rec.streamed!s:5s} "
+          f"iters={rec.iterations_done} status={rec.status.value:9s} "
+          f"rel_err={rel:.3f}")
+
+
+def run_single_pool(jobs, truth, args):
+    """docs/serve.md 'Execution model': one Scheduler, one AsyncDriver."""
+    # The pool is *simulated* (slots with a byte budget only): placement
+    # logic is identical to a real multi-GPU pool, which is how a laptop
+    # demos the serving layer.
+    sched = Scheduler(n_devices=args.devices,
+                      memory=MemoryModel(device_bytes=args.budget_kib * KIB,
+                                         usable_fraction=1.0))
+    jids = {name: sched.submit(job) for name, job in jobs.items()}
+
+    # AsyncDriver.run() = start worker threads, wait idle, stop.  Steps
+    # overlap across devices; admission/preemption run on a background
+    # scheduler thread (see docs/serve.md "Threading model").
+    AsyncDriver(sched).run()
+
+    for name, jid in jids.items():
+        report(name, sched.records[jid], truth[name])
     s = sched.summary()
     print(f"\n{s['completed']} jobs, {s['steps']} interleaved steps, "
           f"modeled makespan {s['modeled_makespan_seconds']:.2f}s "
           f"(device busy: "
           f"{['%.2f' % b for b in s['device_busy_seconds']]}), "
           f"p95 latency {s['latency_p95']:.2f}s")
+
+
+def run_pod_fleet(jobs, truth, args):
+    """docs/serve.md 'Multi-pod fleets': one scheduler per pod, idle
+    pods steal parked jobs (checkpoint -> manifest+COMMIT transfer ->
+    bit-identical resume on the thief)."""
+    # The *same* device count as the single-pool run, split into host
+    # groups — e.g. --devices 2 --pods 2 is two one-device pods.  Pod 0
+    # can then hold fewer tenants resident, parks the surplus, and the
+    # idle pod steals it.
+    devices_per_pod = max(1, args.devices // args.pods)
+    pods = [Pod(PodSpec(f"pod{i}", n_devices=devices_per_pod,
+                        memory=MemoryModel(
+                            device_bytes=args.budget_kib * KIB,
+                            usable_fraction=1.0)))
+            for i in range(args.pods)]
+    mps = MultiPodScheduler(pods,
+                            transfer_dir=tempfile.mkdtemp(prefix="steal-"))
+
+    # Pin every tenant to pod 0 — the static-partitioning arrival
+    # pattern.  Without stealing, pod 1+ would idle; with it, parked
+    # jobs migrate and the printout shows where each one really ran.
+    jids = {name: mps.submit(job, pod=0) for name, job in jobs.items()}
+
+    MultiPodDriver(mps).run()
+
+    for name, jid in jids.items():
+        report(name, mps.record(jid), truth[name], pod=mps.owner(jid).name)
+    s = mps.summary()
+    print(f"\n{s['completed']} jobs over {args.pods} pods, "
+          f"{s['jobs_stolen']} stolen "
+          f"(all submitted to pod0), fleet makespan "
+          f"{s['modeled_makespan_seconds']:.2f}s, "
+          f"p95 latency {s['latency_p95']:.2f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="Multi-tenant serving demo: three tenants (urgent / "
+                    "batch / oversized-streaming) share a small-memory "
+                    "pool; see docs/serve.md for the architecture this "
+                    "walks through.")
+    ap.add_argument("--devices", type=int, default=2,
+                    help="simulated device slots in total (split across "
+                         "pods with --pods > 1); each slot has its own "
+                         "worker thread under the threaded driver")
+    ap.add_argument("--budget-kib", type=int, default=220,
+                    help="per-device memory budget in KiB; 220 holds two "
+                         "16^3 jobs resident and forces the 32^3 job "
+                         "through the out-of-core streaming path")
+    ap.add_argument("--iters", type=int, default=3,
+                    help="outer-iteration budget of the batch job (the "
+                         "urgent job gets 2x this, the streamed job 1)")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="1 = single scheduler (AsyncDriver); >1 = pod "
+                         "fleet with every tenant pinned to pod 0 so "
+                         "work stealing visibly rebalances the jobs")
+    args = ap.parse_args()
+
+    jobs, truth = build_jobs(args.iters)
+    if args.pods > 1:
+        run_pod_fleet(jobs, truth, args)
+    else:
+        run_single_pool(jobs, truth, args)
 
 
 if __name__ == "__main__":

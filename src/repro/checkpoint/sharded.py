@@ -59,7 +59,22 @@ def _from_numpy(x: np.ndarray, dtype: str) -> np.ndarray:
 
 
 def save_checkpoint(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
-    """Synchronous sharded save with atomic commit."""
+    """Synchronous sharded save with atomic commit.
+
+    Manifest format (``manifest.json``)::
+
+        {"step": <int>,
+         "leaves": {"<keystr>": {"file":  "leaf_00000.npy",
+                                 "shape": [..],
+                                 "dtype": "float32" | "bfloat16" | ...}}}
+
+    ``<keystr>`` is ``jax.tree_util.keystr`` of the leaf's path (for the
+    flat dicts the serving layer persists: ``"['angles']"``,
+    ``"['state.x']"``, ...).  Leaves are written one ``.npy`` per entry
+    in sorted-key order; bf16 is stored as its u16 bit pattern with the
+    true dtype recorded here so restore can re-view it.  ``COMMIT`` is
+    written last inside a ``.tmp`` directory that is atomically renamed
+    into place — readers trust only directories containing COMMIT."""
     out = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = out + ".tmp"
     if os.path.exists(tmp):
@@ -137,6 +152,13 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 def restore_checkpoint(ckpt_dir: str, step: int, target_tree,
                        shardings=None):
     """Restore into the structure of ``target_tree`` (shapes validated).
+
+    Reads the manifest written by :func:`save_checkpoint` (see there for
+    the format): every manifest leaf must exist in ``target_tree`` and
+    vice versa, each leaf file's shape is validated against both the
+    manifest and the target, and bf16 u16 bit patterns are re-viewed to
+    their true dtype.  Mismatches raise — a checkpoint is never
+    partially or silently restored.
 
     ``shardings``: optional pytree of NamedSharding -- arrays are placed
     against it (elastic resharding: the saved mesh is irrelevant)."""

@@ -10,6 +10,7 @@ device state before the launcher sets XLA flags.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 from repro.core.compat import make_mesh
 
@@ -25,3 +26,21 @@ def make_host_mesh(model_axis: int = 1):
     n = jax.local_device_count()
     assert n % model_axis == 0
     return make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def pod_device_groups(mesh, pod_axis: str = "pod"):
+    """Split a mesh's devices into per-pod groups (one group per index
+    along ``pod_axis``).
+
+    This is how the serving layer derives its pods from a production
+    mesh: ``make_production_mesh(multi_pod=True)`` has a leading "pod"
+    axis, so each slice ``devices[p, ...]`` is one host group, and
+    :func:`repro.serve.pool.pods_from_mesh` builds one
+    ``DevicePool`` + ``Scheduler`` per group.  A mesh without a pod
+    axis is a single pod (all devices in one group).
+    """
+    if pod_axis not in mesh.axis_names:
+        return [list(np.ravel(mesh.devices))]
+    axis = mesh.axis_names.index(pod_axis)
+    moved = np.moveaxis(mesh.devices, axis, 0)
+    return [list(np.ravel(moved[p])) for p in range(moved.shape[0])]

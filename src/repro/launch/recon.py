@@ -8,7 +8,9 @@ estimate unless ``--mode`` forces one.  ``--mode dist`` bypasses the
 scheduler and runs the shard_map backend over the local device mesh.
 ``--snapshot-dir`` makes the run restart-safe: a SIGTERM parks the job's
 step-wise checkpoint durably, and re-running the same command resumes it
-bit-identically instead of starting over.
+bit-identically instead of starting over.  ``--pods N`` serves the job
+through a simulated multi-pod fleet instead of a single scheduler
+(routing + work stealing; see docs/serve.md).
 
 Numerics are identical to the old monolithic driver: the scheduler steps
 the same algorithm iterators the monolithic entry points wrap.
@@ -43,13 +45,37 @@ def _job_params(algname: str, n_angles: int) -> dict:
 def reconstruct(algname: str = "cgls", n: int = 64, n_angles: int = 96,
                 iters: int = 10, mode: str = "auto",
                 device_bytes: int = 0, verbose: bool = True,
-                snapshot_dir: str = ""):
+                snapshot_dir: str = "", pods: int = 1):
     geo = ConeGeometry.nice(n)
     vol, angles, proj = make_ct_dataset(geo, n_angles)
     mem = (MemoryModel(device_bytes=device_bytes)
            if device_bytes else MemoryModel())
     t0 = time.time()
-    if mode == "dist":
+    if pods > 1:
+        # multi-pod fleet (simulated host groups): the job is routed to
+        # the pod whose topology models the cheapest completion; idle
+        # pods would steal parked work on a busier trace (bench_serve.py)
+        if snapshot_dir:
+            raise ValueError("--snapshot-dir currently requires --pods 1 "
+                             "(per-pod durable resume is a ROADMAP item)")
+        if mode == "dist":
+            raise ValueError("--mode dist bypasses the scheduler and "
+                             "cannot be combined with --pods")
+        from repro.serve import (MultiPodDriver, MultiPodScheduler, Pod,
+                                 PodSpec)
+        mps = MultiPodScheduler(
+            [Pod(PodSpec(f"pod{i}", n_devices=1, memory=mem))
+             for i in range(pods)])
+        jid = mps.submit(ReconJob(
+            algname, geo, angles, proj, n_iter=iters,
+            params=_job_params(algname, n_angles),
+            mode=None if mode == "auto" else mode))
+        MultiPodDriver(mps).run()
+        if verbose:
+            print(f"[recon] pod fleet x{pods}: job ran on "
+                  f"{mps.owner(jid).name}")
+        rec = mps.result(jid)
+    elif mode == "dist":
         from repro.launch.mesh import make_host_mesh
         mesh = make_host_mesh(model_axis=1)
         op = CTOperator(geo, angles, mode="dist", mesh=mesh,
@@ -125,9 +151,14 @@ def main():
     ap.add_argument("--snapshot-dir", default="",
                     help="durable checkpoint directory: SIGTERM parks the "
                          "job there; re-running resumes bit-identically")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="serve through a fleet of this many single-device "
+                         "pods (multi-pod routing + work stealing; see "
+                         "docs/serve.md)")
     args = ap.parse_args()
     reconstruct(args.alg, args.n, args.angles, args.iters, args.mode,
-                args.device_bytes, snapshot_dir=args.snapshot_dir)
+                args.device_bytes, snapshot_dir=args.snapshot_dir,
+                pods=args.pods)
 
 
 if __name__ == "__main__":

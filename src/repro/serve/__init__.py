@@ -25,6 +25,16 @@ Two drivers share that scheduler core: the cooperative single-thread
 worker per device + background admission/snapshot thread) whose durable
 snapshots + :meth:`Scheduler.restore` survive process death.
 
+Past one host group, :mod:`repro.serve.pool` runs one scheduler per
+*pod* (host group, optionally derived from a ``launch.mesh`` mesh):
+:class:`MultiPodScheduler` routes each submission to the pod whose
+topology models the cheapest completion, and :mod:`repro.serve.steal`
+lets idle pods steal parked jobs from loaded ones — the transfer rides
+the durable-snapshot format, so a stolen job resumes bit-identically on
+the thief.  :class:`MultiPodDriver` threads the whole fleet.
+
+See ``docs/serve.md`` for the full architecture guide.
+
 Quick start::
 
     from repro.serve import AsyncDriver, ReconJob, Scheduler
@@ -40,13 +50,18 @@ Quick start::
 from .job import JobRecord, JobStatus, ReconJob
 from .queue import PriorityJobQueue
 from .executor import JobExecutor, clear_operator_cache
-from .metrics import ServeMetrics, percentile
+from .metrics import ServeMetrics, merge_metrics, percentile
 from .scheduler import (DevicePool, DeviceSlot, JobFootprint, Scheduler,
                         estimate_job_footprint, fair_share_weight)
-from .driver import AsyncDriver
+from .driver import AsyncDriver, MultiPodDriver
+from .pool import (MultiPodScheduler, Pod, PodSpec, modeled_job_seconds,
+                   pods_from_mesh)
+from .steal import StealPolicy, steal_once, steal_pass
 
 __all__ = ["ReconJob", "JobRecord", "JobStatus", "PriorityJobQueue",
            "JobExecutor", "clear_operator_cache", "ServeMetrics",
-           "percentile", "DevicePool", "DeviceSlot", "JobFootprint",
-           "Scheduler", "estimate_job_footprint", "fair_share_weight",
-           "AsyncDriver"]
+           "merge_metrics", "percentile", "DevicePool", "DeviceSlot",
+           "JobFootprint", "Scheduler", "estimate_job_footprint",
+           "fair_share_weight", "AsyncDriver", "MultiPodDriver",
+           "MultiPodScheduler", "Pod", "PodSpec", "modeled_job_seconds",
+           "pods_from_mesh", "StealPolicy", "steal_once", "steal_pass"]

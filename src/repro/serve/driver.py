@@ -25,6 +25,10 @@ drain requests are flagged and honoured when the step returns, which the
 executor guarantees is a real synchronisation point (it blocks on the
 state's arrays before returning).
 
+:class:`MultiPodDriver` lifts the same model to a pod fleet
+(:class:`~repro.serve.pool.MultiPodScheduler`): one ``AsyncDriver`` per
+pod plus a background work-stealing thread (:mod:`repro.serve.steal`).
+
 Usage::
 
     sched = Scheduler(n_devices=4, memory=MemoryModel(...),
@@ -186,3 +190,91 @@ class AsyncDriver:
                 sched.finish_step(run, time.monotonic() - t0, err)
         except BaseException as e:      # a dead loop would hang run()
             self._die(e)
+
+
+class MultiPodDriver:
+    """Threaded fleet driver: one :class:`AsyncDriver` per pod plus a
+    background stealing thread.
+
+    Every pod's workers step their own devices concurrently (pods share
+    nothing but the transfer directory), while the steal thread
+    periodically runs :meth:`MultiPodScheduler.steal_pass` so an idle
+    pod's workers find stolen jobs in their scheduler's queue at their
+    next admission pass.  Internal errors from any pod's driver (or from
+    the steal machinery) stop the whole fleet and are raised from
+    :meth:`run` — a silently dead pod would strand its queue.
+
+    Usage::
+
+        mps = MultiPodScheduler(pods, transfer_dir=...)
+        for job in jobs:
+            mps.submit(job)
+        MultiPodDriver(mps).run()
+        image = mps.result(job_id)
+    """
+
+    def __init__(self, mps, poll_seconds: float = 0.001,
+                 steal_every_seconds: float = 0.002):
+        self.mps = mps
+        self.poll_seconds = poll_seconds
+        self.steal_every_seconds = steal_every_seconds
+        self.drivers = [AsyncDriver(pod.scheduler,
+                                    poll_seconds=poll_seconds)
+                        for pod in mps.pods]
+        self._stop = threading.Event()
+        self._steal_thread: Optional[threading.Thread] = None
+        self.error: Optional[BaseException] = None
+
+    def start(self) -> None:
+        self._stop.clear()
+        for d in self.drivers:
+            d.start()
+        if self.mps.steal:
+            self._steal_thread = threading.Thread(
+                target=self._steal_loop, name="serve-stealer", daemon=True)
+            self._steal_thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._steal_thread is not None:
+            self._steal_thread.join()
+            self._steal_thread = None
+        for d in self.drivers:
+            d.stop()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until every pod is idle, any pod errors, or ``timeout``."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            if self.mps.idle:
+                return True
+            for d in self.drivers:
+                if d.error is not None:
+                    self.error = self.error or d.error
+                    return False
+            if self.error is not None:
+                return False
+            if deadline is not None and time.monotonic() > deadline:
+                return False
+            time.sleep(self.poll_seconds)
+
+    def run(self, timeout: Optional[float] = None) -> ServeMetrics:
+        """start() + wait() + stop(); returns merged fleet metrics."""
+        self.start()
+        try:
+            self.wait(timeout)
+        finally:
+            self.stop()
+        if self.error is not None:
+            raise RuntimeError(
+                "MultiPodDriver stopped on an internal error") from self.error
+        return self.mps.metrics()
+
+    def _steal_loop(self) -> None:
+        try:
+            while not self._stop.is_set():
+                self.mps.steal_pass()
+                time.sleep(self.steal_every_seconds)
+        except BaseException as e:      # surface, don't die silently
+            self.error = e
+            self._stop.set()

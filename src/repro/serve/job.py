@@ -30,6 +30,7 @@ class JobStatus(enum.Enum):
     COMPLETED = "completed"
     FAILED = "failed"
     CANCELLED = "cancelled"
+    STOLEN = "stolen"          # exported to another pod (terminal *here*)
 
 
 _job_counter = itertools.count()
@@ -121,4 +122,4 @@ class JobRecord:
     @property
     def done(self) -> bool:
         return self.status in (JobStatus.COMPLETED, JobStatus.FAILED,
-                               JobStatus.CANCELLED)
+                               JobStatus.CANCELLED, JobStatus.STOLEN)

@@ -35,6 +35,8 @@ class ServeMetrics:
     steps: int = 0
     streamed_jobs: int = 0
     deadline_rejected: int = 0      # jobs refused by deadline admission
+    stolen_out: int = 0             # parked jobs exported to another pod
+    stolen_in: int = 0              # parked jobs imported from another pod
 
     step_seconds: List[float] = dataclasses.field(default_factory=list)
     latencies: List[float] = dataclasses.field(default_factory=list)
@@ -76,6 +78,8 @@ class ServeMetrics:
             "deadline_rejected": self.deadline_rejected,
             "steps": self.steps,
             "streamed_jobs": self.streamed_jobs,
+            "stolen_out": self.stolen_out,
+            "stolen_in": self.stolen_in,
             "wall_seconds": self.wall_seconds,
             "busy_seconds": self.busy_seconds,
             "latency_p50": percentile(self.latencies, 50),
@@ -91,3 +95,36 @@ class ServeMetrics:
             out["jobs_per_sec_modeled"] = (self.completed / makespan
                                            if makespan > 0 else 0.0)
         return out
+
+
+def merge_metrics(parts: List["ServeMetrics"]) -> "ServeMetrics":
+    """Fleet-level view over per-pod metrics: counters sum, samples
+    concatenate, and the wall-clock window spans the earliest start to the
+    latest end across pods.
+
+    A stolen job is ``submitted`` on its original pod and ``completed`` on
+    the thief, so summed counters stay one-per-job; ``stolen_in`` /
+    ``stolen_out`` cancel out in aggregate and are reported so the
+    imbalance the stealing corrected stays visible per pod."""
+    out = ServeMetrics()
+    for m in parts:
+        out.submitted += m.submitted
+        out.completed += m.completed
+        out.failed += m.failed
+        out.cancelled += m.cancelled
+        out.preemptions += m.preemptions
+        out.steps += m.steps
+        out.streamed_jobs += m.streamed_jobs
+        out.deadline_rejected += m.deadline_rejected
+        out.stolen_out += m.stolen_out
+        out.stolen_in += m.stolen_in
+        out.step_seconds.extend(m.step_seconds)
+        out.latencies.extend(m.latencies)
+        out.queue_waits.extend(m.queue_waits)
+        if m.wall_start is not None:
+            out.wall_start = (m.wall_start if out.wall_start is None
+                              else min(out.wall_start, m.wall_start))
+        if m.wall_end is not None:
+            out.wall_end = (m.wall_end if out.wall_end is None
+                            else max(out.wall_end, m.wall_end))
+    return out

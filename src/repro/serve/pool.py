@@ -1,0 +1,334 @@
+"""Multi-pod device pools: one scheduler per host group, mesh-aware routing.
+
+A single :class:`~repro.serve.scheduler.Scheduler` owns one
+:class:`~repro.serve.scheduler.DevicePool` — one host's devices.  A site
+with several host groups (the paper's "arbitrarily large ... on whatever
+devices a site has", scaled past one machine) runs one pool *per group*:
+each group keeps its own scheduler, queue and device ledger, and only two
+things cross the boundary — a routing decision at submit time, and parked
+jobs moved by work stealing (:mod:`repro.serve.steal`).
+
+Topology comes from :mod:`repro.launch.mesh`: a production mesh with a
+leading ``"pod"`` axis yields one :class:`Pod` per pod index
+(:func:`pods_from_mesh`), while tests and single-host rigs describe
+simulated pods with :class:`PodSpec` (device count + memory budget —
+pods may be *heterogeneous*, e.g. one group of large-memory devices next
+to many small ones).
+
+Routing is mesh-aware in the planner sense: for every pod the job's
+footprint is evaluated under *that pod's* memory model
+(``plan_forward`` / ``plan_backward``), so the same volume may be
+resident on a large-memory pod but need N streaming slabs on a small
+one.  :meth:`MultiPodScheduler.submit` models the completion makespan on
+each feasible pod — current per-device backlog plus the job's modeled
+cost, where a streaming job's cost scales with its slab-pass count under
+that pod's budget — and places the job on the pod that minimises it.
+Oversized jobs therefore gravitate to the pod whose streaming plan is
+cheapest, and small jobs to whichever pod is idlest.
+
+Quick start (two simulated pods, second one bigger)::
+
+    pods = [Pod(PodSpec("small", n_devices=2, memory=MemoryModel(...))),
+            Pod(PodSpec("big", n_devices=1, memory=MemoryModel(...)))]
+    mps = MultiPodScheduler(pods, transfer_dir="/ckpt/steal")
+    jid = mps.submit(job)              # routed by modeled makespan
+    mps.run()                          # cooperative; steals between rounds
+    image = mps.result(jid)
+
+For true thread-per-device execution drive the same object with
+:class:`repro.serve.driver.MultiPodDriver`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from ..core.algorithms.stepwise import get_algorithm
+from ..core.splitting import MemoryModel
+from .job import JobRecord, ReconJob
+from .metrics import ServeMetrics, merge_metrics
+from .scheduler import (DevicePool, Scheduler, estimate_job_footprint,
+                        modeled_step_passes)
+from .steal import (StealPolicy, effective_units, fleet_units, pod_load,
+                    steal_pass)
+
+
+@dataclasses.dataclass(frozen=True)
+class PodSpec:
+    """Description of one pod (host group) for pool construction.
+
+    ``jax_devices`` pins the pod to real devices (one slot each;
+    overrides ``n_devices``); without it the pod is simulated — slots
+    with a byte budget only, which is how tests and benchmarks drive a
+    "multi-host" fleet on one machine."""
+    name: str
+    n_devices: int = 1
+    memory: MemoryModel = MemoryModel()
+    jax_devices: Optional[Tuple[Any, ...]] = None
+    max_jobs_per_device: Optional[int] = None
+    placement: str = "spread"
+
+
+class Pod:
+    """One host group: a :class:`DevicePool` plus its :class:`Scheduler`."""
+
+    def __init__(self, spec: PodSpec, guard=None,
+                 snapshot_dir: Optional[str] = None):
+        self.spec = spec
+        self.pool = DevicePool(
+            n_devices=spec.n_devices, memory=spec.memory,
+            jax_devices=spec.jax_devices,
+            max_jobs_per_device=spec.max_jobs_per_device,
+            policy=spec.placement)
+        self.scheduler = Scheduler(pool=self.pool, guard=guard,
+                                   snapshot_dir=snapshot_dir)
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.pool.slots)
+
+    def __repr__(self) -> str:
+        return (f"Pod({self.name!r}, devices={self.n_devices}, "
+                f"usable={self.pool.memory.usable}B)")
+
+
+def pods_from_mesh(mesh, memory: Optional[MemoryModel] = None,
+                   pod_axis: str = "pod", **spec_kwargs) -> List[Pod]:
+    """One :class:`Pod` per group along the mesh's ``pod_axis`` (the whole
+    mesh as a single pod if the axis is absent), each pod's pool holding
+    one slot per device in its group."""
+    from ..launch.mesh import pod_device_groups
+    groups = pod_device_groups(mesh, pod_axis)
+    return [Pod(PodSpec(name=f"pod{i}", memory=memory or MemoryModel(),
+                        jax_devices=tuple(group), **spec_kwargs))
+            for i, group in enumerate(groups)]
+
+
+def modeled_job_seconds(job: ReconJob, pod: Pod,
+                        unit: Optional[float] = None,
+                        init: Optional[float] = None) -> Optional[float]:
+    """Modeled cost of running ``job`` on ``pod``, or None if the job can
+    never fit there (not even streamed).
+
+    The unit cost is the pod's observed per-pass step EMA, scaled by
+    :func:`repro.serve.scheduler.modeled_step_passes` — the slab-pass
+    multiplier under *that pod's* budget, so a pod with more memory per
+    device models (and is) cheaper for oversized volumes.  ``unit`` /
+    ``init`` supply the fleet-wide fallback for a pod with no
+    observations yet (see :func:`repro.serve.steal.fleet_units`); with
+    no fallback either, a cold pod costs 1.0 per pass."""
+    try:
+        fp = estimate_job_footprint(job, pod.pool.memory)
+        passes = modeled_step_passes(job, pod.pool.memory)
+    except Exception:
+        return None
+    if fp.bytes_on_device > pod.pool.fits_nowhere_bytes:
+        return None
+    alg = get_algorithm(job.algorithm)
+    iters = max(1, job.n_iter) if alg.iterative else 1
+    unit, init = effective_units(pod.scheduler, unit, init)
+    if unit is None:
+        unit = 1.0
+    if init is None:
+        init = 0.0
+    return init + iters * passes * unit
+
+
+class MultiPodScheduler:
+    """Routes jobs across pods and (optionally) rebalances them by work
+    stealing.
+
+    Parameters
+    ----------
+    pods : the pod set (see :class:`Pod`, :func:`pods_from_mesh`).
+    steal : enable work stealing between cooperative rounds (and in
+        :class:`~repro.serve.driver.MultiPodDriver`'s steal thread).
+    transfer_dir : directory jobs move through (manifest + COMMIT, the
+        durable-snapshot layout).  On a real cluster this is storage all
+        host groups mount; defaults to a scratch tempdir.
+    steal_policy : thresholds, see :class:`repro.serve.steal.StealPolicy`.
+    data_refs : job-id -> callable map letting *lazy* (data-ref) jobs be
+        re-resolved on the thief pod; lazy jobs without an entry are
+        never stolen.
+    """
+
+    def __init__(self, pods: Sequence[Pod], steal: bool = True,
+                 transfer_dir: Optional[str] = None,
+                 steal_policy: StealPolicy = StealPolicy(),
+                 data_refs: Optional[Dict[str, Callable]] = None):
+        if not pods:
+            raise ValueError("MultiPodScheduler needs at least one pod")
+        names = [p.name for p in pods]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate pod names: {names}")
+        self.pods = list(pods)
+        self.steal = steal and len(self.pods) > 1
+        self.transfer_dir = transfer_dir or tempfile.mkdtemp(
+            prefix="repro-steal-")
+        for p in self.pods:
+            sd = p.scheduler.snapshot_dir
+            if sd is not None and (os.path.abspath(sd)
+                                   == os.path.abspath(self.transfer_dir)):
+                raise ValueError(
+                    f"transfer_dir {self.transfer_dir!r} aliases pod "
+                    f"{p.name!r}'s snapshot_dir; hand-offs and durable "
+                    f"snapshots must use distinct directories")
+        self.steal_policy = steal_policy
+        self.data_refs = dict(data_refs or {})
+        self.stolen_jobs: List[str] = []      # every job a pass moved
+        self._home: Dict[str, str] = {}       # job_id -> submit-time pod
+        # a job mid-transfer (exported from the victim, not yet imported
+        # by the thief) is in *no* scheduler; the flag + generation
+        # counter keep `idle` honest so a driver cannot observe the
+        # fleet as done and stop while the last job is on the wire
+        self._stealing = threading.Event()
+        self._steal_gen = 0
+
+    # ---- submission / routing ---------------------------------------------
+
+    def _pod_by(self, pod: Union[int, str, Pod]) -> Pod:
+        if isinstance(pod, Pod):
+            return pod
+        if isinstance(pod, int):
+            return self.pods[pod]
+        for p in self.pods:
+            if p.name == pod:
+                return p
+        raise KeyError(f"no pod named {pod!r} "
+                       f"(have {[p.name for p in self.pods]})")
+
+    def route(self, job: ReconJob) -> Pod:
+        """Pod with the minimal modeled completion makespan for ``job``:
+        per-device backlog + the job's modeled cost under that pod's
+        topology, all on the fleet-shared unit scale (a cold pod borrows
+        the warm pods' EMAs, so an idle new pod is not mispriced against
+        a warm loaded one; ties: fewer devices busy, then pod order).
+        If no pod can ever hold the job, the largest-memory pod is
+        returned so its scheduler fails the job with the canonical
+        budget error."""
+        unit, init = fleet_units(self.pods)
+        best: Optional[Tuple[float, int, int]] = None
+        chosen: Optional[Pod] = None
+        for i, pod in enumerate(self.pods):
+            cost = modeled_job_seconds(job, pod, unit=unit, init=init)
+            if cost is None:
+                continue
+            backlog = pod_load(pod.scheduler, pod.n_devices,
+                               unit=unit, init=init)
+            busy = sum(1 for s in pod.pool.slots if s.jobs)
+            score = (backlog + cost, busy, i)
+            if best is None or score < best:
+                best, chosen = score, pod
+        if chosen is None:
+            return max(self.pods, key=lambda p: p.pool.memory.usable)
+        return chosen
+
+    def submit(self, job: ReconJob,
+               pod: Optional[Union[int, str, Pod]] = None) -> str:
+        """Submit ``job``, routed by modeled makespan — or pinned to
+        ``pod`` (index / name / object), which is how static per-pod
+        partitioning (tenant affinity) is expressed."""
+        target = self._pod_by(pod) if pod is not None else self.route(job)
+        jid = target.scheduler.submit(job)
+        self._home[jid] = target.name
+        return jid
+
+    # ---- lookups across pods ----------------------------------------------
+
+    def owner(self, job_id: str) -> Pod:
+        """Pod currently holding the job's record (stealing moves it)."""
+        for pod in self.pods:
+            if job_id in pod.scheduler.records:
+                return pod
+        raise KeyError(f"unknown job {job_id}")
+
+    def home(self, job_id: str) -> str:
+        """Name of the pod the job was *submitted* to (never changes)."""
+        return self._home[job_id]
+
+    def record(self, job_id: str) -> JobRecord:
+        return self.owner(job_id).scheduler.records[job_id]
+
+    def result(self, job_id: str):
+        return self.owner(job_id).scheduler.result(job_id)
+
+    @property
+    def idle(self) -> bool:
+        # valid only if no steal pass was in flight at any point during
+        # the pod scan: a pass could move a job from a pod we check
+        # *later* to one we checked *earlier*, making every pod look
+        # idle while the job is on the wire.  The flag covers an active
+        # pass; the generation counter covers a pass that started and
+        # finished entirely within our scan.
+        gen = self._steal_gen
+        if self._stealing.is_set():
+            return False
+        result = all(p.scheduler.idle for p in self.pods)
+        if self._stealing.is_set() or self._steal_gen != gen:
+            return False
+        return result
+
+    # ---- execution ---------------------------------------------------------
+
+    def steal_pass(self) -> List[str]:
+        """One explicit rebalancing pass (the cooperative loop and the
+        threaded driver both call this).  Returns moved job ids."""
+        if not self.steal:
+            return []
+        self._stealing.set()
+        self._steal_gen += 1
+        try:
+            moved = steal_pass(self.pods, self.transfer_dir,
+                               data_refs=self.data_refs,
+                               policy=self.steal_policy)
+        finally:
+            self._stealing.clear()
+        self.stolen_jobs.extend(moved)
+        return moved
+
+    def run(self, max_rounds: Optional[int] = None) -> ServeMetrics:
+        """Cooperative fleet loop: each round steps every pod's scheduler
+        one quantum, then runs a steal pass so idle pods pick up other
+        pods' parked surplus.  Single-threaded (one pod computes at a
+        time); use :class:`repro.serve.driver.MultiPodDriver` for real
+        per-device overlap.  Returns the merged fleet metrics."""
+        for pod in self.pods:
+            if pod.scheduler.metrics.wall_start is None:
+                pod.scheduler.metrics.wall_start = time.monotonic()
+        rounds = 0
+        while not self.idle:
+            if max_rounds is not None and rounds >= max_rounds:
+                break
+            for pod in self.pods:
+                pod.scheduler.step_quantum()
+            self.steal_pass()
+            rounds += 1
+        now = time.monotonic()
+        for pod in self.pods:
+            pod.scheduler.metrics.wall_end = now
+        return self.metrics()
+
+    # ---- reporting ---------------------------------------------------------
+
+    def metrics(self) -> ServeMetrics:
+        return merge_metrics([p.scheduler.metrics for p in self.pods])
+
+    def summary(self) -> Dict:
+        """Fleet summary (merged counters, fleet-wide makespan over every
+        device busy clock) plus a per-pod breakdown."""
+        busy: List[float] = []
+        for pod in self.pods:
+            busy.extend(pod.pool.busy_clocks())
+        out = self.metrics().summary(device_busy=busy)
+        out["pods"] = {p.name: p.scheduler.summary() for p in self.pods}
+        out["jobs_stolen"] = len(self.stolen_jobs)
+        return out

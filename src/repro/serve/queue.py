@@ -64,6 +64,14 @@ class PriorityJobQueue:
                     and self._records[entry[2]].status != JobStatus.CANCELLED]
             return [rec for _, rec in sorted(live, key=lambda t: t[0])]
 
+    def remove(self, job_id: str) -> Optional[JobRecord]:
+        """Take a queued record out *without* cancelling it (the work
+        stealing path: the record moves to another pod's queue intact).
+        The heap entry goes stale and is dropped lazily on pop/peek.
+        Returns the record, or None if the job is not queued here."""
+        with self._lock:
+            return self._records.pop(job_id, None)
+
     def cancel(self, job_id: str) -> bool:
         """Mark a queued job cancelled (lazily removed on pop)."""
         with self._lock:

@@ -62,6 +62,7 @@ import dataclasses
 import itertools
 import json
 import os
+import shutil
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
@@ -215,6 +216,23 @@ class DevicePool:
         return self.memory.usable
 
 
+def modeled_step_passes(job: ReconJob, memory: MemoryModel) -> float:
+    """Relative cost of one outer iteration of ``job`` under ``memory``,
+    in units of an in-core iteration (= 1.0).  A job the planners would
+    stream costs ``(forward slabs + backward slabs) / 2`` — the slab
+    counts are exactly what the paper's Alg 1-2 choose for that budget,
+    so a pod with more memory per device models (and is) cheaper for
+    oversized volumes.  This is the one cost model shared by multi-pod
+    routing and the work-stealing benefit check; raises if the job is
+    unplannable under ``memory``."""
+    fp = estimate_job_footprint(job, memory)
+    if not fp.streams:
+        return 1.0
+    plan_f = plan_forward(job.geo, job.n_angles, 1, memory)
+    plan_b = plan_backward(job.geo, job.n_angles, 1, memory)
+    return (plan_f.n_slabs + plan_b.n_slabs) / 2.0
+
+
 @dataclasses.dataclass
 class _Running:
     record: JobRecord
@@ -224,6 +242,7 @@ class _Running:
     claimed: bool = False             # a worker thread is mid-step
     preempt_requested: bool = False   # park at the next step boundary
     vtime: float = 0.0                # stride-scheduling virtual time
+    passes: float = 1.0               # slab-pass multiplier of one step
 
 
 class Scheduler:
@@ -259,6 +278,10 @@ class Scheduler:
         # per-job progress fingerprint at last snapshot (dedups the
         # periodic snapshot's disk writes for unchanged parked jobs)
         self._snapshotted: Dict[str, tuple] = {}
+        # job_id -> slab-pass multiplier / footprint under this pool's
+        # fixed budget (memos for the oft-polled load signals)
+        self._passes_cache: Dict[str, float] = {}
+        self._footprint_cache: Dict[str, JobFootprint] = {}
 
     # ---- client API --------------------------------------------------------
 
@@ -312,24 +335,16 @@ class Scheduler:
     def _mark_terminal_on_disk(self, rec: JobRecord) -> None:
         """Flip a previously-snapshotted job's spec to its terminal status
         so a later :meth:`restore` does not resurrect stale parked state
-        for work that already finished."""
+        for work that already finished, and delete the job's step
+        directories — the bulk of the payload (full projections arrays)
+        has no reader once the spec is terminal, and a long-lived server
+        would otherwise leak one checkpoint per job ever parked.  The
+        terminal spec stays behind as a tombstone."""
         if self.snapshot_dir is None:
             return
-        spec_path = os.path.join(self.snapshot_dir, "jobs",
-                                 rec.job.job_id, "spec.json")
-        if not os.path.isfile(spec_path):
-            return
-        try:
-            with open(spec_path) as f:
-                spec = json.load(f)
-            spec["status"] = rec.status.value
-            tmp = spec_path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump(spec, f, indent=1)
-            os.replace(tmp, spec_path)
-        except (OSError, ValueError):
-            # snapshot dir vanished or spec corrupt: nothing to stale-out
-            pass
+        _stale_job_dir(os.path.join(self.snapshot_dir, "jobs",
+                                    rec.job.job_id),
+                       rec.status.value)
 
     def _place(self, rec: JobRecord) -> bool:
         """Try to admit one record onto the pool.  Returns True if the
@@ -384,7 +399,8 @@ class Scheduler:
         # it "caught up" with long-resident jobs
         peers = [r.vtime for r in self.running.values() if r.slot is slot]
         self.running[rec.job.job_id] = _Running(
-            rec, executor, slot, vtime=min(peers, default=0.0))
+            rec, executor, slot, vtime=min(peers, default=0.0),
+            passes=self.job_passes(rec.job))
         return True
 
     def admit(self) -> None:
@@ -417,15 +433,18 @@ class Scheduler:
 
     def modeled_completion_seconds(self, rec: JobRecord) -> Optional[float]:
         """Modeled submit-to-completion time if ``rec`` were admitted now:
-        elapsed queue wait + modeled (re)init + remaining iterations at the
-        observed step cost.  ``None`` until a step has been observed."""
+        elapsed queue wait + modeled (re)init + remaining iterations at
+        the observed per-pass unit cost scaled by *this job's* slab-pass
+        multiplier (:func:`modeled_step_passes` — the shared cost model),
+        so a small in-core job is not priced at the cost of the streamed
+        giants the EMA was observed on.  ``None`` until a step has been
+        observed."""
         if self._step_ema is None:
             return None
-        alg = get_algorithm(rec.job.algorithm)
-        total = max(1, rec.job.n_iter) if alg.iterative else 1
-        remaining = max(0, total - rec.iterations_done)
         elapsed = time.monotonic() - rec.submit_time
-        return elapsed + (self._init_ema or 0.0) + remaining * self._step_ema
+        return (elapsed + (self._init_ema or 0.0)
+                + self._remaining_iters(rec) * self._step_ema
+                * self.job_passes(rec.job))
 
     def _reject_for_deadline(self, rec: JobRecord) -> bool:
         """True if the record was consumed by deadline admission control."""
@@ -542,8 +561,14 @@ class Scheduler:
     def _observe_step(self, run: _Running, dt: float) -> None:
         run.slot.busy_seconds += dt
         self.metrics.record_step(dt)
-        self._step_ema = (dt if self._step_ema is None
-                          else self._ema_alpha * dt
+        # the EMA tracks the *per-pass* unit cost: a streamed step's wall
+        # time is divided by its slab-pass multiplier, so steps observed
+        # on oversized jobs don't inflate the modeled cost of small ones
+        # (deadline admission would otherwise reject in-core jobs whose
+        # real steps are orders of magnitude cheaper than the mixed EMA)
+        unit = dt / max(run.passes, 1e-9)
+        self._step_ema = (unit if self._step_ema is None
+                          else self._ema_alpha * unit
                           + (1 - self._ema_alpha) * self._step_ema)
 
     def _fail_running(self, run: _Running, err: Exception) -> None:
@@ -725,6 +750,20 @@ class Scheduler:
             _write_job(ckpt_dir, job_id, spec, tree, step)
             with self._lock:
                 self._snapshotted[job_id] = fingerprint
+                # the write ran outside the lock: the job may have gone
+                # terminal meanwhile (cancel / completion / export to
+                # another pod, whose own stale-out no-opped because this
+                # spec did not exist yet).  Re-stale it now, or a restart
+                # would resurrect — and double-execute — finished work.
+                rec = self.records.get(job_id)
+                stale_status = None
+                if rec is None:
+                    stale_status = JobStatus.STOLEN.value   # exported
+                elif rec.done:
+                    stale_status = rec.status.value
+            if stale_status is not None:
+                _stale_job_dir(os.path.join(ckpt_dir, "jobs", job_id),
+                               stale_status)
         return len(payloads)
 
     def restore(self, ckpt_dir: str,
@@ -737,10 +776,17 @@ class Scheduler:
         ``data_refs`` supplies projection callables for jobs whose data
         was a lazy ref at snapshot time (refs cannot be persisted).
 
+        Failure is loud: a lazy job without a ``data_refs`` entry, a
+        truncated job directory (spec.json but no committed step), or a
+        job id this scheduler already knows all raise.  Jobs whose spec
+        records a terminal status (completed / failed / cancelled /
+        stolen) are skipped — they are finished or owned elsewhere, not
+        resumable work.
+
         Two-phase: every job directory is loaded and validated before the
-        scheduler is touched, so a missing data ref (which raises) leaves
-        it unchanged and the call can simply be retried.  Returns the
-        number of jobs restored."""
+        scheduler is touched, so a validation failure (which raises)
+        leaves it unchanged and the call can simply be retried.  Returns
+        the number of jobs restored."""
         jobs_root = os.path.join(ckpt_dir, "jobs")
         if not os.path.isdir(jobs_root):
             return 0
@@ -769,6 +815,176 @@ class Scheduler:
     def summary(self) -> Dict:
         return self.metrics.summary(device_busy=self.pool.busy_clocks())
 
+    # ---- multi-pod: load signals + job hand-off (work stealing) ------------
+
+    @property
+    def step_seconds_ema(self) -> Optional[float]:
+        """Observed *per-pass* unit step cost (EMA; a streamed step's
+        wall time is normalised by its slab-pass multiplier before it
+        enters the average).  None before any step."""
+        return self._step_ema
+
+    @property
+    def init_seconds_ema(self) -> Optional[float]:
+        """Observed executor init cost (EMA), None before any admission."""
+        return self._init_ema
+
+    def modeled_backlog_seconds(self, unit: Optional[float] = None,
+                                init: Optional[float] = None) -> float:
+        """Modeled seconds of work this scheduler still owes: remaining
+        iterations of every queued + running job at the per-pass unit
+        cost scaled by each job's slab-pass multiplier, plus a modeled
+        (re)init per queued job.  This is the load signal multi-pod
+        routing and work stealing balance against.
+
+        ``unit`` / ``init`` override the local EMAs — fleet callers pass
+        a *shared* unit so a cold pod (no observations, local fallback
+        1.0) and a warm pod (real seconds) compare on the same scale;
+        mixing the two would invert victim/thief decisions."""
+        with self._lock:
+            if unit is None:
+                unit = self._step_ema if self._step_ema is not None else 1.0
+            if init is None:
+                init = self._init_ema or 0.0
+            total = 0.0
+            for rec in self.queue.pending_records():
+                total += init + (unit * self._remaining_iters(rec)
+                                 * self.job_passes(rec.job))
+            for run in self.running.values():
+                total += (unit * self._remaining_iters(run.record)
+                          * run.passes)
+            return total
+
+    def job_passes(self, job: ReconJob) -> float:
+        """This job's slab-pass multiplier under the pool's budget (1.0
+        when unplannable — the placement path reports that failure).
+        Memoised per job id: the budget is fixed for this scheduler's
+        lifetime and the load signal is polled often (the fleet steal
+        thread), so the pure-python planners must not re-run per poll."""
+        cached = self._passes_cache.get(job.job_id)
+        if cached is not None:
+            return cached
+        try:
+            passes = modeled_step_passes(job, self.pool.memory)
+        except Exception:
+            passes = 1.0
+        self._passes_cache[job.job_id] = passes
+        return passes
+
+    def job_footprint(self, job: ReconJob) -> JobFootprint:
+        """Memoised :func:`estimate_job_footprint` under this pool's
+        budget (same rationale as :meth:`job_passes`; raises for an
+        unplannable job)."""
+        fp = self._footprint_cache.get(job.job_id)
+        if fp is None:
+            fp = estimate_job_footprint(job, self.pool.memory)
+            self._footprint_cache[job.job_id] = fp
+        return fp
+
+    @staticmethod
+    def _remaining_iters(rec: JobRecord) -> int:
+        alg = get_algorithm(rec.job.algorithm)
+        total = max(1, rec.job.n_iter) if alg.iterative else 1
+        return max(0, total - rec.iterations_done)
+
+    def steal_candidates(self) -> List[JobRecord]:
+        """Parked records another pod could take, cheapest-to-steal last:
+        the stealer works from the *tail* (lowest priority, latest
+        arrival), so this pod's head-of-line work keeps its position."""
+        with self._lock:
+            return list(self.queue.pending_records())
+
+    def export_job(self, job_id: str, transfer_dir: str) -> bool:
+        """Hand a *parked* (queued or preempted-parked) job off to another
+        pod: persist it under ``transfer_dir/jobs/<job_id>`` through
+        :func:`repro.checkpoint.sharded.save_checkpoint` (the same
+        manifest + COMMIT layout snapshots use — on a real cluster this
+        directory is the shared filesystem between hosts), then forget it
+        locally.  Running and terminal jobs are never exported; neither
+        are jobs whose projections are an unpersistable lazy ref (the
+        importer may still supply ``data_refs``, so the *stealer* decides
+        whether a lazy job is transferable).  Returns True if the job was
+        exported.
+
+        ``transfer_dir`` must not alias this scheduler's own
+        ``snapshot_dir``: the periodic snapshot's stale-out pass treats
+        any on-disk copy of a job it no longer owns as a stale snapshot,
+        and would destroy a live hand-off written to the same path."""
+        if (self.snapshot_dir is not None
+                and os.path.abspath(self.snapshot_dir)
+                == os.path.abspath(transfer_dir)):
+            raise ValueError(
+                f"export_job: transfer_dir {transfer_dir!r} aliases this "
+                f"scheduler's snapshot_dir; hand-offs and durable "
+                f"snapshots must use distinct directories")
+        with self._lock:
+            rec = self.queue.remove(job_id)
+            if rec is None:
+                return False
+            payload = _job_payload(rec)
+            del self.records[job_id]
+            self._snapshotted.pop(job_id, None)
+        try:
+            _write_job(transfer_dir, *payload)
+        except BaseException:
+            with self._lock:      # failed hand-off: the job stays ours
+                self.records[job_id] = rec
+                self.queue.push(rec)
+            raise
+        with self._lock:
+            self.metrics.stolen_out += 1
+        # a periodic snapshot may also have persisted this job under our
+        # own snapshot_dir (distinct from transfer_dir, checked above);
+        # flip that copy to "stolen" so a restart of *this* pod cannot
+        # resurrect (and double-execute) it
+        rec.status = JobStatus.STOLEN
+        self._mark_terminal_on_disk(rec)
+        return True
+
+    def import_job(self, transfer_dir: str, job_id: str,
+                   data_refs: Optional[Dict[str, Callable]] = None) -> str:
+        """Adopt a job another pod exported with :meth:`export_job`: load
+        its spec + latest committed step from ``transfer_dir`` and enqueue
+        it here.  The step-wise checkpoint travels with it, so the job
+        resumes on this pod bit-identically to never having moved.
+
+        On success the transfer copy is *consumed*: its spec is flipped
+        to ``stolen`` first (atomic replace — a crash before the delete
+        cannot leave a resumable duplicate for a later restore over the
+        transfer dir to double-execute) and the directory is then
+        removed, so a long-lived fleet does not leak one full checkpoint
+        per steal on the shared mount.  Failed imports (missing data
+        ref, duplicate id) leave the copy intact for a retry."""
+        job_dir = os.path.join(transfer_dir, "jobs", job_id)
+        rec = _load_job(job_dir, data_refs or {})
+        if rec is None:
+            raise ValueError(f"import_job: no resumable job at "
+                             f"{transfer_dir}/jobs/{job_id}")
+        with self._lock:
+            if rec.job.job_id in self.records:
+                raise ValueError(f"import_job: {rec.job.job_id} already "
+                                 f"known to this scheduler")
+            self.records[rec.job.job_id] = rec
+            self.queue.push(rec)
+            self.metrics.stolen_in += 1
+            current = next(self._seq)
+            self._seq = itertools.count(max(current, rec.seq + 1))
+        _consume_transfer_copy(job_dir)
+        return rec.job.job_id
+
+    def reclaim_export(self, transfer_dir: str, job_id: str,
+                       data_refs: Optional[Dict[str, Callable]] = None
+                       ) -> str:
+        """Undo an :meth:`export_job` whose import on the thief failed:
+        re-adopt the (intact) transfer copy ourselves and cancel the
+        steal accounting, so the job is never stranded in no scheduler.
+        The stealer calls this when the thief raises mid-transfer."""
+        jid = self.import_job(transfer_dir, job_id, data_refs=data_refs)
+        with self._lock:
+            self.metrics.stolen_in -= 1
+            self.metrics.stolen_out -= 1
+        return jid
+
 
 # --------------------------------------------------------------------------
 # durable job persistence (one directory per job under <ckpt_dir>/jobs/)
@@ -776,17 +992,33 @@ class Scheduler:
 #   jobs/<job_id>/
 #     spec.json              # job spec + record metadata (atomic replace)
 #     step_XXXXXXXX/         # save_checkpoint output: manifest + COMMIT
-#       manifest.json
+#       manifest.json        # {"step": N, "leaves": {key: file/shape/dtype}}
 #       leaf_*.npy           # angles, projections, state.<field> leaves
-#       COMMIT
+#       COMMIT               # written last: the step's crash-safe marker
+#
+# The step directory is exactly what repro.checkpoint.sharded writes: the
+# manifest maps each flat tree key ("['angles']", "['projections']",
+# "['state.x']", ...) to its leaf file, shape and dtype, and COMMIT is
+# created only after every leaf + the manifest are on disk.  Restore
+# trusts *only* committed steps: manifest_target() rebuilds the flat
+# {name: zeros} tree from the manifest alone (a restarted process has no
+# in-memory structure to validate against) and restore_checkpoint() then
+# fills it, re-checking every leaf's shape.  State leaves carry a
+# "state." prefix to keep them apart from the job's input data; python
+# scalars among them record their type in spec.json ("scalar_types") so
+# disk restore hands back exactly what the in-memory preemption path
+# produces (np.save would widen an int into a 0-d int64 array).
 #
 # The step number is the job's completed iteration count, so repeated
 # snapshots of a progressing job accumulate (GC keeps the latest two) and
 # latest_step() always names the most advanced committed state.
+#
+# The same layout moves jobs *between* pods: export_job() writes one
+# jobs/<job_id> directory under a transfer dir, import_job() reads it.
 # --------------------------------------------------------------------------
 
 _STATE_PREFIX = "state."
-_TERMINAL = ("completed", "failed", "cancelled")
+_TERMINAL = ("completed", "failed", "cancelled", "stolen")
 
 
 def _scalar_tag(v) -> str:
@@ -851,10 +1083,60 @@ def _write_job(ckpt_dir: str, job_id: str, spec: Dict,
     # committed step for progress), never a new spec pointing at state
     # that was never committed
     save_checkpoint(job_dir, step=step, tree=tree, keep=2)
-    tmp = os.path.join(job_dir, "spec.json.tmp")
+    _atomic_write_json(os.path.join(job_dir, "spec.json"), spec)
+
+
+def _atomic_write_json(path: str, obj: Dict) -> None:
+    """Write ``obj`` as json via a temp file + atomic rename, so readers
+    only ever see a complete document (the one spec-write discipline
+    shared by snapshot, stale-out and transfer consumption)."""
+    tmp = path + ".tmp"
     with open(tmp, "w") as f:
-        json.dump(spec, f, indent=1)
-    os.replace(tmp, os.path.join(job_dir, "spec.json"))
+        json.dump(obj, f, indent=1)
+    os.replace(tmp, path)
+
+
+def _set_spec_status(job_dir: str, status: str) -> bool:
+    """Atomically rewrite ``job_dir/spec.json`` with ``status``; False if
+    there is no (readable) spec to rewrite."""
+    spec_path = os.path.join(job_dir, "spec.json")
+    if not os.path.isfile(spec_path):
+        return False
+    try:
+        with open(spec_path) as f:
+            spec = json.load(f)
+        spec["status"] = status
+        _atomic_write_json(spec_path, spec)
+        return True
+    except (OSError, ValueError):
+        # dir vanished or spec corrupt: nothing trustworthy to rewrite
+        return False
+
+
+def _stale_job_dir(job_dir: str, status: str) -> None:
+    """Best-effort retirement of a persisted job: terminal spec first
+    (atomic — the moment it lands, no restore will resurrect the job),
+    then reclaim the step directories' bytes.  Spec-less step data is
+    ignored by :func:`_load_job`, so a crash between the two leaves
+    nothing resumable either way."""
+    if not _set_spec_status(job_dir, status):
+        return
+    try:
+        for d in os.listdir(job_dir):
+            if d.startswith("step_"):
+                shutil.rmtree(os.path.join(job_dir, d), ignore_errors=True)
+    except OSError:
+        pass
+
+
+def _consume_transfer_copy(job_dir: str) -> None:
+    """Retire a successfully-imported transfer directory: mark the spec
+    ``stolen`` (atomic), then delete the directory.  Best-effort — a
+    shared-mount hiccup must not fail the import that already
+    succeeded, and the terminal spec alone is enough to keep any later
+    restore from resurrecting the copy."""
+    if _set_spec_status(job_dir, "stolen"):
+        shutil.rmtree(job_dir, ignore_errors=True)
 
 
 def _geo_from_spec(d: Dict) -> ConeGeometry:
@@ -873,7 +1155,14 @@ def _load_job(job_dir: str,
         return None
     step = latest_step(job_dir)
     if step is None:
-        return None            # never committed: nothing trustworthy
+        # the writer commits step data *before* the spec, so a live spec
+        # with no committed step means the snapshot was truncated or
+        # tampered with -- refuse loudly instead of silently dropping a
+        # job the operator believes is parked safely on disk
+        raise ValueError(
+            f"restore: job {spec['job_id']} has spec.json but no committed "
+            f"step directory under {job_dir} (missing/removed COMMIT?); "
+            f"snapshot is truncated -- refusing to resume silently")
     tree = restore_checkpoint(job_dir, step, manifest_target(job_dir, step))
     angles = np.asarray(tree.pop("angles"), np.float32)
     if spec["projections_persisted"]:

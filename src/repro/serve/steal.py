@@ -1,0 +1,218 @@
+"""Work stealing between pods: idle pods take parked jobs from loaded ones.
+
+Static per-pod partitioning (each tenant pinned to "their" pod) strands
+capacity the moment arrivals are imbalanced: one pod builds a backlog
+while another sits idle.  The stealing protocol here closes that gap
+without any central queue:
+
+* each pod's :class:`~repro.serve.scheduler.Scheduler` exposes a load
+  signal (:meth:`Scheduler.modeled_backlog_seconds` — remaining iterations
+  of queued + running work at the observed step cost, normalised per
+  device) and a list of *parked* records a thief could take
+  (:meth:`Scheduler.steal_candidates`);
+* a :func:`steal_pass` ranks pods by that signal and moves jobs from the
+  most loaded pod to the least loaded one while the imbalance exceeds
+  :class:`StealPolicy` thresholds;
+* the transfer is the *same* on-disk format durable snapshots use
+  (:mod:`repro.checkpoint.sharded` manifest + COMMIT, one directory per
+  job under ``transfer_dir/jobs/``): the victim's
+  :meth:`Scheduler.export_job` persists spec + latest step-wise
+  checkpoint and forgets the job; the thief's
+  :meth:`Scheduler.import_job` loads and enqueues it.  Because the
+  checkpoint carries every recurrence variable and ``init`` is
+  deterministic, the stolen job finishes **bit-identically** to never
+  having moved (asserted in tests and ``benchmarks/bench_serve.py``).
+
+Steal victims are taken from the *tail* of the victim's queue (lowest
+priority, latest arrival) — the classic deque discipline — so the
+victim's head-of-line work keeps its position and only surplus moves.
+
+Lazy data refs (callables) cannot be serialised; a lazy job is stolen
+only when the stealer's ``data_refs`` can re-resolve it on the thief
+(think: an object-store URI both hosts can read), otherwise it is
+skipped.
+
+On a real cluster ``transfer_dir`` is a filesystem both host groups
+mount; on a single host it is just a scratch directory.  Either way the
+COMMIT marker means a crash mid-transfer can never lose the job: the
+victim forgets it only after the write commits, and an uncommitted
+transfer directory is invisible to :meth:`Scheduler.import_job`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .scheduler import Scheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class StealPolicy:
+    """Thresholds that keep stealing from thrashing.
+
+    A steal moves real bytes (checkpoint + projections) between pods, so
+    it must only happen when the imbalance is worth the copy.
+    """
+
+    #: victim's per-device modeled backlog must exceed the thief's by this
+    #: many modeled seconds before anything moves
+    min_imbalance_seconds: float = 0.0
+    #: victim must still have at least this many parked jobs *after* the
+    #: steal (never steal a pod's last queued job out from under a device
+    #: that is about to free up) — 0 allows draining the queue entirely
+    min_victim_queue_after: int = 0
+    #: at most this many jobs move per :func:`steal_pass` call.  The
+    #: benefit check (a move must not invert the imbalance) is what
+    #: stops a pass, so the default is generous: under CPU contention
+    #: the stealing thread may get scheduled rarely, and the first pass
+    #: must be allowed to balance the fleet in one go.
+    max_jobs_per_pass: int = 16
+
+
+def fleet_units(pods: Sequence) -> Tuple[float, float]:
+    """Fleet-wide fallback (per-pass unit cost, init cost) for pods with
+    no local observations: the mean of the warm pods' EMAs, or (1.0, 0)
+    on an entirely cold fleet.  Comparing a cold pod's constant-unit
+    backlog against a warm pod's real-seconds backlog would invert
+    victim/thief (and routing) decisions — e.g. ship work *to* the
+    overloaded warm pod because its tiny EMA makes its backlog look
+    smaller — so every fleet-level comparison shares these units."""
+    emas = [p.scheduler.step_seconds_ema for p in pods
+            if p.scheduler.step_seconds_ema is not None]
+    inits = [p.scheduler.init_seconds_ema for p in pods
+             if p.scheduler.init_seconds_ema is not None]
+    unit = sum(emas) / len(emas) if emas else 1.0
+    init = sum(inits) / len(inits) if inits else 0.0
+    return unit, init
+
+
+def effective_units(scheduler: Scheduler, default_unit: Optional[float],
+                    default_init: Optional[float]
+                    ) -> Tuple[Optional[float], Optional[float]]:
+    """Resolve one pod's (unit, init): its own observed EMAs where it has
+    them, the fleet-wide fallbacks otherwise.  The single place the
+    warm-beats-fallback rule lives — every fleet comparison (backlog
+    ranking, steal cost, routing) must resolve units through here or the
+    shared-scale guarantee silently breaks."""
+    unit = scheduler.step_seconds_ema
+    init = scheduler.init_seconds_ema
+    return (default_unit if unit is None else unit,
+            default_init if init is None else init)
+
+
+def pod_load(scheduler: Scheduler, n_devices: int,
+             unit: Optional[float] = None,
+             init: Optional[float] = None) -> float:
+    """Per-device modeled backlog: the signal pods are ranked by.  Pass
+    the :func:`fleet_units` fallbacks when comparing across pods; the
+    pod's own EMAs still win where it has them."""
+    unit, init = effective_units(scheduler, unit, init)
+    return (scheduler.modeled_backlog_seconds(unit=unit, init=init)
+            / max(1, n_devices))
+
+
+def _stealable(rec, thief, data_refs: Dict[str, Callable]) -> bool:
+    """Can this parked record run on the thief pod at all?"""
+    if callable(rec.job.projections) and rec.job.job_id not in data_refs:
+        return False               # lazy ref the thief cannot re-resolve
+    try:
+        fp = thief.scheduler.job_footprint(rec.job)   # memoised
+    except Exception:
+        return False               # unplannable under the thief's budget
+    return fp.bytes_on_device <= thief.pool.fits_nowhere_bytes
+
+
+def steal_once(victim, thief, transfer_dir: str,
+               data_refs: Optional[Dict[str, Callable]] = None,
+               policy: StealPolicy = StealPolicy(),
+               exclude: Sequence[str] = (),
+               units: Optional[Tuple[float, float]] = None) -> Optional[str]:
+    """Move one parked job from the ``victim`` pod to the ``thief`` pod
+    (each exposing ``.scheduler``, ``.pool``, ``.n_devices``) through
+    ``transfer_dir``.  Scans the victim's queue from the tail for the
+    first record the thief can hold, exports it (manifest + COMMIT) and
+    imports it on the thief.  Returns the stolen job id, or None if
+    nothing moved.
+
+    A candidate is skipped when adopting it would load the thief past
+    the victim's *current* load — a steal that inverts the imbalance
+    would just be stolen back (ping-pong), moving bytes for nothing.
+    ``exclude`` lists jobs a caller has already moved this pass;
+    ``units`` is the :func:`fleet_units` pair (computed over this pod
+    pair when not given) keeping cold/warm pods on one scale.
+
+    If the thief's import fails after a successful export (transient
+    shared-mount error, validation failure), the victim *reclaims* the
+    intact transfer copy — a submitted job must never end up in no
+    scheduler — and the original error propagates only if the reclaim
+    itself also fails."""
+    data_refs = data_refs or {}
+    candidates = victim.scheduler.steal_candidates()
+    if len(candidates) <= policy.min_victim_queue_after:
+        return None
+    default_unit, default_init = units or fleet_units((victim, thief))
+    victim_load = pod_load(victim.scheduler, victim.n_devices,
+                           unit=default_unit, init=default_init)
+    thief_load = pod_load(thief.scheduler, thief.n_devices,
+                          unit=default_unit, init=default_init)
+    unit, init = effective_units(thief.scheduler, default_unit,
+                                 default_init)
+    for rec in reversed(candidates):       # tail first: surplus work
+        jid = rec.job.job_id
+        if jid in exclude:
+            continue
+        if not _stealable(rec, thief, data_refs):
+            continue
+        # the job's cost *on the thief*: remaining iterations scaled by
+        # the slab-pass multiplier under the thief's budget (the same
+        # memoised model routing uses — a job that is resident on the
+        # victim may stream expensively on a smaller-memory thief) plus
+        # a re-init
+        passes = thief.scheduler.job_passes(rec.job)
+        cost = init + Scheduler._remaining_iters(rec) * passes * unit
+        if thief_load + cost / max(1, thief.n_devices) > victim_load:
+            continue                       # would invert the imbalance
+        # export can race a concurrent admission popping the record; a
+        # False return just means the victim got to it first
+        if not victim.scheduler.export_job(jid, transfer_dir):
+            continue
+        try:
+            return thief.scheduler.import_job(transfer_dir, jid,
+                                              data_refs=data_refs)
+        except Exception:
+            victim.scheduler.reclaim_export(transfer_dir, jid,
+                                            data_refs=data_refs)
+            return None
+    return None
+
+
+def steal_pass(pods: Sequence, transfer_dir: str,
+               data_refs: Optional[Dict[str, Callable]] = None,
+               policy: StealPolicy = StealPolicy()) -> List[str]:
+    """One rebalancing pass over a pod set (each pod exposing
+    ``.scheduler``, ``.pool`` and ``.n_devices``): repeatedly pair the
+    most loaded pod with the least loaded one and move tail jobs while
+    the modeled imbalance exceeds ``policy.min_imbalance_seconds``.
+    Jobs already moved this pass are never moved again.  Returns the
+    ids of every job moved (possibly empty)."""
+    moved: List[str] = []
+    if len(pods) < 2:
+        return moved
+    for _ in range(policy.max_jobs_per_pass):
+        units = fleet_units(pods)
+        unit, init = units
+        ranked: List[Tuple[float, object]] = sorted(
+            ((pod_load(p.scheduler, p.n_devices, unit=unit, init=init), p)
+             for p in pods),
+            key=lambda t: t[0])
+        (lo, thief), (hi, victim) = ranked[0], ranked[-1]
+        if victim is thief or hi - lo <= policy.min_imbalance_seconds:
+            return moved
+        jid = steal_once(victim, thief, transfer_dir,
+                         data_refs=data_refs, policy=policy,
+                         exclude=moved, units=units)
+        if jid is None:
+            return moved
+        moved.append(jid)
+    return moved

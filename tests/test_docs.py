@@ -1,0 +1,29 @@
+"""Documentation must not rot: intra-repo markdown links resolve, and
+the fenced examples in README.md / docs/serve.md execute under doctest
+(the CI docs job runs the same checks via tools/check_docs.py)."""
+
+import importlib.util
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _check_docs():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", ROOT / "tools" / "check_docs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_required_docs_exist():
+    for rel in ("README.md", "docs/serve.md", "ROADMAP.md"):
+        assert (ROOT / rel).is_file(), f"{rel} missing"
+
+
+def test_markdown_links_resolve():
+    assert _check_docs().check_links(ROOT) == []
+
+
+def test_doc_examples_run_under_doctest():
+    assert _check_docs().run_doctests(ROOT) == []

@@ -1,0 +1,583 @@
+"""Multi-pod serving: pod construction from meshes, mesh-aware routing,
+work stealing (bit-identical stolen resume), the threaded fleet driver,
+fleet metrics, and the Scheduler.restore error paths (lazy refs, stale
+terminal specs, truncated no-COMMIT snapshots)."""
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import phantoms
+from repro.core.algorithms import cgls, ossart
+from repro.core.geometry import ConeGeometry, circular_angles
+from repro.core.splitting import MemoryModel
+from repro.serve import (JobStatus, MultiPodDriver, MultiPodScheduler, Pod,
+                         PodSpec, ReconJob, Scheduler, StealPolicy,
+                         merge_metrics, modeled_job_seconds, pods_from_mesh,
+                         steal_pass)
+from repro.serve.metrics import ServeMetrics
+
+GEO = ConeGeometry.nice(16)
+ANGLES = circular_angles(12)
+PROJ = phantoms.sphere_projection_analytic(GEO, ANGLES)
+
+BIG_GEO = ConeGeometry.nice(32)
+BIG_ANGLES = circular_angles(16)
+
+KIB = 1024
+
+
+def _mem(kib, frac=1.0):
+    return MemoryModel(device_bytes=kib * KIB, usable_fraction=frac)
+
+
+def _job(alg="cgls", prio=0, n_iter=2, **kw):
+    return ReconJob(alg, GEO, ANGLES, PROJ, n_iter=n_iter, priority=prio,
+                    **kw)
+
+
+def _pods(n=2, kib=220, devices=1):
+    return [Pod(PodSpec(f"p{i}", n_devices=devices, memory=_mem(kib)))
+            for i in range(n)]
+
+
+# --------------------------------------------------------------------------
+# pod construction
+# --------------------------------------------------------------------------
+
+def test_pods_from_mesh_groups_by_pod_axis():
+    from repro.core.compat import make_mesh
+    # CPU test rig has one device; a (1, 1)-shaped pod mesh still must
+    # produce one pod per pod index with that pod's devices in its pool
+    mesh = make_mesh((1, 1), ("pod", "data"))
+    pods = pods_from_mesh(mesh, memory=_mem(220))
+    assert len(pods) == 1
+    assert pods[0].n_devices == 1
+    assert pods[0].pool.slots[0].jax_device is not None
+
+
+def test_pods_from_mesh_without_pod_axis_is_single_pod():
+    from repro.launch.mesh import make_host_mesh
+    pods = pods_from_mesh(make_host_mesh(), memory=_mem(220))
+    assert len(pods) == 1
+    import jax
+    assert pods[0].n_devices == jax.local_device_count()
+
+
+def test_pod_device_groups_splits_leading_axis():
+    from repro.launch.mesh import pod_device_groups
+
+    class FakeMesh:
+        axis_names = ("pod", "data")
+        devices = np.arange(6).reshape(2, 3)
+
+    groups = pod_device_groups(FakeMesh())
+    assert [sorted(g) for g in groups] == [[0, 1, 2], [3, 4, 5]]
+    FakeMesh.axis_names = ("data", "model")
+    assert pod_device_groups(FakeMesh()) == [[0, 1, 2, 3, 4, 5]]
+
+
+def test_multipod_rejects_duplicate_names_and_empty():
+    with pytest.raises(ValueError, match="duplicate"):
+        MultiPodScheduler(_pods(1) + _pods(1))
+    with pytest.raises(ValueError, match="at least one"):
+        MultiPodScheduler([])
+
+
+# --------------------------------------------------------------------------
+# mesh-aware routing
+# --------------------------------------------------------------------------
+
+def test_route_oversized_job_to_pod_with_cheaper_slab_plan():
+    """A 32^3 volume streams in many slabs on a 220 KiB pod but is
+    resident on an 8 MiB pod: the modeled makespan must route it to the
+    big pod even though the small pod has more devices."""
+    small = Pod(PodSpec("small", n_devices=3, memory=_mem(220)))
+    big = Pod(PodSpec("big", n_devices=1, memory=_mem(8 * KIB)))
+    mps = MultiPodScheduler([small, big], steal=False)
+    big_proj = phantoms.sphere_projection_analytic(BIG_GEO, BIG_ANGLES)
+    job = ReconJob("ossart", BIG_GEO, BIG_ANGLES, big_proj, n_iter=1,
+                   params={"subset_size": 16})
+    assert modeled_job_seconds(job, big) < modeled_job_seconds(job, small)
+    jid = mps.submit(job)
+    assert mps.owner(jid).name == "big"
+    assert mps.home(jid) == "big"
+
+
+def test_route_balances_load_across_equal_pods():
+    """Equal pods: submissions spread by modeled backlog, not all on
+    pod 0."""
+    mps = MultiPodScheduler(_pods(2), steal=False)
+    jids = [mps.submit(_job(n_iter=4)) for _ in range(4)]
+    owners = {mps.owner(j).name for j in jids}
+    assert owners == {"p0", "p1"}
+
+
+def test_route_infeasible_everywhere_fails_on_largest_pod():
+    mps = MultiPodScheduler(_pods(2, kib=100), steal=False)
+    jid = mps.submit(_job(memory_hint_bytes=10 * 1024 * KIB))
+    mps.run(max_rounds=2)
+    rec = mps.record(jid)
+    assert rec.status is JobStatus.FAILED
+    assert "exceeds" in rec.error
+
+
+def test_submit_pinned_overrides_routing():
+    mps = MultiPodScheduler(_pods(2), steal=False)
+    for pin, want in ((1, "p1"), ("p0", "p0")):
+        jid = mps.submit(_job(), pod=pin)
+        assert mps.owner(jid).name == want
+    with pytest.raises(KeyError, match="no pod named"):
+        mps.submit(_job(), pod="nope")
+
+
+# --------------------------------------------------------------------------
+# work stealing
+# --------------------------------------------------------------------------
+
+def test_steal_moves_parked_job_and_result_is_bit_identical(tmp_path):
+    """All jobs pinned to pod 0 (static-partitioning imbalance): the
+    idle pod must steal parked work through the manifest+COMMIT transfer
+    and every final volume must equal the monolithic (unstolen) run."""
+    mps = MultiPodScheduler(_pods(2), transfer_dir=str(tmp_path))
+    jids = [mps.submit(_job(n_iter=3), pod=0) for _ in range(4)]
+    mps.run()
+    assert mps.stolen_jobs                       # something moved
+    m = mps.metrics()
+    assert m.stolen_out == m.stolen_in == len(mps.stolen_jobs)
+    owners = {mps.owner(j).name for j in jids}
+    assert owners == {"p0", "p1"}                # fleet actually balanced
+    want = np.asarray(cgls(PROJ, GEO, ANGLES, n_iter=3))
+    for j in jids:
+        assert mps.record(j).status is JobStatus.COMPLETED
+        np.testing.assert_array_equal(mps.result(j), want)
+    # successful imports consume their transfer copies (no disk leak,
+    # nothing a later restore over the transfer dir could resurrect)
+    for jid in mps.stolen_jobs:
+        assert not os.path.exists(os.path.join(str(tmp_path), "jobs", jid))
+
+
+def test_steal_preempted_job_resumes_bit_identically_on_thief(tmp_path):
+    """A job parked *mid-progress* (preempted with a step-wise
+    checkpoint) is stolen and must finish on the thief bit-identically —
+    the checkpoint travels in the transfer."""
+    pods = _pods(2, kib=100)                     # one resident job per pod
+    victim = pods[0].scheduler
+    a = victim.submit(_job("ossart", prio=0, n_iter=6,
+                           params={"subset_size": 4}))
+    victim.run(max_quanta=2)                     # make progress
+    assert victim.records[a].iterations_done >= 1
+    hi = victim.submit(_job(prio=9, n_iter=2))   # preempts + parks `a`
+    victim.step_quantum()
+    assert victim.records[a].status is JobStatus.PREEMPTED
+    done_before = victim.records[a].iterations_done
+
+    moved = steal_pass(pods, str(tmp_path))
+    assert moved == [a]
+    thief = pods[1].scheduler
+    assert a in thief.records and a not in victim.records
+    assert thief.records[a].iterations_done == done_before
+    thief.run()
+    victim.run()
+    np.testing.assert_array_equal(
+        thief.result(a),
+        np.asarray(ossart(PROJ, GEO, ANGLES, n_iter=6, subset_size=4)))
+    np.testing.assert_array_equal(
+        victim.result(hi), np.asarray(cgls(PROJ, GEO, ANGLES, n_iter=2)))
+
+
+def test_steal_skips_lazy_jobs_without_data_refs(tmp_path):
+    pods = _pods(2, kib=100)
+    busy = pods[0].scheduler.submit(_job(n_iter=2))      # occupies the slot
+    lazy = pods[0].scheduler.submit(
+        ReconJob("cgls", GEO, ANGLES, lambda: PROJ, n_iter=2))
+    pods[0].scheduler.admit()
+    assert lazy in {r.job.job_id
+                    for r in pods[0].scheduler.steal_candidates()}
+    assert steal_pass(pods, str(tmp_path)) == []         # unresolvable ref
+    moved = steal_pass(pods, str(tmp_path),
+                       data_refs={lazy: lambda: PROJ})
+    assert moved == [lazy]
+    for p in pods:
+        p.scheduler.run()
+    np.testing.assert_array_equal(
+        pods[1].scheduler.result(lazy),
+        np.asarray(cgls(PROJ, GEO, ANGLES, n_iter=2)))
+    assert pods[0].scheduler.result(busy) is not None
+
+
+def test_steal_respects_thief_budget(tmp_path):
+    """A job that can never fit on the thief (even streamed) stays put."""
+    big_pod = Pod(PodSpec("big", memory=_mem(8 * KIB)))
+    tiny_pod = Pod(PodSpec("tiny", memory=_mem(100)))
+    hold = big_pod.scheduler.submit(_job(memory_hint_bytes=7000 * KIB,
+                                         n_iter=1))
+    parked = big_pod.scheduler.submit(_job(memory_hint_bytes=5000 * KIB,
+                                           n_iter=1))
+    big_pod.scheduler.admit()
+    assert steal_pass([big_pod, tiny_pod], str(tmp_path)) == []
+    assert parked in big_pod.scheduler.records
+    big_pod.scheduler.run()
+    assert big_pod.scheduler.records[hold].status is JobStatus.COMPLETED
+
+
+def test_steal_benefit_check_uses_thief_slab_cost(tmp_path):
+    """A job resident on the loaded big-memory pod would stream in many
+    slabs on the small idle thief; the slab-scaled cost (the same model
+    routing uses) makes the move imbalance-inverting, so it must not
+    happen even though the job technically fits the thief streamed."""
+    from repro.serve.scheduler import modeled_step_passes
+    big = Pod(PodSpec("big", memory=_mem(8 * KIB)))
+    tiny = Pod(PodSpec("tiny", memory=_mem(220)))
+    big_proj = phantoms.sphere_projection_analytic(BIG_GEO, BIG_ANGLES)
+    # 4 iterations: unscaled the move always looks beneficial (cost 4 vs
+    # a victim load of init + 4 + 2), slab-scaled (x3.5 on the tiny pod)
+    # it always inverts — so the veto below can only come from the slab
+    # multiplier, not from compile-time noise in the victim's init EMA
+    job = ReconJob("ossart", BIG_GEO, BIG_ANGLES, big_proj, n_iter=4,
+                   params={"subset_size": 16})
+    assert modeled_step_passes(job, big.pool.memory) == 1.0
+    passes_tiny = modeled_step_passes(job, tiny.pool.memory)
+    assert passes_tiny > 3.0                     # streams in many slabs
+    hold = big.scheduler.submit(_job(memory_hint_bytes=7800 * KIB,
+                                     n_iter=2))
+    parked = big.scheduler.submit(job)
+    big.scheduler.admit()
+    assert parked in {r.job.job_id
+                      for r in big.scheduler.steal_candidates()}
+    assert steal_pass([big, tiny], str(tmp_path)) == []
+    assert parked in big.scheduler.records
+    big.scheduler.run()
+    assert big.scheduler.records[hold].status is JobStatus.COMPLETED
+
+
+def test_steal_policy_thresholds(tmp_path):
+    pods = _pods(2)
+    for _ in range(3):
+        pods[0].scheduler.submit(_job(n_iter=2))
+    # imbalance below the threshold: nothing moves
+    assert steal_pass(pods, str(tmp_path),
+                      policy=StealPolicy(min_imbalance_seconds=1e9)) == []
+    # keep-one policy: victim retains at least one parked job
+    moved = steal_pass(pods, str(tmp_path),
+                       policy=StealPolicy(min_victim_queue_after=2,
+                                          max_jobs_per_pass=8))
+    candidates = pods[0].scheduler.steal_candidates()
+    assert len(candidates) >= 2
+    assert len(moved) <= 1
+
+
+def test_steal_import_failure_reclaims_job_on_victim(tmp_path, monkeypatch):
+    """If the thief's import blows up after a successful export
+    (transient transfer-mount error), the victim must re-adopt the job —
+    a submitted job may never end up in no scheduler — and the steal
+    accounting must cancel out."""
+    from repro.serve.steal import steal_once
+    pods = _pods(2, kib=100)
+    victim, thief = pods
+    hold = victim.scheduler.submit(_job(n_iter=2))
+    parked = victim.scheduler.submit(_job(n_iter=2))
+    victim.scheduler.admit()
+
+    def broken_import(transfer_dir, job_id, data_refs=None):
+        raise OSError("transfer mount gone")
+
+    monkeypatch.setattr(thief.scheduler, "import_job", broken_import)
+    assert steal_once(victim, thief, str(tmp_path)) is None
+    assert parked in victim.scheduler.records       # reclaimed
+    m = victim.scheduler.metrics
+    assert m.stolen_out == 0 and m.stolen_in == 0
+    victim.scheduler.run()
+    want = np.asarray(cgls(PROJ, GEO, ANGLES, n_iter=2))
+    for jid in (hold, parked):
+        np.testing.assert_array_equal(victim.scheduler.result(jid), want)
+
+
+def test_route_and_steal_do_not_favor_warm_pod_unit_skew(tmp_path):
+    """A warm pod's real-seconds EMA must not make its backlog look
+    cheaper than an idle cold pod priced in 1.0 model units: the fleet
+    comparisons share one unit scale, so the idle pod wins routing and
+    is never selected as the steal victim."""
+    from repro.serve.steal import fleet_units, pod_load
+    pods = _pods(2)
+    warm, cold = pods
+    for _ in range(2):                       # warm up pod 0's EMAs
+        warm.scheduler.submit(_job(n_iter=2))
+    warm.scheduler.run()
+    assert warm.scheduler.step_seconds_ema is not None
+    assert cold.scheduler.step_seconds_ema is None
+    # load the warm pod with parked work
+    held = [warm.scheduler.submit(_job(n_iter=4)) for _ in range(4)]
+    warm.scheduler.admit()
+    unit, init = fleet_units(pods)
+    assert pod_load(warm.scheduler, 1, unit=unit, init=init) \
+        > pod_load(cold.scheduler, 1, unit=unit, init=init)
+    # routing: the next submission must go to the idle cold pod
+    mps = MultiPodScheduler(pods, transfer_dir=str(tmp_path))
+    routed = mps.submit(_job(n_iter=2))
+    assert mps.owner(routed).name == cold.name
+    # stealing: the cold idle pod must be the thief, never the victim
+    moved = mps.steal_pass()
+    for jid in moved:
+        assert jid in cold.scheduler.records
+    mps.run()
+    assert all(mps.record(j).status is JobStatus.COMPLETED
+               for j in held + [routed])
+
+
+def test_export_job_refuses_running_and_unknown(tmp_path):
+    sched = Scheduler(n_devices=1, memory=_mem(1024))
+    jid = sched.submit(_job(n_iter=4))
+    sched.admit()                                # now running, not parked
+    assert not sched.export_job(jid, str(tmp_path))
+    assert not sched.export_job("nope", str(tmp_path))
+    sched.run()
+    assert sched.records[jid].status is JobStatus.COMPLETED
+
+
+def test_transfer_dir_may_not_alias_snapshot_dir(tmp_path):
+    """Hand-offs through the durable-snapshot directory would race the
+    periodic snapshot's stale-out pass (it treats any on-disk copy of a
+    job it no longer owns as stale) — refused up front at both layers."""
+    snap = str(tmp_path / "snap")
+    sched = Scheduler(n_devices=1, memory=_mem(100), snapshot_dir=snap)
+    sched.submit(_job(n_iter=1))
+    parked = sched.submit(_job(n_iter=1))
+    sched.admit()
+    with pytest.raises(ValueError, match="aliases"):
+        sched.export_job(parked, snap)
+    assert parked in sched.records               # nothing was exported
+    pod = Pod(PodSpec("p0", memory=_mem(100)), snapshot_dir=snap)
+    with pytest.raises(ValueError, match="aliases"):
+        MultiPodScheduler([pod, Pod(PodSpec("p1", memory=_mem(100)))],
+                          transfer_dir=snap)
+    sched.run()
+
+
+def test_export_stales_out_own_snapshot(tmp_path):
+    """After a steal, a restart of the *victim* must not resurrect the
+    exported job (it would run twice across the fleet)."""
+    snap = str(tmp_path / "snap")
+    transfer = str(tmp_path / "transfer")
+    sched = Scheduler(n_devices=1, memory=_mem(100), snapshot_dir=snap)
+    busy = sched.submit(_job(n_iter=2))
+    parked = sched.submit(_job(n_iter=2))
+    sched.admit()
+    assert sched.snapshot(snap) == 1             # parked job persisted
+    assert sched.export_job(parked, transfer)
+    assert Scheduler(n_devices=1).restore(snap) == 0
+    thief = Scheduler(n_devices=1, memory=_mem(100))
+    thief.import_job(transfer, parked)
+    thief.run()
+    sched.run()
+    np.testing.assert_array_equal(
+        thief.result(parked), np.asarray(cgls(PROJ, GEO, ANGLES, n_iter=2)))
+    assert sched.records[busy].status is JobStatus.COMPLETED
+
+
+def test_import_job_rejects_duplicates_and_missing(tmp_path):
+    a = Scheduler(n_devices=1, memory=_mem(100))
+    b = Scheduler(n_devices=1, memory=_mem(100))
+    hold = a.submit(_job(n_iter=1))
+    parked = a.submit(_job(n_iter=1))
+    a.admit()
+    assert a.export_job(parked, str(tmp_path))
+    # keep a second copy: two thieves racing the same transfer dir
+    racer_dir = str(tmp_path / "racer")
+    shutil.copytree(str(tmp_path), racer_dir)
+    b.import_job(str(tmp_path), parked)
+    # consumed on success: re-import of the same dir finds nothing
+    with pytest.raises(ValueError, match="no resumable job"):
+        b.import_job(str(tmp_path), parked)
+    # a raced duplicate of an id the thief already adopted is refused
+    with pytest.raises(ValueError, match="already known"):
+        b.import_job(racer_dir, parked)
+    with pytest.raises((ValueError, OSError)):
+        b.import_job(str(tmp_path), "never-exported")
+    a.run(); b.run()
+    assert a.records[hold].status is JobStatus.COMPLETED
+    assert b.records[parked].status is JobStatus.COMPLETED
+
+
+# --------------------------------------------------------------------------
+# threaded fleet driver
+# --------------------------------------------------------------------------
+
+def test_multipod_driver_steals_and_matches_solo_runs(tmp_path):
+    mps = MultiPodScheduler(_pods(2), transfer_dir=str(tmp_path))
+    jids = [mps.submit(_job(n_iter=3), pod=0) for _ in range(6)]
+    MultiPodDriver(mps).run(timeout=300)
+    assert mps.idle
+    want = np.asarray(cgls(PROJ, GEO, ANGLES, n_iter=3))
+    for j in jids:
+        assert mps.record(j).status is JobStatus.COMPLETED
+        np.testing.assert_array_equal(mps.result(j), want)
+    s = mps.summary()
+    assert s["completed"] == 6
+    assert s["submitted"] == 6                   # steals don't double-count
+    assert s["stolen_in"] == s["stolen_out"] == len(mps.stolen_jobs)
+
+
+def test_multipod_driver_surfaces_pod_errors(monkeypatch, tmp_path):
+    mps = MultiPodScheduler(_pods(2), transfer_dir=str(tmp_path))
+    mps.submit(_job(n_iter=50), pod=0)
+
+    def broken_pass():
+        raise OSError("transfer filesystem gone")
+
+    monkeypatch.setattr(mps, "steal_pass", broken_pass)
+    with pytest.raises(RuntimeError, match="internal error"):
+        MultiPodDriver(mps).run(timeout=120)
+
+
+# --------------------------------------------------------------------------
+# fleet metrics
+# --------------------------------------------------------------------------
+
+def test_merge_metrics_sums_counters_and_spans_walls():
+    a = ServeMetrics(submitted=3, completed=2, stolen_out=1, steps=5,
+                     step_seconds=[0.1] * 5, latencies=[1.0, 2.0],
+                     queue_waits=[0.1, 0.2], wall_start=10.0, wall_end=14.0)
+    b = ServeMetrics(submitted=1, completed=2, stolen_in=1, steps=2,
+                     step_seconds=[0.2] * 2, latencies=[3.0],
+                     queue_waits=[0.3], wall_start=11.0, wall_end=16.0)
+    m = merge_metrics([a, b])
+    assert m.submitted == 4 and m.completed == 4 and m.steps == 7
+    assert m.stolen_out == 1 and m.stolen_in == 1
+    assert m.wall_start == 10.0 and m.wall_end == 16.0
+    assert m.wall_seconds == 6.0
+    assert len(m.latencies) == 3 and len(m.step_seconds) == 7
+
+
+def test_fleet_summary_has_per_pod_breakdown(tmp_path):
+    mps = MultiPodScheduler(_pods(2), transfer_dir=str(tmp_path))
+    mps.submit(_job(n_iter=1), pod=0)
+    mps.run()
+    s = mps.summary()
+    assert set(s["pods"]) == {"p0", "p1"}
+    assert s["pods"]["p0"]["completed"] + s["pods"]["p1"]["completed"] == 1
+    assert "jobs_stolen" in s
+
+
+# --------------------------------------------------------------------------
+# Scheduler.restore error paths (snapshot trust)
+# --------------------------------------------------------------------------
+
+def _drain_one_parked_job(ckpt_dir, n_iter=3):
+    s = Scheduler(n_devices=1)
+    jid = s.submit(_job(n_iter=n_iter))
+    s.run(max_quanta=1)
+    s.drain(ckpt_dir)
+    return jid
+
+
+def test_restore_truncated_no_commit_fails_loudly(tmp_path):
+    """spec.json present but no committed step (COMMIT removed): restore
+    must raise, never silently drop the job the operator thinks is
+    parked safely."""
+    ckpt = str(tmp_path / "snap")
+    jid = _drain_one_parked_job(ckpt)
+    job_dir = os.path.join(ckpt, "jobs", jid)
+    for d in os.listdir(job_dir):
+        commit = os.path.join(job_dir, d, "COMMIT")
+        if os.path.exists(commit):
+            os.remove(commit)
+    fresh = Scheduler(n_devices=1)
+    with pytest.raises(ValueError, match="truncated"):
+        fresh.restore(ckpt)
+    assert not fresh.records                     # two-phase: untouched
+
+
+def test_restore_missing_step_dirs_fails_loudly(tmp_path):
+    ckpt = str(tmp_path / "snap")
+    jid = _drain_one_parked_job(ckpt)
+    job_dir = os.path.join(ckpt, "jobs", jid)
+    for d in os.listdir(job_dir):
+        if d.startswith("step_"):
+            shutil.rmtree(os.path.join(job_dir, d))
+    with pytest.raises(ValueError, match="no committed step"):
+        Scheduler(n_devices=1).restore(ckpt)
+
+
+@pytest.mark.parametrize("status", ["cancelled", "completed", "stolen"])
+def test_restore_skips_terminal_specs(tmp_path, status):
+    """A snapshot whose spec records a terminal status is stale — the
+    work finished or moved elsewhere; restore must not resurrect it."""
+    ckpt = str(tmp_path / "snap")
+    jid = _drain_one_parked_job(ckpt)
+    spec_path = os.path.join(ckpt, "jobs", jid, "spec.json")
+    with open(spec_path) as f:
+        spec = json.load(f)
+    spec["status"] = status
+    with open(spec_path, "w") as f:
+        json.dump(spec, f)
+    assert Scheduler(n_devices=1).restore(ckpt) == 0
+
+
+def test_snapshot_racing_terminal_transition_cannot_resurrect(
+        tmp_path, monkeypatch):
+    """A job cancelled (or stolen/completed) while the periodic snapshot
+    is writing its payload outside the lock must still end up terminal
+    on disk — the pre-write stale-out no-ops (no spec yet), so the
+    scheduler re-checks after the write lands."""
+    import repro.serve.scheduler as sched_mod
+    ckpt = str(tmp_path / "snap")
+    sched = Scheduler(n_devices=1, memory=_mem(100), snapshot_dir=ckpt)
+    busy = sched.submit(_job(n_iter=2))
+    victim = sched.submit(_job(n_iter=2))
+    sched.admit()
+
+    orig_write = sched_mod._write_job
+
+    def racing_write(ckpt_dir, job_id, spec, tree, step):
+        if job_id == victim:
+            # lands in the unlocked write window, before spec.json
+            # exists: the cancel's own stale-out has nothing to flip
+            assert sched.cancel(victim)
+        orig_write(ckpt_dir, job_id, spec, tree, step)
+
+    monkeypatch.setattr(sched_mod, "_write_job", racing_write)
+    assert sched.snapshot(ckpt) == 1
+    assert Scheduler(n_devices=1).restore(ckpt) == 0
+    sched.run()
+    assert sched.records[busy].status is JobStatus.COMPLETED
+
+
+def test_terminal_jobs_reclaim_snapshot_payload(tmp_path):
+    """Once a snapshotted job finishes, its step directories (the full
+    projections payload) are deleted and only the terminal spec
+    tombstone remains — a long-lived server must not leak one
+    checkpoint per job ever parked."""
+    ckpt = str(tmp_path / "snap")
+    sched = Scheduler(n_devices=1, snapshot_dir=ckpt)
+    jid = sched.submit(_job(n_iter=3))
+    sched.run(max_quanta=1)
+    sched.drain(ckpt)
+    job_dir = os.path.join(ckpt, "jobs", jid)
+    assert any(d.startswith("step_") for d in os.listdir(job_dir))
+    sched.run()                      # re-admits from its queue, completes
+    assert sched.records[jid].status is JobStatus.COMPLETED
+    with open(os.path.join(job_dir, "spec.json")) as f:
+        assert json.load(f)["status"] == "completed"
+    assert not any(d.startswith("step_") for d in os.listdir(job_dir))
+    assert Scheduler(n_devices=1).restore(ckpt) == 0
+
+
+def test_restore_lazy_job_without_ref_raises_then_succeeds(tmp_path):
+    ckpt = str(tmp_path / "snap")
+    s = Scheduler(n_devices=1)
+    jid = s.submit(ReconJob("cgls", GEO, ANGLES, lambda: PROJ, n_iter=3))
+    s.run(max_quanta=1)
+    s.drain(ckpt)
+    with pytest.raises(ValueError, match="lazy"):
+        Scheduler(n_devices=1).restore(ckpt)
+    s2 = Scheduler(n_devices=1)
+    assert s2.restore(ckpt, data_refs={jid: lambda: PROJ}) == 1
+    s2.run()
+    np.testing.assert_array_equal(
+        s2.result(jid), np.asarray(cgls(PROJ, GEO, ANGLES, n_iter=3)))

@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""Documentation checks (run by the CI docs job and tier-1 tests).
+
+1. **Link check**: every intra-repo markdown link (``[text](path)`` with
+   a relative target) in every tracked ``*.md`` file must resolve to an
+   existing file or directory, anchors stripped.  External links
+   (``http(s)://``, ``mailto:``) and pure anchors are ignored.
+2. **Doctests**: the fenced examples in ``README.md`` and
+   ``docs/serve.md`` run under :mod:`doctest` (same engine as
+   ``python -m doctest README.md docs/serve.md``) — documentation that
+   stops executing fails the build instead of rotting.
+
+Usage::
+
+    PYTHONPATH=src python tools/check_docs.py [--root REPO_ROOT]
+"""
+
+from __future__ import annotations
+
+import argparse
+import doctest
+import pathlib
+import re
+import sys
+
+# [text](target) — target up to the first closing paren / whitespace
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP_DIRS = {".git", ".tmp", "__pycache__", "node_modules", ".pytest_cache"}
+_EXTERNAL = ("http://", "https://", "mailto:", "#")
+
+# files whose fenced examples must execute
+DOCTEST_FILES = ("README.md", "docs/serve.md")
+
+
+def markdown_files(root: pathlib.Path):
+    for md in sorted(root.rglob("*.md")):
+        if not _SKIP_DIRS.intersection(md.relative_to(root).parts):
+            yield md
+
+
+def check_links(root: pathlib.Path) -> list:
+    """All broken intra-repo links, as human-readable strings."""
+    errors = []
+    for md in markdown_files(root):
+        for target in _LINK_RE.findall(md.read_text(encoding="utf-8")):
+            if target.startswith(_EXTERNAL):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (md.parent / path).exists():
+                errors.append(f"{md.relative_to(root)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def run_doctests(root: pathlib.Path, files=DOCTEST_FILES) -> list:
+    """Run each file's ``>>>`` examples (doctest.testfile semantics);
+    returns failure descriptions.  Examples within one file share a
+    namespace, so later blocks can build on earlier ones."""
+    errors = []
+    for rel in files:
+        path = root / rel
+        if not path.exists():
+            errors.append(f"{rel}: missing (doctest target)")
+            continue
+        # default flags on purpose: the CI docs job also runs the plain
+        # ``python -m doctest README.md docs/serve.md`` command, and the
+        # two runners must agree on what passes
+        result = doctest.testfile(str(path), module_relative=False,
+                                  verbose=False)
+        if result.failed:
+            errors.append(f"{rel}: {result.failed} of {result.attempted} "
+                          f"doctest examples failed")
+        elif result.attempted == 0:
+            errors.append(f"{rel}: no doctest examples found (expected "
+                          f"at least one fenced >>> block)")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=str(pathlib.Path(__file__).parents[1]),
+                    help="repository root to scan (default: this repo)")
+    ap.add_argument("--skip-doctests", action="store_true",
+                    help="only check links (doctests need PYTHONPATH=src "
+                         "and a working jax)")
+    args = ap.parse_args()
+    root = pathlib.Path(args.root).resolve()
+
+    errors = check_links(root)
+    n_md = len(list(markdown_files(root)))
+    print(f"[check_docs] link check: {n_md} markdown files, "
+          f"{len(errors)} broken links")
+    if not args.skip_doctests:
+        derr = run_doctests(root)
+        print(f"[check_docs] doctests: {len(DOCTEST_FILES)} files, "
+              f"{len(derr)} failures")
+        errors += derr
+    for e in errors:
+        print(f"[check_docs] FAIL: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,6 +25,20 @@ static-partitioning world where each tenant has "their" host group):
   balanced optimum.  Every stolen job's final volume is re-run unstolen
   on a fresh single scheduler and asserted bit-identical.
 
+Bursty-trace section — the same jobs arrive in *bursts* separated by
+idle gaps (the demand pattern autoscaling exists for):
+
+* ``static-max``  -- a fleet of ``--max-pods`` pods, all online for the
+  whole trace: peak capacity, but every pod burns pod-seconds through
+  every idle gap.
+* ``autoscaled``  -- one seed pod plus an ``Autoscaler`` growing the
+  fleet from a PodSpec template pool while the backlog is high and
+  draining + retiring the least-loaded pod (preempt -> export ->
+  bit-identical resume on a survivor) while it is low.  The claim: wall
+  jobs/sec tracks the static max fleet (>= 0.9x) at a fraction of the
+  pod-seconds (<= 0.7x), and every job a scale-down drain moved is
+  re-run undrained and asserted bit-identical.
+
 Every step blocks on its compute (no async-dispatch mis-timing), so
 both the wall numbers and the per-device busy clocks are honest.  The
 modeled makespan (max over device busy clocks) remains the stand-in for
@@ -32,12 +46,14 @@ real multi-accelerator wall-clock on a single-host rig, exactly like the
 paper's per-GPU timelines (Fig 3/5).
 
     PYTHONPATH=src python benchmarks/bench_serve.py --small 12 --large 1
+    PYTHONPATH=src python benchmarks/bench_serve.py --smoke   # tiny CI gate
 """
 
 from __future__ import annotations
 
 import argparse
 import tempfile
+import time
 from typing import Dict, List
 
 import numpy as np
@@ -45,9 +61,9 @@ import numpy as np
 from repro.core.geometry import ConeGeometry, circular_angles
 from repro.core import phantoms
 from repro.core.splitting import MemoryModel
-from repro.serve import (AsyncDriver, DevicePool, MultiPodDriver,
-                         MultiPodScheduler, Pod, PodSpec, ReconJob,
-                         Scheduler)
+from repro.serve import (AsyncDriver, Autoscaler, AutoscalePolicy,
+                         DevicePool, MultiPodDriver, MultiPodScheduler,
+                         Pod, PodSpec, ReconJob, Scheduler)
 
 KIB = 1024
 
@@ -169,6 +185,123 @@ def run_multipod(name: str, jobs: List[ReconJob], n_pods: int,
     return s
 
 
+# ---------------------------------------------------------------------------
+# bursty trace: autoscaled fleet vs static max-size fleet
+# ---------------------------------------------------------------------------
+
+def make_burst(n_jobs: int) -> List[ReconJob]:
+    """One burst of the multipod workload (heavier 32^3 in-core jobs, so
+    worker threads genuinely overlap and the backlog signal is real)."""
+    return make_multipod_workload(n_jobs)
+
+
+def run_bursty(name: str, n_bursts: int, jobs_per_burst: int,
+               gap_seconds: float, max_pods: int, budget_kib: int,
+               autoscale: bool, smoke: bool = False) -> Dict:
+    """Drive one fleet configuration through the bursty trace: submit a
+    burst, wait for the fleet to go idle, sleep through the gap, repeat.
+    Both configurations see the identical arrival pattern; only the
+    capacity management differs."""
+    mem = MemoryModel(device_bytes=budget_kib * KIB, usable_fraction=1.0)
+    asc = None
+    if autoscale:
+        mps = MultiPodScheduler(
+            [Pod(PodSpec("seed", n_devices=1, memory=mem))],
+            transfer_dir=tempfile.mkdtemp(prefix="bench-as-"))
+        # thresholds in modeled seconds per device: a whole burst queued
+        # on one pod is far above the high watermark (scale up), an
+        # empty fleet during a gap is below the low one (drain + retire)
+        asc = Autoscaler(
+            mps, [PodSpec("burst", n_devices=1, memory=mem)],
+            AutoscalePolicy(scale_up_backlog_seconds=0.5,
+                            scale_down_backlog_seconds=0.05,
+                            up_window_seconds=0.0,
+                            down_window_seconds=0.05,
+                            cooldown_seconds=0.05,
+                            min_pods=1, max_pods=max_pods))
+        driver = MultiPodDriver(mps, autoscaler=asc)
+    else:
+        mps = MultiPodScheduler(
+            [Pod(PodSpec(f"st{i}", n_devices=1, memory=mem))
+             for i in range(max_pods)],
+            transfer_dir=tempfile.mkdtemp(prefix="bench-st-"))
+        driver = MultiPodDriver(mps)
+    by_id: Dict[str, ReconJob] = {}
+    driver.start()
+    t0 = time.monotonic()
+    for b in range(n_bursts):
+        for job in make_burst(jobs_per_burst):
+            by_id[mps.submit(job)] = job
+        deadline = time.monotonic() + 600
+        while not mps.idle and time.monotonic() < deadline:
+            time.sleep(0.005)
+        if b < n_bursts - 1:
+            time.sleep(gap_seconds)   # the idle gap autoscaling reclaims
+    driver.wait(timeout=600)
+    wall = time.monotonic() - t0
+    # give the autoscaler the tail gap to shrink back before measuring
+    if autoscale:
+        tail = time.monotonic() + (2.0 if not smoke else 0.5)
+        while len(mps.pods) > 1 and time.monotonic() < tail:
+            time.sleep(0.01)
+    driver.stop()
+    s = mps.summary()
+    assert s["completed"] == len(by_id), (name, s)
+    s["trace_wall_seconds"] = wall
+    s["trace_jobs_per_sec"] = len(by_id) / wall
+    if asc is not None:
+        # acceptance: every job a scale-down drain moved mid-flight must
+        # finish bit-identically to the same job never having been
+        # drained (fresh single-pod scheduler, same memory model)
+        for jid in asc.drained_jobs:
+            solo = Scheduler(pool=DevicePool(n_devices=1, memory=mem))
+            solo.submit(by_id[jid])
+            solo.run()
+            np.testing.assert_array_equal(mps.result(jid),
+                                          solo.result(jid))
+        s["drained_verified"] = len(asc.drained_jobs)
+        s["scale_events"] = [(e.direction, e.pod) for e in asc.events]
+    return s
+
+
+def bursty_section(args, smoke: bool = False) -> None:
+    print("\nconfig,pods_peak,jobs,wall_s,jobs_per_sec_wall,pod_seconds,"
+          "scale_up,scale_down,drained_verified")
+    results = {}
+    for name, autoscale in (("static-max", False), ("autoscaled", True)):
+        s = run_bursty(name, args.bursts, args.jobs_per_burst,
+                       args.gap_seconds, args.max_pods,
+                       args.mp_budget_kib, autoscale, smoke=smoke)
+        results[name] = s
+        print(f"{name},{s['pods_online_peak']},{s['completed']},"
+              f"{s['trace_wall_seconds']:.2f},"
+              f"{s['trace_jobs_per_sec']:.3f},{s['pod_seconds']:.2f},"
+              f"{s['scale_up_events']},{s['scale_down_events']},"
+              f"{s.get('drained_verified', 0)}")
+    thr_ratio = (results["autoscaled"]["trace_jobs_per_sec"]
+                 / max(results["static-max"]["trace_jobs_per_sec"], 1e-12))
+    ps_ratio = (results["autoscaled"]["pod_seconds"]
+                / max(results["static-max"]["pod_seconds"], 1e-12))
+    print(f"# autoscaled vs static-max (bursty trace): "
+          f"{thr_ratio:.2f}x wall jobs/sec (target >= 0.9x) at "
+          f"{ps_ratio:.2f}x pod-seconds (target <= 0.7x); "
+          f"{results['autoscaled'].get('drained_verified', 0)} "
+          f"drained jobs verified bit-identical to undrained reruns")
+
+
+def smoke_main() -> None:
+    """Tiny end-to-end gate for CI: one threaded single-pod config and
+    one 2-burst autoscaled trace must run to completion (the asserts
+    inside run_config / run_bursty are the check)."""
+    ns = argparse.Namespace(bursts=2, jobs_per_burst=3, gap_seconds=0.6,
+                            max_pods=2, mp_budget_kib=800)
+    run_config("warmup", make_workload(2, 0), 2, 220)
+    run_config("threaded", make_workload(4, 0), 2, 220, threaded=True)
+    run_config("mp-warmup", make_multipod_workload(2), 1, 800)
+    bursty_section(ns, smoke=True)
+    print("SMOKE OK")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--small", type=int, default=12)
@@ -187,7 +320,24 @@ def main():
     ap.add_argument("--mp-budget-kib", type=int, default=800,
                     help="per-device budget in the multi-pod section: 800 "
                          "KiB holds one 32^3 job resident per device")
+    ap.add_argument("--bursts", type=int, default=3,
+                    help="bursts in the autoscaling trace (0 skips it)")
+    ap.add_argument("--jobs-per-burst", type=int, default=6)
+    ap.add_argument("--gap-seconds", type=float, default=2.0,
+                    help="idle gap between bursts — the capacity the "
+                         "autoscaler reclaims")
+    ap.add_argument("--max-pods", type=int, default=3,
+                    help="static fleet size / autoscaler ceiling in the "
+                         "bursty section")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny end-to-end trace for CI: asserts the "
+                         "serving + autoscaling paths run to completion, "
+                         "prints SMOKE OK")
     args = ap.parse_args()
+
+    if args.smoke:
+        smoke_main()
+        return
 
     # Unmeasured warm-up pass: the scheduler's shared operator cache (and
     # jit compilation) is populated once, so all measured configurations
@@ -250,6 +400,9 @@ def main():
               f"{mp['stealing']['stolen_in']} jobs stolen, "
               f"{mp['stealing'].get('stolen_verified', 0)} verified "
               f"bit-identical to unstolen runs")
+
+    if args.bursts >= 1 and args.max_pods >= 2:
+        bursty_section(args)
 
 
 if __name__ == "__main__":

@@ -16,21 +16,30 @@ the idle pod steals parked work through the checkpoint-transfer protocol
 — the printout then shows which pod each job actually completed on and
 how many jobs moved.
 
+With ``--autoscale`` the fleet is *elastic*: it starts as a single seed
+pod and an ``Autoscaler`` grows it from a PodSpec template pool while
+the modeled backlog is high, then drains and retires surplus pods once
+the work is done — the printout shows every scale event and the
+pod-seconds the elasticity saved versus keeping the peak fleet up.
+
     PYTHONPATH=src python examples/serve_jobs.py
     PYTHONPATH=src python examples/serve_jobs.py --pods 2
+    PYTHONPATH=src python examples/serve_jobs.py --autoscale
     PYTHONPATH=src python examples/serve_jobs.py --help
 """
 
 import argparse
 import tempfile
+import time
 
 import numpy as np
 
 from repro.core import phantoms
 from repro.core.geometry import ConeGeometry, circular_angles
 from repro.core.splitting import MemoryModel
-from repro.serve import (AsyncDriver, MultiPodDriver, MultiPodScheduler,
-                         Pod, PodSpec, ReconJob, Scheduler)
+from repro.serve import (AsyncDriver, Autoscaler, AutoscalePolicy,
+                         MultiPodDriver, MultiPodScheduler, Pod, PodSpec,
+                         ReconJob, Scheduler)
 
 KIB = 1024
 
@@ -138,6 +147,50 @@ def run_pod_fleet(jobs, truth, args):
           f"p95 latency {s['latency_p95']:.2f}s")
 
 
+def run_autoscaled_fleet(jobs, truth, args):
+    """docs/serve.md 'Elastic fleets': start with one seed pod; the
+    Autoscaler adds pods from a template pool while the modeled backlog
+    is above the band, and drains + retires them (preempt -> export ->
+    bit-identical resume on a survivor) once it falls below."""
+    mem = MemoryModel(device_bytes=args.budget_kib * KIB,
+                      usable_fraction=1.0)
+    mps = MultiPodScheduler([Pod(PodSpec("seed", n_devices=1, memory=mem))],
+                            transfer_dir=tempfile.mkdtemp(prefix="steal-"))
+    # The policy is the whole knob surface: the backlog band (modeled
+    # seconds per device), the persistence windows (hysteresis), the
+    # cooldown between events (thrash guard) and the min/max fleet size.
+    asc = Autoscaler(
+        mps,
+        templates=[PodSpec("burst", n_devices=1, memory=mem)],
+        policy=AutoscalePolicy(scale_up_backlog_seconds=0.5,
+                               scale_down_backlog_seconds=0.05,
+                               down_window_seconds=0.1,
+                               cooldown_seconds=0.1,
+                               min_pods=1, max_pods=args.devices))
+    driver = MultiPodDriver(mps, autoscaler=asc)
+    driver.start()
+    jids = {name: mps.submit(job) for name, job in jobs.items()}
+    driver.wait(timeout=600)
+    # give the autoscaler a beat to reclaim the now-idle burst pods
+    tail = time.monotonic() + 2.0
+    while len(mps.pods) > 1 and time.monotonic() < tail:
+        time.sleep(0.02)
+    driver.stop()
+
+    for name, jid in jids.items():
+        report(name, mps.record(jid), truth[name], pod=mps.owner(jid).name)
+    for ev in asc.events:
+        print(f"scale_{ev.direction:4s} {ev.pod:12s} "
+              f"(backlog {ev.load:.2f}s/device -> {ev.n_pods} pods)")
+    s = mps.summary()
+    peak = s["pods_online_peak"]
+    print(f"\n{s['completed']} jobs, peak {peak} pods, "
+          f"{s['scale_up_events']} up / {s['scale_down_events']} down, "
+          f"{len(asc.drained_jobs)} jobs moved by drains; "
+          f"{s['pod_seconds']:.2f} pod-seconds vs "
+          f"{peak * s['wall_seconds']:.2f} for a static peak fleet")
+
+
 def main():
     ap = argparse.ArgumentParser(
         description="Multi-tenant serving demo: three tenants (urgent / "
@@ -159,10 +212,18 @@ def main():
                     help="1 = single scheduler (AsyncDriver); >1 = pod "
                          "fleet with every tenant pinned to pod 0 so "
                          "work stealing visibly rebalances the jobs")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="serve through an elastic fleet instead: one "
+                         "seed pod, grown up to --devices pods by the "
+                         "Autoscaler while the backlog is high, drained "
+                         "back down when it clears (see docs/serve.md "
+                         "'Elastic fleets')")
     args = ap.parse_args()
 
     jobs, truth = build_jobs(args.iters)
-    if args.pods > 1:
+    if args.autoscale:
+        run_autoscaled_fleet(jobs, truth, args)
+    elif args.pods > 1:
         run_pod_fleet(jobs, truth, args)
     else:
         run_single_pool(jobs, truth, args)

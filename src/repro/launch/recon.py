@@ -10,7 +10,11 @@ scheduler and runs the shard_map backend over the local device mesh.
 step-wise checkpoint durably, and re-running the same command resumes it
 bit-identically instead of starting over.  ``--pods N`` serves the job
 through a simulated multi-pod fleet instead of a single scheduler
-(routing + work stealing; see docs/serve.md).
+(routing + work stealing; see docs/serve.md); combined with
+``--snapshot-dir`` the *fleet* is durable — each pod snapshots into its
+own subdirectory, a ``fleet.json`` manifest records the membership, and
+a re-run rebuilds the whole fleet with
+``MultiPodScheduler.restore_fleet`` and resumes bit-identically.
 
 Numerics are identical to the old monolithic driver: the scheduler steps
 the same algorithm iterators the monolithic entry points wrap.
@@ -55,24 +59,53 @@ def reconstruct(algname: str = "cgls", n: int = 64, n_angles: int = 96,
         # multi-pod fleet (simulated host groups): the job is routed to
         # the pod whose topology models the cheapest completion; idle
         # pods would steal parked work on a busier trace (bench_serve.py)
-        if snapshot_dir:
-            raise ValueError("--snapshot-dir currently requires --pods 1 "
-                             "(per-pod durable resume is a ROADMAP item)")
         if mode == "dist":
             raise ValueError("--mode dist bypasses the scheduler and "
                              "cannot be combined with --pods")
+        import os
+        from repro.checkpoint import PreemptionGuard
         from repro.serve import (MultiPodDriver, MultiPodScheduler, Pod,
                                  PodSpec)
-        mps = MultiPodScheduler(
-            [Pod(PodSpec(f"pod{i}", n_devices=1, memory=mem))
-             for i in range(pods)])
-        jid = mps.submit(ReconJob(
-            algname, geo, angles, proj, n_iter=iters,
-            params=_job_params(algname, n_angles),
-            mode=None if mode == "auto" else mode))
-        MultiPodDriver(mps).run()
+        from repro.serve.pool import FLEET_MANIFEST
+        guard = PreemptionGuard()
+        root = snapshot_dir or None
+        if root and os.path.isfile(os.path.join(root, FLEET_MANIFEST)):
+            # a previous run left a fleet snapshot: rebuild membership +
+            # parked jobs and resume them instead of starting over
+            mps = MultiPodScheduler.restore_fleet(root, guard=guard)
+        else:
+            mps = MultiPodScheduler(
+                [Pod(PodSpec(f"pod{i}", n_devices=1, memory=mem),
+                     guard=guard) for i in range(pods)],
+                snapshot_root=root)
+        if mps.restored_jobs:
+            jid = mps.restored_jobs[0]
+            if verbose:
+                done = mps.record(jid).iterations_done
+                print(f"[recon] resuming {jid} on a restored "
+                      f"{len(mps.pods)}-pod fleet "
+                      f"({done} iterations already done)")
+        else:
+            jid = mps.submit(ReconJob(
+                algname, geo, angles, proj, n_iter=iters,
+                params=_job_params(algname, n_angles),
+                mode=None if mode == "auto" else mode))
+        # periodic per-pod snapshots make a kill -9 recoverable too
+        MultiPodDriver(mps, snapshot_every_seconds=1.0 if root else 0.0
+                       ).run()
+        record = mps.record(jid)
+        # parked states only: a FAILED job must fall through to
+        # mps.result() below and raise its real error, not masquerade
+        # as a resumable preemption
+        if record.status in (JobStatus.PREEMPTED, JobStatus.PENDING):
+            if verbose:
+                where = (f"; fleet snapshot in {root} -- re-run to resume"
+                         if root else " (no --snapshot-dir: progress lost)")
+                print(f"[recon] fleet preempted after "
+                      f"{record.iterations_done}/{iters} iterations{where}")
+            return None, None
         if verbose:
-            print(f"[recon] pod fleet x{pods}: job ran on "
+            print(f"[recon] pod fleet x{len(mps.pods)}: job ran on "
                   f"{mps.owner(jid).name}")
         rec = mps.result(jid)
     elif mode == "dist":
@@ -154,7 +187,8 @@ def main():
     ap.add_argument("--pods", type=int, default=1,
                     help="serve through a fleet of this many single-device "
                          "pods (multi-pod routing + work stealing; see "
-                         "docs/serve.md)")
+                         "docs/serve.md); works with --snapshot-dir for "
+                         "fleet-level durable resume")
     args = ap.parse_args()
     reconstruct(args.alg, args.n, args.angles, args.iters, args.mode,
                 args.device_bytes, snapshot_dir=args.snapshot_dir,

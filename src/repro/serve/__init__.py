@@ -33,6 +33,16 @@ lets idle pods steal parked jobs from loaded ones — the transfer rides
 the durable-snapshot format, so a stolen job resumes bit-identically on
 the thief.  :class:`MultiPodDriver` threads the whole fleet.
 
+The fleet is *elastic*: pod membership is dynamic
+(``add_pod``/``remove_pod``), and :class:`Autoscaler`
+(:mod:`repro.serve.autoscale`) grows it from a :class:`PodSpec`
+template pool under load and shrinks it by draining the least-loaded
+pod (preempt -> export -> bit-identical resume on a survivor) when the
+backlog stays low.  With a ``snapshot_root``, ``snapshot_fleet`` /
+``drain_fleet`` persist membership + parked jobs durably and
+``MultiPodScheduler.restore_fleet`` rebuilds the whole fleet after
+process death.
+
 See ``docs/serve.md`` for the full architecture guide.
 
 Quick start::
@@ -56,7 +66,8 @@ from .scheduler import (DevicePool, DeviceSlot, JobFootprint, Scheduler,
 from .driver import AsyncDriver, MultiPodDriver
 from .pool import (MultiPodScheduler, Pod, PodSpec, modeled_job_seconds,
                    pods_from_mesh)
-from .steal import StealPolicy, steal_once, steal_pass
+from .steal import StealPolicy, drain_pod, steal_once, steal_pass
+from .autoscale import Autoscaler, AutoscalePolicy, ScaleEvent
 
 __all__ = ["ReconJob", "JobRecord", "JobStatus", "PriorityJobQueue",
            "JobExecutor", "clear_operator_cache", "ServeMetrics",
@@ -64,4 +75,5 @@ __all__ = ["ReconJob", "JobRecord", "JobStatus", "PriorityJobQueue",
            "JobFootprint", "Scheduler", "estimate_job_footprint",
            "fair_share_weight", "AsyncDriver", "MultiPodDriver",
            "MultiPodScheduler", "Pod", "PodSpec", "modeled_job_seconds",
-           "pods_from_mesh", "StealPolicy", "steal_once", "steal_pass"]
+           "pods_from_mesh", "StealPolicy", "drain_pod", "steal_once",
+           "steal_pass", "Autoscaler", "AutoscalePolicy", "ScaleEvent"]

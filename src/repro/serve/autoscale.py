@@ -1,0 +1,352 @@
+"""Elastic fleet autoscaling: grow and shrink a pod fleet from load.
+
+The paper's splitting strategy works "with any number of GPUs"; the
+serving fleet should therefore not be *statically* sized either.  The
+:class:`Autoscaler` is a control plane over
+:class:`~repro.serve.pool.MultiPodScheduler`: it watches the load
+signals the schedulers already expose and changes the fleet's pod
+membership at runtime.
+
+Signals (all modeled, no new instrumentation):
+
+* **backlog** — :meth:`Scheduler.modeled_backlog_seconds` per device,
+  aggregated fleet-wide on the shared unit scale
+  (:func:`repro.serve.steal.fleet_units`, so a cold just-spawned pod and
+  a warm pod compare in the same units);
+* **queue depth** — queued jobs per live pod (optional trigger);
+* **fits-nowhere** — a submission no live pod can hold
+  (``fits_nowhere_bytes``) asks the autoscaler for a pod from the
+  template pool *at submit time*, before the job would be failed
+  (wired through ``MultiPodScheduler.submit``).
+
+Decisions (one per :meth:`Autoscaler.step` call, made by
+:class:`AutoscalePolicy`):
+
+* **scale up** when the fleet backlog has stayed above the band's high
+  watermark for ``up_window_seconds``: instantiate the next
+  :class:`~repro.serve.pool.PodSpec` from the template pool and
+  :meth:`~repro.serve.pool.MultiPodScheduler.add_pod` it.  The new pod
+  is cold — routing and stealing price it with the fleet's shared units
+  (it borrows the warm pods' EMAs), so it is not mispriced against warm
+  pods and starts taking work immediately.
+* **scale down** when the backlog has stayed below the low watermark for
+  ``down_window_seconds``: pick the least-loaded pod, **drain** it with
+  :func:`repro.serve.steal.drain_pod` — pause its admission, preempt its
+  running jobs at their step boundaries, export every parked job through
+  the durable-snapshot transfer format to the surviving pods
+  (bit-identical resume) — and retire it only once empty
+  (:meth:`~repro.serve.pool.MultiPodScheduler.remove_pod`).  A drain
+  that cannot complete (a job no survivor can hold) aborts cleanly: the
+  pod resumes admission and stays.
+
+Both directions respect ``min_pods`` / ``max_pods`` and a **cooldown**
+between events; the watermark **windows** add hysteresis, so an
+oscillating load trace cannot thrash the fleet (asserted in
+``tests/test_serve_autoscale.py``).
+
+The autoscaler is *passive*: it only acts when someone calls
+:meth:`step` — the cooperative loop (``MultiPodScheduler.run(...,
+autoscaler=...)``) and the threaded
+:class:`~repro.serve.driver.MultiPodDriver` control thread both do.
+``clock`` and ``load_fn`` are injectable so policy behaviour is testable
+without wall-clock sleeps.
+
+Measured payoff: ``benchmarks/bench_serve.py --bursty`` shows the
+autoscaled fleet tracking a static max-size fleet's wall jobs/sec on a
+bursty trace while spending a fraction of the pod-seconds, with every
+drained-and-moved job verified bit-identical to an undrained rerun.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from .pool import MultiPodScheduler, Pod, PodSpec
+from .scheduler import estimate_job_footprint
+from .steal import drain_pod, fleet_units, pod_load
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscalePolicy:
+    """When to grow and when to shrink the fleet.
+
+    The backlog band is in modeled seconds per device (the same units as
+    :meth:`Scheduler.modeled_backlog_seconds` under the fleet's shared
+    unit scale).  Hysteresis has two layers: the signal must *persist*
+    for a window before either direction acts, and any scale event
+    starts a cooldown during which no further event fires.
+    """
+
+    #: scale up while the fleet's per-device modeled backlog exceeds this
+    scale_up_backlog_seconds: float = 1.0
+    #: scale down while it is below this (must be < the high watermark)
+    scale_down_backlog_seconds: float = 0.1
+    #: the high signal must persist this long before a pod is added
+    up_window_seconds: float = 0.0
+    #: the low signal must persist this long before a pod is drained
+    down_window_seconds: float = 0.5
+    #: minimum spacing between *any* two scale events (thrash guard)
+    cooldown_seconds: float = 1.0
+    #: fleet never shrinks below / grows above these
+    min_pods: int = 1
+    max_pods: int = 4
+    #: optional extra trigger: scale up when queued jobs per live pod
+    #: exceed this (None disables)
+    scale_up_queue_depth: Optional[int] = None
+    #: how long a scale-down drain may take before it is aborted
+    drain_timeout_seconds: float = 60.0
+
+    def __post_init__(self):
+        if self.scale_down_backlog_seconds >= self.scale_up_backlog_seconds:
+            raise ValueError(
+                f"backlog band inverted: low watermark "
+                f"{self.scale_down_backlog_seconds} must be below high "
+                f"{self.scale_up_backlog_seconds}")
+        if self.min_pods < 1 or self.max_pods < self.min_pods:
+            raise ValueError(f"need 1 <= min_pods <= max_pods, got "
+                             f"{self.min_pods}..{self.max_pods}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleEvent:
+    """One membership change, for the audit trail / bench report."""
+    t: float              # policy clock at the decision
+    direction: str        # "up" | "down"
+    pod: str              # pod added or retired
+    load: float           # fleet per-device backlog that triggered it
+    n_pods: int           # live pods *after* the event
+
+
+class Autoscaler:
+    """Grows and shrinks a :class:`MultiPodScheduler` fleet at runtime.
+
+    Parameters
+    ----------
+    mps : the fleet to control.  The autoscaler registers itself on it
+        so ``submit`` can request a pod for a job that fits nowhere.
+    templates : :class:`PodSpec` pool scale-ups instantiate from, cycled
+        in order; each spawned pod gets a unique ``<template>-as<N>``
+        name.  Heterogeneous templates express "add big-memory pods
+        first, small ones after" orderings.
+    policy : see :class:`AutoscalePolicy`.
+    clock : time source (injectable for tests; defaults to
+        ``time.monotonic``).
+    load_fn : override of the fleet load signal, called with the live
+        pod snapshot (injectable for tests).
+    guard : optional :class:`~repro.checkpoint.preemption.PreemptionGuard`
+        attached to every spawned pod's scheduler — without it, a fleet
+        whose original (guarded) pods have all been retired would no
+        longer see the host's SIGTERM.
+
+    Templates must be *simulated* pods (no ``jax_devices`` pins): the
+    template is instantiated repeatedly, and two live pods cloned from
+    one pinned template would double-book the same physical devices
+    with no shared memory accounting.  Pin real devices by building the
+    Pod yourself and calling :meth:`MultiPodScheduler.add_pod`.
+    """
+
+    def __init__(self, mps: MultiPodScheduler,
+                 templates: Sequence[PodSpec],
+                 policy: AutoscalePolicy = AutoscalePolicy(),
+                 clock: Callable[[], float] = time.monotonic,
+                 load_fn: Optional[Callable[[Sequence[Pod]], float]] = None,
+                 guard=None):
+        if not templates:
+            raise ValueError("Autoscaler needs at least one PodSpec "
+                             "template to scale up from")
+        pinned = [t.name for t in templates if t.jax_devices is not None]
+        if pinned:
+            raise ValueError(
+                f"Autoscaler templates must be simulated pods; {pinned} "
+                f"pin jax_devices, and repeated scale-ups would "
+                f"double-book those physical devices (build the Pod "
+                f"yourself and use MultiPodScheduler.add_pod instead)")
+        self.mps = mps
+        self.templates = list(templates)
+        self.guard = guard
+        self.policy = policy
+        self.clock = clock
+        self._load_fn = load_fn
+        self._spawned = itertools.count()
+        self._above_since: Optional[float] = None
+        self._below_since: Optional[float] = None
+        self._last_event: Optional[float] = None
+        self.events: List[ScaleEvent] = []
+        #: every job moved off a pod by a scale-down drain (the bench
+        #: re-runs each one undrained and asserts bit-identity)
+        self.drained_jobs: List[str] = []
+        self.aborted_scale_downs = 0
+        mps.autoscaler = self
+
+    # ---- load signal -------------------------------------------------------
+
+    def fleet_load(self, pods: Optional[Sequence[Pod]] = None) -> float:
+        """Fleet-wide modeled backlog per device on the shared unit
+        scale: total owed seconds across pods over total devices."""
+        pods = list(self.mps.pods_snapshot() if pods is None else pods)
+        if self._load_fn is not None:
+            return self._load_fn(pods)
+        if not pods:
+            return 0.0
+        unit, init = fleet_units(pods)
+        total = sum(pod_load(p.scheduler, p.n_devices,
+                             unit=unit, init=init) * p.n_devices
+                    for p in pods)
+        return total / max(1, sum(p.n_devices for p in pods))
+
+    def _queue_depth_per_pod(self, pods: Sequence[Pod]) -> float:
+        queued = sum(len(p.scheduler.queue) for p in pods)
+        return queued / max(1, len(pods))
+
+    # ---- control step ------------------------------------------------------
+
+    def step(self) -> Optional[ScaleEvent]:
+        """One control decision: observe the load, update the hysteresis
+        windows, and scale at most one pod up or down.  Returns the
+        event, or None."""
+        now = self.clock()
+        pods = self.mps.pods_snapshot()
+        load = self.fleet_load(pods)
+        p = self.policy
+
+        want_up = load > p.scale_up_backlog_seconds
+        if p.scale_up_queue_depth is not None:
+            want_up = want_up or (self._queue_depth_per_pod(pods)
+                                  > p.scale_up_queue_depth)
+        want_down = load < p.scale_down_backlog_seconds and not want_up
+
+        # window state is read into locals once updated: a submit-thread
+        # scale_up_for may reset the attributes to None concurrently,
+        # and computing `now - None` would kill the fleet control loop.
+        # (Explicit None checks throughout: a window starting at clock
+        # 0.0 is falsy but set.)
+        if want_up:
+            above = self._above_since
+            if above is None:
+                above = self._above_since = now
+        else:
+            above = self._above_since = None
+        if want_down:
+            below = self._below_since
+            if below is None:
+                below = self._below_since = now
+        else:
+            below = self._below_since = None
+
+        last = self._last_event
+        if last is not None and now - last < p.cooldown_seconds:
+            return None
+        if (want_up and len(pods) < p.max_pods
+                and now - above >= p.up_window_seconds):
+            return self._scale_up(now, load)
+        if (want_down and len(pods) > p.min_pods
+                and now - below >= p.down_window_seconds):
+            return self._scale_down(now, load, pods)
+        return None
+
+    # ---- scale up ----------------------------------------------------------
+
+    def _next_pod(self, template_index: Optional[int] = None) -> Pod:
+        """Instantiate the next template as a uniquely-named pod."""
+        while True:
+            k = next(self._spawned)
+            spec = self.templates[(template_index if template_index
+                                   is not None else k)
+                                  % len(self.templates)]
+            name = f"{spec.name}-as{k}"
+            try:
+                return self.mps.add_pod(
+                    Pod(dataclasses.replace(spec, name=name),
+                        guard=self.guard))
+            except ValueError:
+                continue    # name collision (e.g. after restore): next k
+
+    def _scale_up(self, now: float, load: float,
+                  template_index: Optional[int] = None
+                  ) -> Optional[ScaleEvent]:
+        # the max_pods bound is re-checked *under the fleet lock*: the
+        # control thread's step() and a submit thread's scale_up_for
+        # both pass their own lock-free pre-checks, and without this one
+        # the two adds together could exceed the cap.  The count
+        # includes draining pods — a drain can still abort and return
+        # its pod to service, and the cap is a hard resource bound.
+        with self.mps._fleet_lock:
+            if len(self.mps.pods_snapshot(live_only=False)) \
+                    >= self.policy.max_pods:
+                return None
+            pod = self._next_pod(template_index)
+        self.mps.record_scale_event("up")
+        self._last_event = now
+        self._above_since = None
+        ev = ScaleEvent(now, "up", pod.name, load,
+                        len(self.mps.pods_snapshot()))
+        self.events.append(ev)
+        return ev
+
+    def scale_up_for(self, job) -> Optional[Pod]:
+        """Submit-time hook (``MultiPodScheduler.submit``): a job fits no
+        live pod — add the first template pod that could hold it, if the
+        fleet may still grow.  This is the strongest scale-up signal, so
+        it bypasses both the backlog window and the cooldown (the
+        cooldown guards against load-signal thrash; here the
+        alternative is failing a placeable job *permanently* with the
+        budget error because of an unrelated earlier event) — only
+        ``max_pods`` still bounds it.  Returns the new pod, or None
+        (the job then takes the canonical budget failure)."""
+        now = self.clock()
+        p = self.policy
+        if len(self.mps.pods_snapshot(live_only=False)) >= p.max_pods:
+            return None
+        for i, spec in enumerate(self.templates):
+            try:
+                fp = estimate_job_footprint(job, spec.memory)
+            except Exception:
+                continue
+            if fp.bytes_on_device <= int(spec.memory.usable):
+                ev = self._scale_up(now, self.fleet_load(),
+                                    template_index=i)
+                return self.mps._pod_by(ev.pod) if ev is not None else None
+        return None
+
+    # ---- scale down --------------------------------------------------------
+
+    def _scale_down(self, now: float, load: float,
+                    pods: Sequence[Pod]) -> Optional[ScaleEvent]:
+        """Drain the least-loaded pod to the survivors and retire it."""
+        unit, init = fleet_units(pods)
+        victim = min(pods, key=lambda q: (pod_load(q.scheduler,
+                                                   q.n_devices,
+                                                   unit=unit, init=init),
+                                          q.name))
+        survivors = [q for q in pods if q is not victim]
+        victim.draining = True        # routing/stealing skip it from here
+        try:
+            with self.mps.transfer_guard():
+                moved = drain_pod(
+                    victim, survivors, self.mps.transfer_dir,
+                    data_refs=self.mps.data_refs,
+                    timeout=self.policy.drain_timeout_seconds)
+            self.mps.remove_pod(victim)
+        except Exception:
+            # aborted drain (unmovable job / timeout / a pinned submit
+            # that slipped in before remove_pod): the pod stays in
+            # service.  drain_pod resumes admission only when *it*
+            # raised, so resume here too — a pod back in service with
+            # admission still paused would strand its queue forever.
+            victim.scheduler.resume_admission()
+            victim.draining = False
+            self.aborted_scale_downs += 1
+            self._last_event = now    # still a cooldown: don't retry-spin
+            self._below_since = None
+            return None
+        self.drained_jobs.extend(moved)
+        self.mps.record_scale_event("down")
+        self._last_event = now
+        self._below_since = None
+        ev = ScaleEvent(now, "down", victim.name, load,
+                        len(self.mps.pods_snapshot()))
+        self.events.append(ev)
+        return ev

@@ -12,7 +12,7 @@ multi-accelerator wall-clock, exactly like the paper's per-GPU timelines
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 
 def percentile(xs: List[float], p: float) -> float:
@@ -38,6 +38,16 @@ class ServeMetrics:
     stolen_out: int = 0             # parked jobs exported to another pod
     stolen_in: int = 0              # parked jobs imported from another pod
 
+    # -- fleet gauges (maintained by MultiPodScheduler / Autoscaler; zero
+    #    on a single-pod scheduler) --
+    scale_up_events: int = 0        # pods added by the autoscaler
+    scale_down_events: int = 0      # pods drained + retired
+    pod_seconds: float = 0.0        # sum over pods of online wall time
+    # (monotonic timestamp, live pod count) after each membership change —
+    # the pods-online timeline; bounded by the number of scale events
+    pods_online: List[Tuple[float, int]] = dataclasses.field(
+        default_factory=list)
+
     step_seconds: List[float] = dataclasses.field(default_factory=list)
     latencies: List[float] = dataclasses.field(default_factory=list)
     queue_waits: List[float] = dataclasses.field(default_factory=list)
@@ -48,6 +58,9 @@ class ServeMetrics:
     def record_step(self, seconds: float) -> None:
         self.steps += 1
         self.step_seconds.append(seconds)
+
+    def record_pods_online(self, t: float, count: int) -> None:
+        self.pods_online.append((t, count))
 
     def record_completion(self, latency: float, queue_wait: float) -> None:
         self.completed += 1
@@ -87,6 +100,12 @@ class ServeMetrics:
             "queue_wait_p50": percentile(self.queue_waits, 50),
             "jobs_per_sec_wall": (self.completed / self.wall_seconds
                                   if self.wall_seconds > 0 else 0.0),
+            "scale_up_events": self.scale_up_events,
+            "scale_down_events": self.scale_down_events,
+            "pod_seconds": self.pod_seconds,
+            "pods_online": list(self.pods_online),
+            "pods_online_peak": (max(n for _, n in self.pods_online)
+                                 if self.pods_online else 0),
         }
         if device_busy is not None:
             makespan = max(device_busy) if device_busy else 0.0
@@ -118,6 +137,10 @@ def merge_metrics(parts: List["ServeMetrics"]) -> "ServeMetrics":
         out.deadline_rejected += m.deadline_rejected
         out.stolen_out += m.stolen_out
         out.stolen_in += m.stolen_in
+        out.scale_up_events += m.scale_up_events
+        out.scale_down_events += m.scale_down_events
+        out.pod_seconds += m.pod_seconds
+        out.pods_online.extend(m.pods_online)
         out.step_seconds.extend(m.step_seconds)
         out.latencies.extend(m.latencies)
         out.queue_waits.extend(m.queue_waits)
@@ -127,4 +150,5 @@ def merge_metrics(parts: List["ServeMetrics"]) -> "ServeMetrics":
         if m.wall_end is not None:
             out.wall_end = (m.wall_end if out.wall_end is None
                             else max(out.wall_end, m.wall_end))
+    out.pods_online.sort()     # one chronological fleet timeline
     return out

@@ -41,7 +41,9 @@ For true thread-per-device execution drive the same object with
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import json
 import os
 import tempfile
 import threading
@@ -52,10 +54,13 @@ from ..core.algorithms.stepwise import get_algorithm
 from ..core.splitting import MemoryModel
 from .job import JobRecord, ReconJob
 from .metrics import ServeMetrics, merge_metrics
-from .scheduler import (DevicePool, Scheduler, estimate_job_footprint,
-                        modeled_step_passes)
+from .scheduler import (DevicePool, Scheduler, _atomic_write_json,
+                        estimate_job_footprint, modeled_step_passes)
 from .steal import (StealPolicy, effective_units, fleet_units, pod_load,
                     steal_pass)
+
+#: membership manifest at the root of a fleet snapshot directory
+FLEET_MANIFEST = "fleet.json"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +92,9 @@ class Pod:
             policy=spec.placement)
         self.scheduler = Scheduler(pool=self.pool, guard=guard,
                                    snapshot_dir=snapshot_dir)
+        # set by the autoscaler while the pod is being emptied: routing
+        # and stealing skip a draining pod, so no new work lands on it
+        self.draining = False
 
     @property
     def name(self) -> str:
@@ -145,11 +153,15 @@ def modeled_job_seconds(job: ReconJob, pod: Pod,
 
 class MultiPodScheduler:
     """Routes jobs across pods and (optionally) rebalances them by work
-    stealing.
+    stealing.  Membership is *dynamic*: pods can be added and retired at
+    runtime (:meth:`add_pod` / :meth:`remove_pod`, driven by
+    :class:`repro.serve.autoscale.Autoscaler`), and every routing /
+    stealing / reporting pass iterates a snapshot of the pod list taken
+    under the fleet lock.
 
     Parameters
     ----------
-    pods : the pod set (see :class:`Pod`, :func:`pods_from_mesh`).
+    pods : the initial pod set (see :class:`Pod`, :func:`pods_from_mesh`).
     steal : enable work stealing between cooperative rounds (and in
         :class:`~repro.serve.driver.MultiPodDriver`'s steal thread).
     transfer_dir : directory jobs move through (manifest + COMMIT, the
@@ -159,39 +171,163 @@ class MultiPodScheduler:
     data_refs : job-id -> callable map letting *lazy* (data-ref) jobs be
         re-resolved on the thief pod; lazy jobs without an entry are
         never stolen.
+    snapshot_root : fleet-level durable snapshot directory.  Each pod
+        gets its own subdirectory (``<root>/pods/<pod_name>``) as its
+        scheduler's ``snapshot_dir``, and a ``fleet.json`` membership
+        manifest is kept at the root — :meth:`snapshot_fleet` /
+        :meth:`drain_fleet` persist the whole fleet and
+        :meth:`restore_fleet` rebuilds it (membership *and* parked jobs)
+        after process death.
     """
 
     def __init__(self, pods: Sequence[Pod], steal: bool = True,
                  transfer_dir: Optional[str] = None,
                  steal_policy: StealPolicy = StealPolicy(),
-                 data_refs: Optional[Dict[str, Callable]] = None):
+                 data_refs: Optional[Dict[str, Callable]] = None,
+                 snapshot_root: Optional[str] = None):
         if not pods:
             raise ValueError("MultiPodScheduler needs at least one pod")
         names = [p.name for p in pods]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate pod names: {names}")
-        self.pods = list(pods)
-        self.steal = steal and len(self.pods) > 1
+        self.steal = steal
         self.transfer_dir = transfer_dir or tempfile.mkdtemp(
             prefix="repro-steal-")
-        for p in self.pods:
-            sd = p.scheduler.snapshot_dir
-            if sd is not None and (os.path.abspath(sd)
-                                   == os.path.abspath(self.transfer_dir)):
-                raise ValueError(
-                    f"transfer_dir {self.transfer_dir!r} aliases pod "
-                    f"{p.name!r}'s snapshot_dir; hand-offs and durable "
-                    f"snapshots must use distinct directories")
+        self.snapshot_root = snapshot_root
         self.steal_policy = steal_policy
         self.data_refs = dict(data_refs or {})
         self.stolen_jobs: List[str] = []      # every job a pass moved
+        self.restored_jobs: List[str] = []    # filled by restore_fleet
         self._home: Dict[str, str] = {}       # job_id -> submit-time pod
+        # fleet lock: guards pod membership (add/remove), the retired
+        # list, and the pod-seconds ledger.  Every reader takes a
+        # snapshot (`pods_snapshot`) instead of iterating `self.pods`
+        # while another thread mutates it.
+        self._fleet_lock = threading.RLock()
+        # manifest writes run *outside* the fleet lock (disk I/O must
+        # not serialize submissions); the generation counter makes the
+        # race benign — a writer that captured older membership than
+        # what already landed skips its write
+        self._manifest_lock = threading.Lock()
+        self._manifest_gen = 0        # bumped under the fleet lock
+        self._manifest_written = 0    # guarded by the manifest lock
+        self.pods: List[Pod] = []
+        self.retired_pods: List[Pod] = []
+        # fleet gauges: scale events + pods-online timeline + the
+        # *retired* pods' accumulated pod-seconds (live pods' seconds are
+        # added on the fly in `metrics()`)
+        self.fleet_metrics = ServeMetrics()
+        self._pod_started: Dict[str, float] = {}
+        # set by Autoscaler so `submit` can grow the fleet for a job that
+        # fits no live pod (the `fits_nowhere_bytes` signal)
+        self.autoscaler = None
         # a job mid-transfer (exported from the victim, not yet imported
         # by the thief) is in *no* scheduler; the flag + generation
         # counter keep `idle` honest so a driver cannot observe the
-        # fleet as done and stop while the last job is on the wire
+        # fleet as done and stop while the last job is on the wire.
+        # Scale-down drains move jobs the same way and share the guard.
         self._stealing = threading.Event()
         self._steal_gen = 0
+        now = time.monotonic()
+        for p in pods:
+            self._admit_pod(p, now)
+        self.fleet_metrics.record_pods_online(now, len(self.pods))
+        self._write_fleet_manifest()
+
+    # ---- dynamic membership ------------------------------------------------
+
+    def _admit_pod(self, pod: Pod, now: float) -> None:
+        """Register one pod (fleet lock held by the caller where it
+        matters): wire its snapshot subdirectory, check transfer-dir
+        aliasing, start its pod-seconds clock."""
+        if self.snapshot_root is not None and \
+                pod.scheduler.snapshot_dir is None:
+            pod.scheduler.snapshot_dir = os.path.join(
+                self.snapshot_root, "pods", pod.name)
+        sd = pod.scheduler.snapshot_dir
+        if sd is not None and (os.path.abspath(sd)
+                               == os.path.abspath(self.transfer_dir)):
+            raise ValueError(
+                f"transfer_dir {self.transfer_dir!r} aliases pod "
+                f"{pod.name!r}'s snapshot_dir; hand-offs and durable "
+                f"snapshots must use distinct directories")
+        self.pods.append(pod)
+        self._pod_started[pod.name] = now
+
+    def pods_snapshot(self, live_only: bool = True) -> List[Pod]:
+        """Membership snapshot under the fleet lock — the list every
+        routing / stealing / reporting pass iterates.  With
+        ``live_only`` (default) draining pods are excluded: no new work
+        may land on a pod that is being emptied."""
+        with self._fleet_lock:
+            if live_only:
+                return [p for p in self.pods if not p.draining]
+            return list(self.pods)
+
+    def add_pod(self, pod: Pod) -> Pod:
+        """Grow the fleet at runtime (the autoscaler's scale-up).  The
+        new pod is immediately visible to routing and stealing; a
+        threaded fleet driver picks it up on its next membership sync.
+        Names must be unique across live *and* retired pods (retired
+        pods keep their completed-job records and their slice of the
+        pod-seconds ledger)."""
+        with self._fleet_lock:
+            taken = {p.name for p in self.pods}
+            taken.update(p.name for p in self.retired_pods)
+            if pod.name in taken:
+                raise ValueError(f"pod name {pod.name!r} already used")
+            self._admit_pod(pod, time.monotonic())
+            self.fleet_metrics.record_pods_online(time.monotonic(),
+                                                  len(self.pods))
+        # manifest I/O outside the lock: scale_up_for runs add_pod from
+        # inside `submit`, and a disk write under the fleet lock would
+        # serialize every tenant's submission behind it
+        self._write_fleet_manifest()
+        return pod
+
+    def remove_pod(self, pod: Union[str, Pod]) -> Pod:
+        """Retire an *empty* pod (the autoscaler's scale-down calls this
+        after the drain moved every job to survivors).  The pod keeps
+        its scheduler (completed-job records stay queryable through
+        :meth:`owner` / :meth:`result`) but leaves the routing set, and
+        its online time is folded into the pod-seconds ledger."""
+        with self._fleet_lock:
+            target = pod if isinstance(pod, Pod) else self._pod_by(pod)
+            if not target.scheduler.idle:
+                raise ValueError(
+                    f"remove_pod: pod {target.name!r} still holds work "
+                    f"(drain it first)")
+            self.pods.remove(target)
+            self.retired_pods.append(target)
+            now = time.monotonic()
+            started = self._pod_started.pop(target.name, now)
+            self.fleet_metrics.pod_seconds += now - started
+            if target.scheduler.metrics.wall_end is None:
+                target.scheduler.metrics.wall_end = now
+            self.fleet_metrics.record_pods_online(now, len(self.pods))
+        self._write_fleet_manifest()   # I/O outside the lock (see add_pod)
+        return target
+
+    def record_scale_event(self, direction: str) -> None:
+        with self._fleet_lock:
+            if direction == "up":
+                self.fleet_metrics.scale_up_events += 1
+            elif direction == "down":
+                self.fleet_metrics.scale_down_events += 1
+            else:
+                raise ValueError(f"unknown scale direction {direction!r}")
+
+    @contextlib.contextmanager
+    def transfer_guard(self):
+        """Mark a job hand-off (steal or drain) in flight so
+        :attr:`idle` cannot report "all done" while a job is on the wire
+        between two schedulers."""
+        self._stealing.set()
+        self._steal_gen += 1
+        try:
+            yield
+        finally:
+            self._stealing.clear()
 
     # ---- submission / routing ---------------------------------------------
 
@@ -206,19 +342,19 @@ class MultiPodScheduler:
         raise KeyError(f"no pod named {pod!r} "
                        f"(have {[p.name for p in self.pods]})")
 
-    def route(self, job: ReconJob) -> Pod:
+    def route(self, job: ReconJob) -> Optional[Pod]:
         """Pod with the minimal modeled completion makespan for ``job``:
         per-device backlog + the job's modeled cost under that pod's
         topology, all on the fleet-shared unit scale (a cold pod borrows
         the warm pods' EMAs, so an idle new pod is not mispriced against
         a warm loaded one; ties: fewer devices busy, then pod order).
-        If no pod can ever hold the job, the largest-memory pod is
-        returned so its scheduler fails the job with the canonical
-        budget error."""
-        unit, init = fleet_units(self.pods)
+        Draining pods are never candidates.  Returns None when no live
+        pod can ever hold the job."""
+        pods = self.pods_snapshot()
+        unit, init = fleet_units(pods)
         best: Optional[Tuple[float, int, int]] = None
         chosen: Optional[Pod] = None
-        for i, pod in enumerate(self.pods):
+        for i, pod in enumerate(pods):
             cost = modeled_job_seconds(job, pod, unit=unit, init=init)
             if cost is None:
                 continue
@@ -228,25 +364,44 @@ class MultiPodScheduler:
             score = (backlog + cost, busy, i)
             if best is None or score < best:
                 best, chosen = score, pod
-        if chosen is None:
-            return max(self.pods, key=lambda p: p.pool.memory.usable)
         return chosen
 
     def submit(self, job: ReconJob,
                pod: Optional[Union[int, str, Pod]] = None) -> str:
         """Submit ``job``, routed by modeled makespan — or pinned to
         ``pod`` (index / name / object), which is how static per-pod
-        partitioning (tenant affinity) is expressed."""
-        target = self._pod_by(pod) if pod is not None else self.route(job)
-        jid = target.scheduler.submit(job)
-        self._home[jid] = target.name
+        partitioning (tenant affinity) is expressed.
+
+        Runs under the fleet lock so routing and membership changes
+        cannot interleave (a job can never be routed onto a pod that is
+        concurrently retired).  If no live pod can hold the job and an
+        :class:`~repro.serve.autoscale.Autoscaler` is attached, the
+        autoscaler is asked to grow the fleet from its template pool
+        (the ``fits_nowhere_bytes`` signal); failing that, the job goes
+        to the largest-memory pod so its scheduler fails it with the
+        canonical budget error."""
+        with self._fleet_lock:
+            if pod is not None:
+                target = self._pod_by(pod)
+            else:
+                target = self.route(job)
+                if target is None and self.autoscaler is not None:
+                    target = self.autoscaler.scale_up_for(job)
+                if target is None:
+                    target = max(self.pods_snapshot() or self.pods,
+                                 key=lambda p: p.pool.memory.usable)
+            jid = target.scheduler.submit(job)
+            self._home[jid] = target.name
         return jid
 
     # ---- lookups across pods ----------------------------------------------
 
     def owner(self, job_id: str) -> Pod:
-        """Pod currently holding the job's record (stealing moves it)."""
-        for pod in self.pods:
+        """Pod currently holding the job's record (stealing moves it;
+        retired pods keep the records of jobs that completed on them)."""
+        with self._fleet_lock:
+            pods = list(self.pods) + list(self.retired_pods)
+        for pod in pods:
             if job_id in pod.scheduler.records:
                 return pod
         raise KeyError(f"unknown job {job_id}")
@@ -263,16 +418,17 @@ class MultiPodScheduler:
 
     @property
     def idle(self) -> bool:
-        # valid only if no steal pass was in flight at any point during
-        # the pod scan: a pass could move a job from a pod we check
-        # *later* to one we checked *earlier*, making every pod look
-        # idle while the job is on the wire.  The flag covers an active
-        # pass; the generation counter covers a pass that started and
-        # finished entirely within our scan.
+        # valid only if no steal pass / scale-down drain was in flight at
+        # any point during the pod scan: a hand-off could move a job from
+        # a pod we check *later* to one we checked *earlier*, making
+        # every pod look idle while the job is on the wire.  The flag
+        # covers an active pass; the generation counter covers a pass
+        # that started and finished entirely within our scan.
         gen = self._steal_gen
         if self._stealing.is_set():
             return False
-        result = all(p.scheduler.idle for p in self.pods)
+        result = all(p.scheduler.idle
+                     for p in self.pods_snapshot(live_only=False))
         if self._stealing.is_set() or self._steal_gen != gen:
             return False
         return result
@@ -281,54 +437,230 @@ class MultiPodScheduler:
 
     def steal_pass(self) -> List[str]:
         """One explicit rebalancing pass (the cooperative loop and the
-        threaded driver both call this).  Returns moved job ids."""
+        threaded driver both call this).  Operates on the live
+        (non-draining) membership snapshot.  Returns moved job ids."""
         if not self.steal:
             return []
-        self._stealing.set()
-        self._steal_gen += 1
-        try:
-            moved = steal_pass(self.pods, self.transfer_dir,
+        with self.transfer_guard():
+            moved = steal_pass(self.pods_snapshot(), self.transfer_dir,
                                data_refs=self.data_refs,
                                policy=self.steal_policy)
-        finally:
-            self._stealing.clear()
         self.stolen_jobs.extend(moved)
         return moved
 
-    def run(self, max_rounds: Optional[int] = None) -> ServeMetrics:
+    def run(self, max_rounds: Optional[int] = None,
+            autoscaler=None) -> ServeMetrics:
         """Cooperative fleet loop: each round steps every pod's scheduler
-        one quantum, then runs a steal pass so idle pods pick up other
-        pods' parked surplus.  Single-threaded (one pod computes at a
-        time); use :class:`repro.serve.driver.MultiPodDriver` for real
-        per-device overlap.  Returns the merged fleet metrics."""
-        for pod in self.pods:
-            if pod.scheduler.metrics.wall_start is None:
-                pod.scheduler.metrics.wall_start = time.monotonic()
+        one quantum, runs a steal pass so idle pods pick up other pods'
+        parked surplus, then gives the autoscaler (the ``autoscaler``
+        argument, or the one registered on this fleet) one control
+        decision.  Single-threaded (one pod computes at a time); use
+        :class:`repro.serve.driver.MultiPodDriver` for real per-device
+        overlap.  Returns the merged fleet metrics."""
+        autoscaler = autoscaler if autoscaler is not None \
+            else self.autoscaler
         rounds = 0
-        while not self.idle:
+        while True:
+            now = time.monotonic()
+            for pod in self.pods_snapshot(live_only=False):
+                if pod.scheduler.metrics.wall_start is None:
+                    pod.scheduler.metrics.wall_start = now
+            if self.idle:
+                break
             if max_rounds is not None and rounds >= max_rounds:
                 break
-            for pod in self.pods:
+            for pod in self.pods_snapshot(live_only=False):
                 pod.scheduler.step_quantum()
             self.steal_pass()
+            if autoscaler is not None:
+                autoscaler.step()
             rounds += 1
         now = time.monotonic()
-        for pod in self.pods:
+        for pod in self.pods_snapshot(live_only=False):
             pod.scheduler.metrics.wall_end = now
         return self.metrics()
 
     # ---- reporting ---------------------------------------------------------
 
+    def _gauge_metrics(self) -> ServeMetrics:
+        """Snapshot of the fleet gauges with the *live* pods' online time
+        added to the retired pods' accumulated pod-seconds."""
+        with self._fleet_lock:
+            g = ServeMetrics(
+                scale_up_events=self.fleet_metrics.scale_up_events,
+                scale_down_events=self.fleet_metrics.scale_down_events,
+                pod_seconds=self.fleet_metrics.pod_seconds,
+                pods_online=list(self.fleet_metrics.pods_online))
+            now = time.monotonic()
+            g.pod_seconds += sum(now - t0
+                                 for t0 in self._pod_started.values())
+        return g
+
     def metrics(self) -> ServeMetrics:
-        return merge_metrics([p.scheduler.metrics for p in self.pods])
+        """Merged fleet metrics over live *and* retired pods, plus the
+        fleet gauges (scale events, pods-online timeline, pod-seconds)."""
+        with self._fleet_lock:
+            parts = [p.scheduler.metrics
+                     for p in self.pods + self.retired_pods]
+        return merge_metrics(parts + [self._gauge_metrics()])
 
     def summary(self) -> Dict:
         """Fleet summary (merged counters, fleet-wide makespan over every
-        device busy clock) plus a per-pod breakdown."""
+        device busy clock — retired pods included) plus a per-pod
+        breakdown."""
+        with self._fleet_lock:
+            live = list(self.pods)
+            retired = list(self.retired_pods)
         busy: List[float] = []
-        for pod in self.pods:
+        for pod in live + retired:
             busy.extend(pod.pool.busy_clocks())
         out = self.metrics().summary(device_busy=busy)
-        out["pods"] = {p.name: p.scheduler.summary() for p in self.pods}
+        out["pods"] = {p.name: p.scheduler.summary() for p in live}
+        out["retired_pods"] = {p.name: p.scheduler.summary()
+                               for p in retired}
         out["jobs_stolen"] = len(self.stolen_jobs)
         return out
+
+    # ---- fleet-level durable snapshots -------------------------------------
+    #
+    # Layout under `snapshot_root`:
+    #
+    #   <root>/fleet.json            # membership manifest (atomic replace):
+    #                                #   {"pods": [{name, n_devices, ...}],
+    #                                #    "homes": {job_id: pod_name}}
+    #   <root>/pods/<pod_name>/      # that pod scheduler's snapshot_dir
+    #     jobs/<job_id>/...          #   (spec.json + manifest+COMMIT steps,
+    #                                #    see scheduler.py)
+    #
+    # The manifest is rewritten on every membership change (ctor,
+    # add_pod, remove_pod), so a kill -9 at any moment leaves a manifest
+    # that matches the per-pod job directories next to it.  `jax_devices`
+    # pins cannot be persisted (device handles are process-local);
+    # restored pods are rebuilt as simulated pods with the recorded
+    # device count and budget — on a real cluster, re-derive the mesh and
+    # pass fresh pods instead if device pinning matters.
+
+    def _write_fleet_manifest(self) -> None:
+        if self.snapshot_root is None:
+            return
+        # capture under the fleet lock, write under the manifest lock —
+        # never both at once (a submit thread already holding the fleet
+        # lock reaches here via scale_up_for, so nesting the two would
+        # deadlock against a concurrent writer)
+        with self._fleet_lock:
+            self._manifest_gen += 1
+            gen = self._manifest_gen
+            spec = {
+                "pods": [{
+                    "name": p.name,
+                    "n_devices": p.n_devices,
+                    "device_bytes": p.pool.memory.device_bytes,
+                    "usable_fraction": p.pool.memory.usable_fraction,
+                    "max_jobs_per_device": p.spec.max_jobs_per_device,
+                    "placement": p.spec.placement,
+                } for p in self.pods],
+                "homes": dict(self._home),
+            }
+        with self._manifest_lock:
+            if gen < self._manifest_written:
+                return        # a newer membership already landed on disk
+            self._manifest_written = gen
+            os.makedirs(self.snapshot_root, exist_ok=True)
+            _atomic_write_json(
+                os.path.join(self.snapshot_root, FLEET_MANIFEST), spec)
+
+    def snapshot_fleet(self, root: Optional[str] = None) -> int:
+        """Persist the fleet durably: membership manifest + every pod's
+        parked jobs under its own snapshot subdirectory.  Returns the
+        number of jobs persisted across pods."""
+        root = root or self.snapshot_root
+        if root is None:
+            raise ValueError("snapshot_fleet: no snapshot_root configured")
+        self._write_fleet_manifest()
+        persisted = 0
+        for pod in self.pods_snapshot(live_only=False):
+            pod_dir = pod.scheduler.snapshot_dir or os.path.join(
+                root, "pods", pod.name)
+            persisted += pod.scheduler.snapshot(pod_dir)
+        return persisted
+
+    def drain_fleet(self, root: Optional[str] = None,
+                    timeout: float = 60.0) -> int:
+        """Park + persist every running job on every pod (the fleet-wide
+        SIGTERM path): each pod's scheduler drains into its own snapshot
+        subdirectory, and the membership manifest is rewritten.  Returns
+        the number of jobs parked."""
+        root = root or self.snapshot_root
+        if root is None:
+            raise ValueError("drain_fleet: no snapshot_root configured")
+        self._write_fleet_manifest()
+        parked = 0
+        for pod in self.pods_snapshot(live_only=False):
+            pod_dir = pod.scheduler.snapshot_dir or os.path.join(
+                root, "pods", pod.name)
+            parked += pod.scheduler.drain(pod_dir, timeout=timeout)
+        return parked
+
+    @classmethod
+    def restore_fleet(cls, snapshot_root: str,
+                      data_refs: Optional[Dict[str, Callable]] = None,
+                      steal: bool = True,
+                      transfer_dir: Optional[str] = None,
+                      steal_policy: StealPolicy = StealPolicy(),
+                      guard=None) -> "MultiPodScheduler":
+        """Rebuild a whole fleet — membership *and* parked jobs — from a
+        fleet snapshot directory after process death.  Every pod named in
+        ``fleet.json`` is reconstructed (device count, budget, placement
+        policy) and its scheduler restored from its snapshot
+        subdirectory; jobs resume bit-identically to an uninterrupted
+        run.  The restored job ids are exposed as ``restored_jobs``.
+
+        ``data_refs`` supplies projection callables for lazy-data jobs
+        (refs cannot be persisted); ``guard`` is attached to every
+        restored pod's scheduler.  Restore failures are loud (see
+        :meth:`Scheduler.restore`)."""
+        manifest_path = os.path.join(snapshot_root, FLEET_MANIFEST)
+        if not os.path.isfile(manifest_path):
+            raise FileNotFoundError(
+                f"restore_fleet: no {FLEET_MANIFEST} under "
+                f"{snapshot_root!r} (not a fleet snapshot?)")
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        if not manifest.get("pods"):
+            raise ValueError(f"restore_fleet: {manifest_path} lists no pods")
+        pods = [Pod(PodSpec(
+                    name=p["name"], n_devices=p["n_devices"],
+                    memory=MemoryModel(
+                        device_bytes=p["device_bytes"],
+                        usable_fraction=p["usable_fraction"]),
+                    max_jobs_per_device=p["max_jobs_per_device"],
+                    placement=p["placement"]),
+                    guard=guard)
+                for p in manifest["pods"]]
+        mps = cls(pods, steal=steal, transfer_dir=transfer_dir,
+                  steal_policy=steal_policy, data_refs=data_refs,
+                  snapshot_root=snapshot_root)
+        homes = manifest.get("homes", {})
+        # the ctor rewrote fleet.json while _home was still empty: put
+        # the homes back (memory + disk) *before* the per-pod restores,
+        # whose documented failure mode (e.g. a lazy job missing its
+        # data_refs entry) is loud-and-retryable — a retry must not find
+        # the homes metadata destroyed by the failed attempt
+        with mps._fleet_lock:
+            mps._home.update(homes)
+        mps._write_fleet_manifest()
+        restored: List[str] = []
+        for pod in mps.pods:
+            before = set(pod.scheduler.records)
+            pod.scheduler.restore(pod.scheduler.snapshot_dir,
+                                  data_refs=data_refs)
+            for jid in set(pod.scheduler.records) - before:
+                restored.append(jid)
+                # manifest homes win (submit-time pod); a job missing
+                # there (submitted after the last manifest rewrite)
+                # falls back to the pod it was restored from
+                if jid not in homes:
+                    mps._home[jid] = pod.name
+        mps.restored_jobs = sorted(restored)
+        mps._write_fleet_manifest()   # persist any fallback homes
+        return mps

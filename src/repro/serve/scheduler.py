@@ -49,11 +49,18 @@ how the tests drive a "multi-GPU" pool on a CPU host.
 All public methods are thread-safe: one re-entrant lock guards every
 mutation of the pool / records / running set (the job queue carries its
 own lock); executor steps themselves run *outside* the lock so device
-compute genuinely overlaps across worker threads.  Known limitation:
-executor *init* (data-ref resolution + operator build/JIT) still runs
-inside the admission critical section, so a first-seen geometry briefly
-stalls claims on other slots — the shared operator cache makes repeats
-cheap; moving init out of the lock is a ROADMAP item.
+compute genuinely overlaps across worker threads.  Executor *init*
+(data-ref resolution + operator build/JIT) also runs outside the lock:
+admission reserves the slot's bytes under the lock, initialises
+unlocked, then commits (or rolls back) the reservation — a first-seen
+geometry's compile never stalls claims on other slots.  Jobs mid-init
+are tracked by an in-flight counter so ``idle`` and ``drain`` cannot
+observe them as "gone".
+
+Admission can be paused (:meth:`Scheduler.pause_admission`): running
+jobs keep stepping but parked jobs stay parked, which is how a
+scale-down drain (``repro.serve.autoscale``) keeps the jobs it preempts
+from being re-placed on the pod it is about to retire.
 """
 
 from __future__ import annotations
@@ -271,6 +278,15 @@ class Scheduler:
         self.snapshot_dir = snapshot_dir
         self._seq = itertools.count()
         self._lock = threading.RLock()
+        # in-flight admissions (slot reserved, executor init running
+        # outside the lock); jobs in this window are in neither the queue
+        # nor `running`, so idle/drain consult the counter and the load
+        # model (`modeled_backlog_seconds`) still prices the records —
+        # an invisible mid-admission job would make the pod look idle to
+        # fleet routing/stealing and cause ping-pong moves
+        self._admitting = 0
+        self._admitting_recs: Dict[str, JobRecord] = {}
+        self._admission_paused = False
         # admission-model cost estimates (EMAs over observed jobs)
         self._step_ema: Optional[float] = None
         self._init_ema: Optional[float] = None
@@ -317,11 +333,29 @@ class Scheduler:
 
     @property
     def idle(self) -> bool:
-        # under the lock: admission pops + places in one critical section,
-        # so a job mid-admission (in neither queue nor running) can never
-        # be observed as "all done" by a concurrent waiter
+        # a job mid-admission (slot reserved, init running outside the
+        # lock) is in neither the queue nor `running`; the in-flight
+        # counter keeps a concurrent waiter from observing "all done"
+        # while an executor is still compiling
         with self._lock:
-            return not self.queue and not self.running
+            return (not self.queue and not self.running
+                    and self._admitting == 0)
+
+    def pause_admission(self) -> None:
+        """Stop placing queued jobs (running jobs keep stepping).  The
+        scale-down drain pauses a pod so the jobs it parks stay parked
+        until they are exported to a surviving pod instead of being
+        re-placed on the pod about to retire."""
+        with self._lock:
+            self._admission_paused = True
+
+    def resume_admission(self) -> None:
+        with self._lock:
+            self._admission_paused = False
+
+    @property
+    def admission_paused(self) -> bool:
+        return self._admission_paused
 
     # ---- placement ---------------------------------------------------------
 
@@ -346,40 +380,64 @@ class Scheduler:
                                     rec.job.job_id),
                        rec.status.value)
 
-    def _place(self, rec: JobRecord) -> bool:
-        """Try to admit one record onto the pool.  Returns True if the
-        record was consumed (placed, completed trivially, or failed)."""
-        try:
-            fp = estimate_job_footprint(rec.job, self.pool.memory)
-        except Exception as e:   # bad geometry/budget is this tenant's fault
-            self._fail(rec, f"unplannable under device budget: {e!r}")
-            return True
-        if fp.bytes_on_device > self.pool.fits_nowhere_bytes:
-            self._fail(rec, f"footprint {fp.bytes_on_device} B exceeds the "
-                            f"device budget {self.pool.fits_nowhere_bytes} B "
-                            f"even on an empty device")
-            return True
-        slot = self.pool.best_fit(fp.bytes_on_device)
-        if slot is None:
-            return False
+    def _reserve_next(self) -> Optional[Tuple[JobRecord, DeviceSlot,
+                                              JobFootprint]]:
+        """Under the lock: pop queued jobs in priority order until one
+        gets a slot *reservation* (its bytes committed, executor not yet
+        built) or the head job cannot be placed (strict priority order —
+        no backfilling past the head; returns None).  Jobs consumed
+        without a reservation (deadline rejection, unplannable,
+        oversized) are failed in place."""
+        if self._admission_paused:
+            return None
+        while True:
+            if self.queue.peek_priority() is None:
+                return None
+            rec = self.queue.pop()
+            if rec is None:
+                return None
+            if self._reject_for_deadline(rec):
+                continue
+            try:
+                fp = estimate_job_footprint(rec.job, self.pool.memory)
+            except Exception as e:   # bad geometry/budget: tenant's fault
+                self._fail(rec, f"unplannable under device budget: {e!r}")
+                continue
+            if fp.bytes_on_device > self.pool.fits_nowhere_bytes:
+                self._fail(rec, f"footprint {fp.bytes_on_device} B exceeds "
+                                f"the device budget "
+                                f"{self.pool.fits_nowhere_bytes} B "
+                                f"even on an empty device")
+                continue
+            slot = self.pool.best_fit(fp.bytes_on_device)
+            if slot is None and self._evict_for(rec, fp.bytes_on_device):
+                slot = self.pool.best_fit(fp.bytes_on_device)
+            if slot is None:
+                # head job cannot be placed now: put it back and stop
+                # admitting (deferred evictions land at step boundaries
+                # and a later admission pass retries)
+                self.queue.push(rec)
+                return None
+            # reserve the bytes *before* init: concurrent admissions and
+            # eviction planning see the slot as taken while the executor
+            # compiles outside the lock
+            self.pool.commit(slot, rec.job.job_id, fp.bytes_on_device)
+            self._admitting += 1
+            self._admitting_recs[rec.job.job_id] = rec
+            return rec, slot, fp
 
-        executor = None
-        try:
-            # one tenant's bad geometry / data ref / algorithm params must
-            # fail that job alone, never the scheduler serving the others
-            executor = JobExecutor(
-                rec.job, mode="stream" if fp.streams else "plain",
-                memory=self.pool.memory,
-                devices=([slot.jax_device] if slot.jax_device is not None
-                         else None))
-            executor.start(checkpoint=rec.checkpoint)
-        except Exception as e:
-            if executor is not None:
-                # start() may have built device state before raising --
-                # drop it so the buffers are reclaimed
-                executor.release()
-            self._fail(rec, f"init failed: {e!r}")
-            return True
+    def _commit_admission(self, rec: JobRecord, slot: DeviceSlot,
+                          fp: JobFootprint,
+                          executor: Optional[JobExecutor],
+                          err: Optional[Exception]) -> None:
+        """Under the lock: turn a reservation into a running job, or roll
+        the reservation back if init failed."""
+        self._admitting -= 1
+        self._admitting_recs.pop(rec.job.job_id, None)
+        if err is not None:
+            self.pool.release(slot, rec.job.job_id, fp.bytes_on_device)
+            self._fail(rec, f"init failed: {err!r}")
+            return
         self._init_ema = (executor.init_seconds if self._init_ema is None
                           else self._ema_alpha * executor.init_seconds
                           + (1 - self._ema_alpha) * self._init_ema)
@@ -393,7 +451,6 @@ class Scheduler:
         if rec.start_time is None:
             rec.start_time = time.monotonic()
         slot.busy_seconds += executor.init_seconds
-        self.pool.commit(slot, rec.job.job_id, fp.bytes_on_device)
         # join stride scheduling at the slot's current virtual time: a
         # newcomer starting at vtime 0 would monopolize the device until
         # it "caught up" with long-resident jobs
@@ -401,33 +458,42 @@ class Scheduler:
         self.running[rec.job.job_id] = _Running(
             rec, executor, slot, vtime=min(peers, default=0.0),
             passes=self.job_passes(rec.job))
-        return True
 
     def admit(self) -> None:
         """Thread-safe admission pass (the driver's scheduler loop calls
-        this; the cooperative loop calls it at each quantum)."""
-        with self._lock:
-            self._try_admit()
+        this; the cooperative loop calls it at each quantum).
 
-    def _try_admit(self) -> None:
-        """Admit queued jobs in priority order; on a full pool, preempt
-        strictly-lower-priority running work for the head job."""
+        Executor init (data-ref resolution + operator build/JIT) runs
+        *outside* the scheduler lock: the critical section only reserves
+        the slot's bytes, so a first-seen geometry's compile never stalls
+        step claims on other slots; the reservation is committed or
+        rolled back under the lock once init returns."""
         while True:
-            if self.queue.peek_priority() is None:
+            with self._lock:
+                reserved = self._reserve_next()
+            if reserved is None:
                 return
-            rec = self.queue.pop()
-            if rec is None:
-                return
-            if self._reject_for_deadline(rec):
-                continue
-            if self._place(rec):
-                continue
-            if self._preempt_for(rec):
-                continue
-            # head job cannot be placed: put it back and stop admitting
-            # (strict priority order -- no backfilling past the head).
-            self.queue.push(rec)
-            return
+            rec, slot, fp = reserved
+            executor: Optional[JobExecutor] = None
+            err: Optional[Exception] = None
+            try:
+                # one tenant's bad geometry / data ref / algorithm params
+                # must fail that job alone, never the scheduler serving
+                # the others
+                executor = JobExecutor(
+                    rec.job, mode="stream" if fp.streams else "plain",
+                    memory=self.pool.memory,
+                    devices=([slot.jax_device] if slot.jax_device is not None
+                             else None))
+                executor.start(checkpoint=rec.checkpoint)
+            except Exception as e:
+                if executor is not None:
+                    # start() may have built device state before raising --
+                    # drop it so the buffers are reclaimed
+                    executor.release()
+                executor, err = None, e
+            with self._lock:
+                self._commit_admission(rec, slot, fp, executor, err)
 
     # ---- deadline admission ------------------------------------------------
 
@@ -494,19 +560,16 @@ class Scheduler:
             n_jobs -= 1
         return victims if fits() else None
 
-    def _preempt_for(self, rec: JobRecord) -> bool:
+    def _evict_for(self, rec: JobRecord, needed: int) -> bool:
         """Per-device preemption: pick the slot where evicting the
         cheapest set of strictly-lower-priority victims makes ``rec``
         fit, and evict only those.  Jobs on devices that could never make
-        room keep running.  Returns False (leaving ``rec`` for the next
-        admission pass) when the only viable victims are mid-step — they
-        are flagged and park at their step boundary."""
-        try:
-            fp = estimate_job_footprint(rec.job, self.pool.memory)
-        except Exception:
-            return False      # _place already failed the unplannable job
-        needed = fp.bytes_on_device
-
+        room keep running.  Returns True when the evictions freed the
+        bytes synchronously (the caller's ``best_fit`` retry will
+        succeed); False when nothing can move now — either no slot has a
+        viable victim set, or the only viable victims are mid-step (they
+        are flagged, park at their step boundary, and a later admission
+        pass retries the arrival)."""
         best: Optional[Tuple[tuple, DeviceSlot, List[_Running]]] = None
         for slot in self.pool.slots:
             victims = self._slot_eviction_plan(slot, rec, needed)
@@ -530,9 +593,7 @@ class Scheduler:
                 deferred = True
             else:
                 self._preempt(run)
-        if deferred:
-            return False
-        return self._place(rec)
+        return not deferred
 
     def _preempt(self, run: _Running) -> None:
         rec = run.record
@@ -579,12 +640,13 @@ class Scheduler:
         del self.running[rec.job.job_id]
 
     def step_quantum(self) -> int:
-        """One cooperative scheduling quantum: admit, then advance every
-        running job by its fair share of outer iterations — step quanta
+        """One cooperative scheduling quantum: admit (executor init runs
+        outside the lock, see :meth:`admit`), then advance every running
+        job by its fair share of outer iterations — step quanta
         proportional to ``1 + priority``.  Returns the number of iteration
         steps executed."""
+        self.admit()
         with self._lock:
-            self._try_admit()
             executed = 0
             # deterministic order: device index, then submission order
             for run in sorted(self.running.values(),
@@ -707,12 +769,15 @@ class Scheduler:
                         run.preempt_requested = True
                     else:
                         self._preempt(run)
-                if not self.running:
+                # also wait out in-flight admissions: a job mid-init is in
+                # neither the queue nor `running`, and draining past it
+                # would lose it from the snapshot
+                if not self.running and self._admitting == 0:
                     break
             if time.monotonic() > deadline:
                 raise TimeoutError(
-                    f"drain: {len(self.running)} jobs still mid-step after "
-                    f"{timeout}s")
+                    f"drain: {len(self.running)} jobs still mid-step (and "
+                    f"{self._admitting} mid-admission) after {timeout}s")
             time.sleep(0.001)
         with self._lock:
             parked = sum(
@@ -850,6 +915,13 @@ class Scheduler:
             for rec in self.queue.pending_records():
                 total += init + (unit * self._remaining_iters(rec)
                                  * self.job_passes(rec.job))
+            # mid-admission records (init running outside the lock) are
+            # in neither set but still owed work: leaving them out would
+            # make the pod look idle to fleet routing/stealing for the
+            # whole compile and invite ping-pong moves
+            for rec in self._admitting_recs.values():
+                total += init + (unit * self._remaining_iters(rec)
+                                 * self.job_passes(rec.job))
             for run in self.running.values():
                 total += (unit * self._remaining_iters(run.record)
                           * run.passes)
@@ -954,7 +1026,14 @@ class Scheduler:
         transfer dir to double-execute) and the directory is then
         removed, so a long-lived fleet does not leak one full checkpoint
         per steal on the shared mount.  Failed imports (missing data
-        ref, duplicate id) leave the copy intact for a retry."""
+        ref, duplicate id) leave the copy intact for a retry.
+
+        A scheduler with a ``snapshot_dir`` persists the adopted job
+        there *before* consuming the transfer copy: the victim's own
+        snapshot of the job is already a ``stolen`` tombstone, so
+        without this a kill -9 after the steal (job admitted on the
+        thief, never parked again) would lose the job from every
+        snapshot on disk."""
         job_dir = os.path.join(transfer_dir, "jobs", job_id)
         rec = _load_job(job_dir, data_refs or {})
         if rec is None:
@@ -969,6 +1048,23 @@ class Scheduler:
             self.metrics.stolen_in += 1
             current = next(self._seq)
             self._seq = itertools.count(max(current, rec.seq + 1))
+            snapshot_dir = self.snapshot_dir
+            payload = _job_payload(rec) if snapshot_dir else None
+            fingerprint = (rec.iterations_done, rec.status.value,
+                           rec.preemptions)
+        if payload is not None:
+            _write_job(snapshot_dir, *payload)
+            with self._lock:
+                self._snapshotted[rec.job.job_id] = fingerprint
+                # the write ran outside the lock: a fast job may have
+                # been admitted and finished meanwhile, and its own
+                # terminal stale-out no-opped (no spec on disk yet).
+                # Re-stale now or a restart would re-execute it (same
+                # discipline as snapshot()).
+                stale_status = rec.status.value if rec.done else None
+            if stale_status is not None:
+                _stale_job_dir(os.path.join(snapshot_dir, "jobs",
+                                            rec.job.job_id), stale_status)
         _consume_transfer_copy(job_dir)
         return rec.job.job_id
 

@@ -37,11 +37,18 @@ mount; on a single host it is just a scratch directory.  Either way the
 COMMIT marker means a crash mid-transfer can never lose the job: the
 victim forgets it only after the write commits, and an uncommitted
 transfer directory is invisible to :meth:`Scheduler.import_job`.
+
+The same transfer machinery also empties a whole pod:
+:func:`drain_pod` is the autoscaler's scale-down path — pause the
+pod's admission, preempt its running jobs at their step boundaries,
+then export *everything* to the surviving pods (see
+:mod:`repro.serve.autoscale`).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .scheduler import Scheduler
@@ -185,6 +192,112 @@ def steal_once(victim, thief, transfer_dir: str,
                                             data_refs=data_refs)
             return None
     return None
+
+
+def _best_survivor(rec, survivors: Sequence,
+                   data_refs: Dict[str, Callable],
+                   units: Tuple[float, float]):
+    """Least-loaded survivor that can hold ``rec`` — load plus the job's
+    modeled cost under that survivor's budget (the same slab-pass model
+    routing and stealing use), all on the fleet unit scale.  None when no
+    survivor can take the job."""
+    default_unit, default_init = units
+    best: Optional[float] = None
+    chosen = None
+    for s in survivors:
+        if not _stealable(rec, s, data_refs):
+            continue
+        unit, init = effective_units(s.scheduler, default_unit,
+                                     default_init)
+        passes = s.scheduler.job_passes(rec.job)
+        cost = init + Scheduler._remaining_iters(rec) * passes * unit
+        load = pod_load(s.scheduler, s.n_devices,
+                        unit=default_unit, init=default_init)
+        score = load + cost / max(1, s.n_devices)
+        if best is None or score < best:
+            best, chosen = score, s
+    return chosen
+
+
+def drain_pod(pod, survivors: Sequence, transfer_dir: str,
+              data_refs: Optional[Dict[str, Callable]] = None,
+              timeout: float = 60.0) -> List[str]:
+    """Empty one pod for retirement (the autoscaler's scale-down):
+
+    1. **pause** the pod's admission, so jobs it parks stay parked
+       instead of being re-placed on the pod about to go away;
+    2. **preempt** every running job — each parks at its next step
+       boundary with a step-wise checkpoint;
+    3. **export** every parked job through ``transfer_dir`` (the durable
+       manifest + COMMIT format) and import it on the least-loaded
+       survivor that can hold it — the checkpoint travels, so each moved
+       job resumes on its survivor *bit-identically* to never having
+       been drained.
+
+    The park/export loop repeats until the pod is empty, so a
+    submission or steal that raced the drain is moved too.  If any job
+    cannot move (a lazy-data job with no ``data_refs`` resolver, or a
+    job no survivor can hold), the pod is returned to service
+    (admission resumed, ``draining`` cleared) and ``RuntimeError``
+    raised — it still owns every unmoved job and the caller must abort
+    the scale-down.
+
+    On success the pod is left **ready for retirement**: empty,
+    ``draining`` set (fleet routing/stealing skip it) and admission
+    still paused.  Pass it to ``MultiPodScheduler.remove_pod`` — or, to
+    return it to service instead, clear ``draining`` and call
+    ``resume_admission()``.  Returns the moved job ids."""
+    data_refs = data_refs or {}
+    sched = pod.scheduler
+    had_draining = getattr(pod, "draining", None)
+    if had_draining is not None:
+        pod.draining = True       # no new work routed here from now on
+    sched.pause_admission()
+    moved: List[str] = []
+    deadline = time.monotonic() + timeout
+    try:
+        while True:
+            # park running (and mid-admission) work at step boundaries
+            sched.drain(None, timeout=max(0.001,
+                                          deadline - time.monotonic()))
+            candidates = sched.steal_candidates()
+            if not candidates:
+                if sched.idle:
+                    return moved
+                if time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"drain_pod: pod {pod.name!r} not empty after "
+                        f"{timeout}s")
+                continue
+            units = fleet_units(list(survivors) + [pod])
+            for rec in candidates:
+                jid = rec.job.job_id
+                target = _best_survivor(rec, survivors, data_refs, units)
+                if target is None:
+                    raise RuntimeError(
+                        f"drain_pod: job {jid} cannot move to any "
+                        f"survivor (lazy data ref without a resolver, or "
+                        f"no surviving pod can hold it)")
+                # export can race a terminal transition; False just means
+                # there is nothing left to move for this id
+                if not sched.export_job(jid, transfer_dir):
+                    continue
+                try:
+                    target.scheduler.import_job(transfer_dir, jid,
+                                                data_refs=data_refs)
+                except Exception:
+                    # failed hand-off: the job must never be stranded in
+                    # no scheduler — the draining pod re-adopts it
+                    sched.reclaim_export(transfer_dir, jid,
+                                         data_refs=data_refs)
+                    raise
+                moved.append(jid)
+    except BaseException:
+        # aborted drain: the pod returns to service with whatever it holds
+        sched.resume_admission()
+        if had_draining is not None:
+            pod.draining = False
+        raise
 
 
 def steal_pass(pods: Sequence, transfer_dir: str,

@@ -1,0 +1,535 @@
+"""Elastic fleet autoscaling: scale-up/down from load, hysteresis (no
+thrash under an oscillating load trace), scale-down drains that move
+mid-progress jobs bit-identically, fleet-level durable snapshots
+(kill -9 -> restore_fleet rebuilds membership + parked jobs), the
+unlocked-executor-init admission path, and the recon CLI round trip
+with --pods N + --snapshot-dir."""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import phantoms
+from repro.core.algorithms import cgls, ossart
+from repro.core.geometry import ConeGeometry, circular_angles
+from repro.core.splitting import MemoryModel
+from repro.serve import (Autoscaler, AutoscalePolicy, AsyncDriver,
+                         JobStatus, MultiPodDriver, MultiPodScheduler,
+                         Pod, PodSpec, ReconJob, Scheduler, ServeMetrics,
+                         drain_pod, merge_metrics)
+from repro.serve.steal import fleet_units, pod_load
+
+GEO = ConeGeometry.nice(16)
+ANGLES = circular_angles(12)
+PROJ = phantoms.sphere_projection_analytic(GEO, ANGLES)
+
+KIB = 1024
+
+
+def _mem(kib=220, frac=1.0):
+    return MemoryModel(device_bytes=kib * KIB, usable_fraction=frac)
+
+
+def _job(alg="cgls", prio=0, n_iter=2, **kw):
+    return ReconJob(alg, GEO, ANGLES, PROJ, n_iter=n_iter, priority=prio,
+                    **kw)
+
+
+def _pod(name, kib=220, devices=1):
+    return Pod(PodSpec(name, n_devices=devices, memory=_mem(kib)))
+
+
+def _policy(**kw):
+    kw.setdefault("scale_up_backlog_seconds", 0.5)
+    kw.setdefault("scale_down_backlog_seconds", 0.05)
+    kw.setdefault("up_window_seconds", 0.0)
+    kw.setdefault("down_window_seconds", 0.0)
+    kw.setdefault("cooldown_seconds", 0.0)
+    kw.setdefault("min_pods", 1)
+    kw.setdefault("max_pods", 3)
+    return AutoscalePolicy(**kw)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# --------------------------------------------------------------------------
+# policy validation + basic elasticity
+# --------------------------------------------------------------------------
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="band inverted"):
+        AutoscalePolicy(scale_up_backlog_seconds=1.0,
+                        scale_down_backlog_seconds=2.0)
+    with pytest.raises(ValueError, match="min_pods"):
+        AutoscalePolicy(min_pods=3, max_pods=1)
+    with pytest.raises(ValueError, match="at least one PodSpec"):
+        Autoscaler(MultiPodScheduler([_pod("p0")]), templates=[])
+    # device-pinned templates would double-book physical devices when
+    # instantiated repeatedly
+    import jax
+    with pytest.raises(ValueError, match="simulated"):
+        Autoscaler(MultiPodScheduler([_pod("p0")]),
+                   templates=[PodSpec("pinned",
+                                      jax_devices=tuple(jax.devices()[:1]))])
+
+
+def test_autoscaler_grows_and_shrinks_fleet_bit_identically(tmp_path):
+    """Backlog on one seed pod grows the fleet from the template pool;
+    once the work clears the surplus pods are drained + retired; every
+    result matches the monolithic run."""
+    mps = MultiPodScheduler([_pod("seed")],
+                            transfer_dir=str(tmp_path / "xfer"))
+    asc = Autoscaler(mps, [PodSpec("burst", n_devices=1, memory=_mem())],
+                     _policy())
+    jids = [mps.submit(_job(n_iter=4)) for _ in range(6)]
+    mps.run(autoscaler=asc)
+    ups = [e for e in asc.events if e.direction == "up"]
+    downs = [e for e in asc.events if e.direction == "down"]
+    assert ups, "backlog never grew the fleet"
+    assert downs, "idle fleet never shrank"
+    assert len(mps.pods) >= 1 and mps.retired_pods
+    want = np.asarray(cgls(PROJ, GEO, ANGLES, n_iter=4))
+    for j in jids:
+        np.testing.assert_array_equal(mps.result(j), want)
+    s = mps.summary()
+    assert s["scale_up_events"] == len(ups)
+    assert s["scale_down_events"] == len(downs)
+    assert s["pods_online_peak"] >= 2
+    assert s["pod_seconds"] > 0
+    assert s["completed"] == len(jids)      # retired pods' counters kept
+
+
+def test_add_pod_rejects_duplicate_names():
+    mps = MultiPodScheduler([_pod("p0"), _pod("p1")])
+    with pytest.raises(ValueError, match="already used"):
+        mps.add_pod(_pod("p0"))
+    mps.remove_pod("p1")                    # idle: retires fine
+    with pytest.raises(ValueError, match="already used"):
+        mps.add_pod(_pod("p1"))             # retired names stay reserved
+
+
+def test_remove_pod_refuses_nonempty():
+    mps = MultiPodScheduler([_pod("p0"), _pod("p1")])
+    mps.submit(_job(n_iter=2), pod="p0")
+    with pytest.raises(ValueError, match="still holds work"):
+        mps.remove_pod("p0")
+    mps.run()
+
+
+def test_scale_up_for_job_that_fits_no_live_pod(tmp_path):
+    """The fits_nowhere_bytes signal: a submission too big for every
+    live pod asks the autoscaler for a template pod that can hold it,
+    instead of taking the canonical budget failure."""
+    mps = MultiPodScheduler([_pod("small", kib=220)],
+                            transfer_dir=str(tmp_path / "xfer"))
+    asc = Autoscaler(mps, [PodSpec("big", n_devices=1,
+                                   memory=_mem(8 * KIB))],
+                     _policy())
+    jid = mps.submit(_job(n_iter=1, memory_hint_bytes=5000 * KIB))
+    assert mps.owner(jid).name.startswith("big-as")
+    mps.run(autoscaler=asc)
+    assert mps.record(jid).status is JobStatus.COMPLETED
+    # without an autoscaler the same submission fails with the budget
+    solo = MultiPodScheduler([_pod("small", kib=220)])
+    bad = solo.submit(_job(n_iter=1, memory_hint_bytes=5000 * KIB))
+    solo.run(max_rounds=2)
+    assert solo.record(bad).status is JobStatus.FAILED
+
+
+# --------------------------------------------------------------------------
+# hysteresis: an oscillating load trace must not thrash the fleet
+# --------------------------------------------------------------------------
+
+def test_cooldown_bounds_scale_events_under_oscillating_load(tmp_path):
+    """Load flips high/low every 0.5s for 50s; the 10s cooldown bounds
+    the scale events to span/cooldown + 1 instead of one per flip."""
+    clock = FakeClock()
+    mps = MultiPodScheduler([_pod("seed")],
+                            transfer_dir=str(tmp_path / "xfer"))
+    loads = iter([10.0, 0.0] * 100)
+    asc = Autoscaler(mps, [PodSpec("burst", n_devices=1, memory=_mem())],
+                     _policy(cooldown_seconds=10.0, max_pods=4),
+                     clock=clock, load_fn=lambda pods: next(loads))
+    flips = 0
+    while clock.t < 50.0:
+        asc.step()
+        clock.t += 0.5
+        flips += 1
+    assert flips == 100
+    assert len(asc.events) <= 50.0 / 10.0 + 1
+
+
+def test_persistence_windows_suppress_flapping_signal(tmp_path):
+    """With 2s persistence windows, a signal that never stays high or
+    low for 2s produces zero scale events even with no cooldown."""
+    clock = FakeClock()
+    mps = MultiPodScheduler([_pod("seed")],
+                            transfer_dir=str(tmp_path / "xfer"))
+    loads = iter([10.0, 0.0] * 100)
+    asc = Autoscaler(mps, [PodSpec("burst", n_devices=1, memory=_mem())],
+                     _policy(up_window_seconds=2.0, down_window_seconds=2.0,
+                             cooldown_seconds=0.0),
+                     clock=clock, load_fn=lambda pods: next(loads))
+    while clock.t < 50.0:
+        asc.step()
+        clock.t += 0.5
+    assert asc.events == []
+    # and a *persistent* high signal does scale up once the window passes
+    asc2 = Autoscaler(mps, [PodSpec("burst2", n_devices=1, memory=_mem())],
+                      _policy(up_window_seconds=2.0,
+                              down_window_seconds=2.0),
+                      clock=clock, load_fn=lambda pods: 10.0)
+    t0 = clock.t
+    while clock.t < t0 + 1.5:
+        assert asc2.step() is None      # inside the window: no event yet
+        clock.t += 0.5
+    clock.t += 1.0
+    ev = asc2.step()
+    assert ev is not None and ev.direction == "up"
+
+
+# --------------------------------------------------------------------------
+# scale-down drain: preempt-then-export, bit-identical on the survivor
+# --------------------------------------------------------------------------
+
+def test_scale_down_drains_mid_progress_job_bit_identically(tmp_path):
+    """The least-loaded pod holds a job parked mid-progress; scale-down
+    must move it (checkpoint and all) to a survivor, retire the pod, and
+    the job must finish bit-identically to never having been drained."""
+    p0, p1 = _pod("p0", kib=100), _pod("p1", kib=100)
+    mps = MultiPodScheduler([p0, p1], steal=False,
+                            transfer_dir=str(tmp_path / "xfer"))
+    vic = mps.submit(_job("ossart", n_iter=6, params={"subset_size": 4}),
+                     pod="p0")
+    for _ in range(3):
+        p0.scheduler.step_quantum()
+    done_before = mps.record(vic).iterations_done
+    assert done_before >= 1
+    # keep p1 busier than p0 so p0 is the least-loaded victim
+    other = [mps.submit(_job(n_iter=10), pod="p1") for _ in range(2)]
+    p1.scheduler.step_quantum()
+    unit, init = fleet_units([p0, p1])
+    assert pod_load(p0.scheduler, 1, unit=unit, init=init) \
+        < pod_load(p1.scheduler, 1, unit=unit, init=init)
+
+    asc = Autoscaler(mps, [PodSpec("t", n_devices=1, memory=_mem(100))],
+                     _policy(), load_fn=lambda pods: 0.0)   # force "down"
+    ev = asc.step()
+    assert ev is not None and ev.direction == "down" and ev.pod == "p0"
+    assert asc.drained_jobs == [vic]
+    assert [p.name for p in mps.pods] == ["p1"]
+    assert vic in p1.scheduler.records
+    assert mps.record(vic).iterations_done == done_before
+    mps.run()
+    np.testing.assert_array_equal(
+        mps.result(vic),
+        np.asarray(ossart(PROJ, GEO, ANGLES, n_iter=6, subset_size=4)))
+    for j in other:
+        assert mps.record(j).status is JobStatus.COMPLETED
+
+
+def test_scale_down_aborts_when_job_cannot_move(tmp_path):
+    """A lazy-data job with no resolver cannot be exported: the drain
+    must abort cleanly — pod stays, admission resumes, nothing lost."""
+    p0, p1 = _pod("p0", kib=100), _pod("p1", kib=100)
+    mps = MultiPodScheduler([p0, p1], steal=False,
+                            transfer_dir=str(tmp_path / "xfer"))
+    hold = mps.submit(_job(n_iter=2), pod="p0")
+    lazy = mps.submit(ReconJob("cgls", GEO, ANGLES, lambda: PROJ, n_iter=2),
+                      pod="p0")
+    p0.scheduler.admit()
+    # load p1 heavier so the lazy-holding p0 is the scale-down victim
+    for _ in range(3):
+        mps.submit(_job(n_iter=8), pod="p1")
+    asc = Autoscaler(mps, [PodSpec("t", n_devices=1, memory=_mem(100))],
+                     _policy(), load_fn=lambda pods: 0.0)
+    assert asc.step() is None
+    assert asc.aborted_scale_downs == 1
+    assert {p.name for p in mps.pods} == {"p0", "p1"}
+    assert not p0.draining and not p0.scheduler.admission_paused
+    mps.autoscaler = None       # stop retrying the doomed drain
+    mps.run()
+    for jid in (hold, lazy):
+        assert mps.record(jid).status is JobStatus.COMPLETED
+
+
+def test_drain_pod_moves_everything_and_respects_survivor_budget(tmp_path):
+    """drain_pod empties a pod with queued + mid-progress work onto the
+    survivor that can hold each job; a job no survivor can hold aborts
+    with the pod intact."""
+    p0, p1 = _pod("p0", kib=8 * KIB), _pod("p1", kib=8 * KIB)
+    jids = [p0.scheduler.submit(_job(n_iter=3)) for _ in range(3)]
+    p0.scheduler.step_quantum()
+    moved = drain_pod(p0, [p1], str(tmp_path / "xfer"))
+    assert sorted(moved) == sorted(jids)
+    assert p0.scheduler.idle and p0.scheduler.admission_paused
+    p1.scheduler.run()
+    want = np.asarray(cgls(PROJ, GEO, ANGLES, n_iter=3))
+    for j in jids:
+        np.testing.assert_array_equal(p1.scheduler.result(j), want)
+    # survivor too small for the job: abort, victim keeps it
+    big = Pod(PodSpec("big", n_devices=1, memory=_mem(8 * KIB)))
+    tiny = Pod(PodSpec("tiny", n_devices=1, memory=_mem(100)))
+    kept = big.scheduler.submit(_job(n_iter=1,
+                                     memory_hint_bytes=5000 * KIB))
+    with pytest.raises(RuntimeError, match="cannot move"):
+        drain_pod(big, [tiny], str(tmp_path / "xfer2"))
+    assert kept in big.scheduler.records
+    assert not big.scheduler.admission_paused
+    big.scheduler.run()
+    assert big.scheduler.records[kept].status is JobStatus.COMPLETED
+
+
+# --------------------------------------------------------------------------
+# fleet-level durable snapshots: kill -9 -> restore_fleet
+# --------------------------------------------------------------------------
+
+def test_restore_fleet_requires_manifest(tmp_path):
+    with pytest.raises(FileNotFoundError, match="fleet.json"):
+        MultiPodScheduler.restore_fleet(str(tmp_path))
+
+
+def test_kill9_then_restore_fleet_rebuilds_membership_and_jobs(tmp_path):
+    """Kill -9 semantics: the process dies with no drain — all that
+    survives is the manifest + the periodic snapshots.  restore_fleet
+    must rebuild the autoscaled membership (seed + added pod) and every
+    job, and the jobs must complete bit-identically."""
+    root = str(tmp_path / "fleet")
+    mps = MultiPodScheduler([_pod("seed")], snapshot_root=root,
+                            transfer_dir=str(tmp_path / "xfer"))
+    asc = Autoscaler(mps, [PodSpec("burst", n_devices=1, memory=_mem())],
+                     _policy(scale_down_backlog_seconds=1e-9))
+    jids = [mps.submit(_job(n_iter=5)) for _ in range(4)]
+    assert asc.step().direction == "up"      # autoscaled membership
+    assert mps.snapshot_fleet() == len(jids)
+    mps.autoscaler = None                    # freeze membership for the
+    mps.run(max_rounds=2)                    # kill window; real progress
+    mps.snapshot_fleet()                     # ...parked state persisted
+    mps.run(max_rounds=1)                    # progress PAST the snapshot
+    del mps                                  # kill -9: nothing drained
+
+    restored = MultiPodScheduler.restore_fleet(root)
+    assert {p.name for p in restored.pods} == {"seed", "burst-as0"}
+    assert restored.snapshot_root == root
+    assert set(restored.restored_jobs) == set(jids)
+    restored.run()
+    want = np.asarray(cgls(PROJ, GEO, ANGLES, n_iter=5))
+    for j in jids:
+        assert restored.record(j).status is JobStatus.COMPLETED
+        np.testing.assert_array_equal(restored.result(j), want)
+
+
+def test_drain_fleet_restore_roundtrip_threaded(tmp_path):
+    """SIGTERM path under the threaded driver: drain_fleet parks +
+    persists everything; restore_fleet + MultiPodDriver completes
+    bit-identically."""
+    root = str(tmp_path / "fleet")
+    mps = MultiPodScheduler([_pod("p0"), _pod("p1")], snapshot_root=root,
+                            transfer_dir=str(tmp_path / "xfer"))
+    jids = [mps.submit(_job(n_iter=5)) for _ in range(3)]
+    drv = MultiPodDriver(mps)
+    drv.start()
+
+    def progress():
+        # a job mid-steal is briefly in no scheduler: skip it this poll
+        best = 0
+        for j in jids:
+            try:
+                best = max(best, mps.record(j).iterations_done)
+            except KeyError:
+                pass
+        return best
+
+    deadline = time.monotonic() + 120
+    while progress() < 1 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    drv.stop()
+    done_before = {j: np.asarray(mps.result(j)) for j in jids
+                   if mps.record(j).status is JobStatus.COMPLETED}
+    parked = mps.drain_fleet()
+    assert parked + len(done_before) >= 1
+
+    restored = MultiPodScheduler.restore_fleet(root)
+    assert {p.name for p in restored.pods} == {"p0", "p1"}
+    # completed jobs are terminal tombstones on disk, never resurrected
+    assert set(restored.restored_jobs) == set(jids) - set(done_before)
+    MultiPodDriver(restored).run(timeout=300)
+    want = np.asarray(cgls(PROJ, GEO, ANGLES, n_iter=5))
+    for j in jids:
+        got = (done_before[j] if j in done_before
+               else np.asarray(restored.result(j)))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_scale_up_recheck_cap_under_fleet_lock(tmp_path):
+    """_scale_up re-validates max_pods under the fleet lock: two racing
+    scale-up paths (control thread + submit-time fits-nowhere hook) must
+    not overshoot the cap."""
+    mps = MultiPodScheduler([_pod("p0"), _pod("p1")],
+                            transfer_dir=str(tmp_path / "xfer"))
+    asc = Autoscaler(mps, [PodSpec("t", n_devices=1, memory=_mem())],
+                     _policy(max_pods=2))
+    assert asc._scale_up(0.0, 1.0) is None        # already at the cap
+    assert len(mps.pods) == 2 and asc.events == []
+
+
+def test_restore_fleet_twice_keeps_homes(tmp_path):
+    """The manifest's homes map survives a restore (the ctor's early
+    manifest rewrite must not wipe it), so home() still answers after a
+    second crash/restore cycle."""
+    root = str(tmp_path / "fleet")
+    mps = MultiPodScheduler([_pod("p0"), _pod("p1")], snapshot_root=root,
+                            transfer_dir=str(tmp_path / "xfer"))
+    jid = mps.submit(_job(n_iter=4))
+    first_home = mps.home(jid)
+    mps.run(max_rounds=1)
+    mps.drain_fleet()
+
+    r1 = MultiPodScheduler.restore_fleet(root)
+    assert r1.home(jid) == first_home
+    del r1                                         # second kill, no drain
+    r2 = MultiPodScheduler.restore_fleet(root)
+    assert r2.home(jid) == first_home
+    r2.run()
+    assert r2.record(jid).status is JobStatus.COMPLETED
+
+
+# --------------------------------------------------------------------------
+# unlocked executor init: a slow compile must not stall other slots
+# --------------------------------------------------------------------------
+
+def test_slow_init_does_not_stall_running_jobs(monkeypatch, tmp_path):
+    """Regression for init-inside-the-lock: while one job's executor
+    init (compile) sleeps, an already-running job on another slot must
+    keep stepping to completion instead of blocking on the scheduler
+    lock for the whole compile."""
+    from repro.serve.executor import JobExecutor
+    warm = Scheduler(n_devices=1, memory=_mem())   # compile the operator
+    warm.submit(_job(n_iter=1))
+    warm.run()
+
+    orig = JobExecutor.start
+    slow_ids = set()
+
+    def maybe_slow_start(self, checkpoint=None):
+        if self.job.job_id in slow_ids:
+            time.sleep(2.0)
+        return orig(self, checkpoint=checkpoint)
+
+    monkeypatch.setattr(JobExecutor, "start", maybe_slow_start)
+    sched = Scheduler(n_devices=2, memory=_mem())
+    fast = sched.submit(_job(prio=0, n_iter=4))
+    driver = AsyncDriver(sched)
+    driver.start()
+    deadline = time.monotonic() + 60
+    while (sched.records[fast].status is not JobStatus.RUNNING
+           and time.monotonic() < deadline):
+        time.sleep(0.005)
+    t0 = time.monotonic()
+    slow = _job(prio=5, n_iter=1)
+    slow_ids.add(slow.job_id)
+    sched.submit(slow)                    # init sleeps 2s off-lock
+    assert driver.wait(timeout=120)
+    driver.stop()
+    fast_rec, slow_rec = sched.records[fast], sched.records[slow.job_id]
+    assert fast_rec.status is JobStatus.COMPLETED
+    assert slow_rec.status is JobStatus.COMPLETED
+    # the fast job finished while the slow init was still sleeping
+    assert fast_rec.end_time - t0 < 1.5, \
+        "running job stalled behind a slow executor init"
+
+
+def test_idle_accounts_for_inflight_admissions(monkeypatch):
+    """A job mid-init is in neither the queue nor `running`; idle must
+    still be False or a fleet driver would stop with the job lost."""
+    from repro.serve.executor import JobExecutor
+    orig = JobExecutor.start
+    entered = []
+
+    def slow_start(self, checkpoint=None):
+        entered.append(time.monotonic())
+        time.sleep(0.5)
+        return orig(self, checkpoint=checkpoint)
+
+    monkeypatch.setattr(JobExecutor, "start", slow_start)
+    sched = Scheduler(n_devices=1, memory=_mem())
+    jid = sched.submit(_job(n_iter=1))
+    import threading
+    t = threading.Thread(target=sched.admit)
+    t.start()
+    while not entered:
+        time.sleep(0.005)
+    assert not sched.idle                 # mid-init: not done
+    t.join()
+    sched.run()
+    assert sched.records[jid].status is JobStatus.COMPLETED
+
+
+# --------------------------------------------------------------------------
+# fleet gauges in merge_metrics
+# --------------------------------------------------------------------------
+
+def test_merge_metrics_preserves_fleet_gauges():
+    a = ServeMetrics(scale_up_events=2, scale_down_events=1,
+                     pod_seconds=10.0, pods_online=[(1.0, 1), (3.0, 2)])
+    b = ServeMetrics(scale_up_events=1, pod_seconds=5.0,
+                     pods_online=[(2.0, 3)])
+    m = merge_metrics([a, b])
+    assert m.scale_up_events == 3 and m.scale_down_events == 1
+    assert m.pod_seconds == 15.0
+    assert m.pods_online == [(1.0, 1), (2.0, 3), (3.0, 2)]   # chronological
+    s = m.summary()
+    assert s["pods_online_peak"] == 3
+    assert s["pod_seconds"] == 15.0
+
+
+# --------------------------------------------------------------------------
+# recon CLI: --pods N with --snapshot-dir (round trip)
+# --------------------------------------------------------------------------
+
+def test_recon_cli_pods_with_snapshot_dir_completes(tmp_path):
+    """The former ValueError path: --pods 2 + --snapshot-dir must now
+    run end to end and leave a fleet manifest behind."""
+    from repro.launch.recon import reconstruct
+    snap = str(tmp_path / "snap")
+    rec, rel = reconstruct("cgls", n=16, n_angles=12, iters=2, pods=2,
+                           device_bytes=220 * KIB, verbose=False,
+                           snapshot_dir=snap)
+    assert rec is not None and rel < 1.0
+    assert os.path.isfile(os.path.join(snap, "fleet.json"))
+
+
+def test_recon_cli_resumes_interrupted_fleet_bit_identically(tmp_path):
+    """Round trip: a fleet interrupted mid-run (drained durably) is
+    restored by re-running the CLI entry point with the same
+    --snapshot-dir, and the finished volume is bit-identical to an
+    uninterrupted reconstruction of the same dataset."""
+    from repro.data import make_ct_dataset
+    from repro.launch.recon import reconstruct
+    snap = str(tmp_path / "snap")
+    geo = ConeGeometry.nice(16)
+    vol, angles, proj = make_ct_dataset(geo, 12)
+    mem = MemoryModel(device_bytes=220 * KIB)
+    mps = MultiPodScheduler(
+        [Pod(PodSpec(f"pod{i}", n_devices=1, memory=mem))
+         for i in range(2)],
+        snapshot_root=snap, transfer_dir=str(tmp_path / "xfer"))
+    jid = mps.submit(ReconJob("cgls", geo, angles, proj, n_iter=5))
+    mps.run(max_rounds=2)                    # partial progress
+    assert 0 < mps.record(jid).iterations_done < 5
+    mps.drain_fleet()                        # the SIGTERM park
+    del mps
+
+    rec, _ = reconstruct("cgls", n=16, n_angles=12, iters=5, pods=2,
+                         device_bytes=220 * KIB, verbose=False,
+                         snapshot_dir=snap)
+    want = np.asarray(cgls(proj, geo, angles, n_iter=5))
+    np.testing.assert_array_equal(np.asarray(rec), want)

@@ -1,0 +1,351 @@
+"""Kernel-backend registry: named projector implementations, one dispatch.
+
+The paper's modularity claim cuts both ways: the splitting plans
+(:mod:`repro.core.plan`) are independent of the algorithms *and* of the
+kernels that execute them.  This module is the kernel half of that
+contract — a registry of named backends, each providing the same small
+slab-operator surface:
+
+* ``"ref"``    — the pure-JAX projectors in :mod:`repro.core.projector`
+  (obviously correct, runs everywhere; the parity oracle).
+* ``"pallas"`` — the Pallas TPU kernels in :mod:`repro.kernels`
+  (``fp_ray``, ``bp_voxel``): Mosaic-compiled on real TPU backends,
+  interpret mode elsewhere.
+* ``"auto"``   — resolves per JAX backend: ``"pallas"`` on TPU hosts,
+  ``"ref"`` otherwise.
+
+Every executor (``CTOperator`` plain mode, the out-of-core streaming
+loops, the shard_map distributed operators) obtains its kernels from
+here, so selecting ``backend="pallas"`` routes the *same* execution plan
+onto the optimized kernels — tomoCAM's observation that the plan/kernel
+split is what makes drop-in kernel swaps possible.
+
+Cached-jit dispatch
+-------------------
+Backends hand out **jit-compiled callables from a process-wide dispatch
+table keyed by (backend, kind, geometry, static plan args)**.  The
+returned callables take only traced arguments (arrays, angles, the slab
+origin ``z0``), so repeated calls — every slab of every iteration of
+every job — reuse one compiled executable instead of retracing
+(:func:`dispatch_cache_info` exposes the hit counters the regression
+tests assert on).  Exact-adjoint ("matched") operators are always built
+from the ref projector's ``jax.vjp`` — ``pallas_call`` defines no
+transpose rule, and CGLS/FISTA's convergence guarantees need a true
+matched pair — while forward and voxel-driven kernels follow the
+selected backend.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import projector as proj_mod
+from .geometry import ConeGeometry
+
+
+# --------------------------------------------------------------------------
+# cached-jit dispatch table
+# --------------------------------------------------------------------------
+
+class _DispatchTable:
+    """Process-wide (key -> compiled callable) map with hit/miss stats.
+
+    Builders run outside the lock (they only trace lazily anyway); a
+    racing double-build keeps the first entry, so callers always share
+    one callable (and its jit cache) per key.
+    """
+
+    def __init__(self):
+        self._fns: Dict[tuple, Callable] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: tuple, build: Callable[[], Callable]) -> Callable:
+        with self._lock:
+            fn = self._fns.get(key)
+            if fn is not None:
+                self.hits += 1
+                return fn
+            self.misses += 1
+        fn = build()
+        with self._lock:
+            return self._fns.setdefault(key, fn)
+
+    def info(self) -> Dict[str, int]:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "currsize": len(self._fns)}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._fns.clear()
+            self.hits = self.misses = 0
+
+
+_TABLE = _DispatchTable()
+
+
+def dispatch_cache_info() -> Dict[str, int]:
+    """Hit/miss/size counters of the shared dispatch table."""
+    return _TABLE.info()
+
+
+def clear_dispatch_cache() -> None:
+    """Drop every cached callable (frees their compiled executables)."""
+    _TABLE.clear()
+
+
+def _divisor_at_most(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= ``cap`` (>= 1): the kernels'
+    block sizes must tile the axis exactly, odd shapes included."""
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+# --------------------------------------------------------------------------
+# backend interface + implementations
+# --------------------------------------------------------------------------
+
+class KernelBackend:
+    """One named kernel implementation.
+
+    The contract is three slab operators (all returned callables are
+    jit-compiled, shared through the dispatch table, and close over the
+    static plan args only):
+
+    * ``fp(geo, xdom=...)``              -> ``f(slab, angles, z0) -> proj``
+      partial forward projection of the z planes ``[z0, z0+len(slab))``
+      for a single-dominance angle set;
+    * ``bp(geo, planes=..., weight=...)``-> ``f(proj, angles, z0) -> slab``
+      voxel-driven backprojection into an axial slab (weights
+      ``fdk`` / ``pmatched`` / ``none``);
+    * ``bp_matched(geo, planes=..., xdom=...)`` — the *exact* adjoint of
+      the slab forward projection (``jax.vjp``; always ref-built).
+
+    plus two full-volume conveniences for mixed-dominance angle sets
+    (``fp_mixed`` / ``at_matched_mixed``), built on the slab operators.
+    """
+
+    name = "?"
+
+    # -- slab operators ------------------------------------------------------
+
+    def fp(self, geo: ConeGeometry, *, xdom: bool) -> Callable:
+        raise NotImplementedError
+
+    def bp(self, geo: ConeGeometry, *, planes: int,
+           weight: str) -> Callable:
+        raise NotImplementedError
+
+    def bp_matched(self, geo: ConeGeometry, *, planes: int,
+                   xdom: bool) -> Callable:
+        """Exact slab adjoint: vjp of the slab FP.  Ref-built on every
+        backend (no transpose rule exists for ``pallas_call``), keeping
+        <Ax, y> == <x, At y> to float precision for CGLS/FISTA."""
+        def build():
+            @jax.jit
+            def f(proj_chunk, angles, z0):
+                def fwd(slab):
+                    return proj_mod.forward_project_joseph(
+                        slab, geo, angles, xdom=xdom, z0=z0)
+                zeros = jnp.zeros((planes,) + tuple(geo.n_voxel[1:]),
+                                  jnp.float32)
+                _, vjp = jax.vjp(fwd, zeros)
+                return vjp(proj_chunk)[0]
+            return f
+        return _TABLE.get(("ref", "bp_matched", geo, planes, xdom), build)
+
+    # -- full-volume mixed-dominance conveniences ----------------------------
+
+    def fp_mixed(self, geo: ConeGeometry, mask: np.ndarray) -> Callable:
+        """Full forward projection ``f(vol, angles) -> proj`` for a static
+        dominance ``mask`` (x-dominant entries True): the angle set is
+        split per dominance, each subset runs the specialised slab FP,
+        and the results scatter back — TIGRE's independent per-GPU angle
+        queues, expressed as one compiled callable per mask."""
+        mask = np.asarray(mask, bool)
+        key = (self.name, "fp_mixed", geo, mask.tobytes())
+
+        def build():
+            idx_x = np.nonzero(mask)[0]
+            idx_y = np.nonzero(~mask)[0]
+            fpx = self.fp(geo, xdom=True) if idx_x.size else None
+            fpy = self.fp(geo, xdom=False) if idx_y.size else None
+            nv, nu = geo.n_detector
+
+            @jax.jit
+            def f(vol, angles):
+                out = jnp.zeros((len(mask), nv, nu), jnp.float32)
+                if fpx is not None:
+                    out = out.at[idx_x].set(fpx(vol, angles[idx_x], 0))
+                if fpy is not None:
+                    out = out.at[idx_y].set(fpy(vol, angles[idx_y], 0))
+                return out
+            return f
+        return _TABLE.get(key, build)
+
+    def at_matched_mixed(self, geo: ConeGeometry,
+                         mask: np.ndarray) -> Callable:
+        """Exact adjoint ``f(proj, angles) -> vol`` of the mixed-dominance
+        full FP (ref-built vjp; see :meth:`bp_matched`)."""
+        mask = np.asarray(mask, bool)
+        key = ("ref", "at_matched_mixed", geo, mask.tobytes())
+
+        def build():
+            ref_fp = get_backend("ref").fp_mixed(geo, mask)
+
+            @jax.jit
+            def f(proj, angles):
+                zeros = jnp.zeros(geo.n_voxel, jnp.float32)
+                _, vjp = jax.vjp(lambda v: ref_fp(v, angles), zeros)
+                return vjp(proj)[0]
+            return f
+        return _TABLE.get(key, build)
+
+
+class RefBackend(KernelBackend):
+    """Pure-JAX projectors (:mod:`repro.core.projector`)."""
+
+    name = "ref"
+
+    def fp(self, geo: ConeGeometry, *, xdom: bool) -> Callable:
+        def build():
+            @jax.jit
+            def f(slab, angles, z0):
+                return proj_mod.forward_project_joseph(
+                    slab, geo, angles, xdom=xdom, z0=z0)
+            return f
+        return _TABLE.get(("ref", "fp", geo, xdom), build)
+
+    def bp(self, geo: ConeGeometry, *, planes: int,
+           weight: str) -> Callable:
+        def build():
+            @jax.jit
+            def f(proj, angles, z0):
+                return proj_mod.backproject_voxel(
+                    proj, geo, angles, weight=weight, z_start=z0,
+                    z_planes=planes)
+            return f
+        return _TABLE.get(("ref", "bp", geo, planes, weight), build)
+
+
+class PallasBackend(KernelBackend):
+    """Pallas TPU kernels (:mod:`repro.kernels.fp_ray` /
+    :mod:`repro.kernels.bp_voxel`).
+
+    ``interpret`` defaults to auto-detection: Mosaic compiles the kernels
+    on real TPU backends, interpret mode validates them everywhere else.
+    Block sizes adapt to the geometry (largest divisor of the tiled axis
+    <= the preferred block), so odd volume shapes stay runnable.
+    """
+
+    name = "pallas"
+
+    def __init__(self, interpret: Optional[bool] = None,
+                 slab_planes: int = 16, z_block: int = 16,
+                 angle_chunk: int = 8):
+        self._interpret = interpret
+        self.slab_planes = slab_planes
+        self.z_block = z_block
+        self.angle_chunk = angle_chunk
+
+    @property
+    def interpret(self) -> bool:
+        if self._interpret is not None:
+            return self._interpret
+        return jax.default_backend() != "tpu"
+
+    def fp(self, geo: ConeGeometry, *, xdom: bool) -> Callable:
+        from repro.kernels.fp_ray import fp_ray_pallas
+        interpret = self.interpret
+        nz, ny, nx = geo.n_voxel
+        sp = _divisor_at_most(nx, self.slab_planes)
+        key = ("pallas", "fp", geo, xdom, sp, interpret)
+
+        def build():
+            if not xdom:
+                # same transpose trick (and the same preconditions) as the
+                # ref Joseph projector: rotate the scene -90 deg so the
+                # y-dominant set becomes x-dominant
+                if nx != ny or abs(geo.d_voxel[1] - geo.d_voxel[2]) > 1e-12:
+                    raise ValueError(
+                        "y-dominant transpose trick needs square xy grid")
+                if any(abs(o) > 0 for o in geo.off_origin[1:]):
+                    raise ValueError(
+                        "xy origin offsets unsupported with rotation trick")
+
+            @jax.jit
+            def f(slab, angles, z0):
+                if not xdom:
+                    slab = proj_mod._rotate_vol_90(slab)
+                    angles = angles - jnp.pi / 2.0
+                return fp_ray_pallas(slab, geo, angles, slab_planes=sp,
+                                     interpret=interpret, z0=z0)
+            return f
+        return _TABLE.get(key, build)
+
+    def bp(self, geo: ConeGeometry, *, planes: int,
+           weight: str) -> Callable:
+        from repro.kernels.bp_voxel import bp_voxel_pallas
+        interpret = self.interpret
+        zb = _divisor_at_most(planes, self.z_block)
+        pref_ca = self.angle_chunk
+        key = ("pallas", "bp", geo, planes, weight, zb, interpret)
+
+        def build():
+            @jax.jit
+            def f(proj, angles, z0):
+                ca = _divisor_at_most(angles.shape[0], pref_ca)
+                return bp_voxel_pallas(proj, geo, angles, z_block=zb,
+                                       angle_chunk=ca, weight=weight,
+                                       interpret=interpret, z_start=z0,
+                                       z_planes=planes)
+            return f
+        return _TABLE.get(key, build)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, KernelBackend] = {}
+
+
+def register_backend(backend: KernelBackend) -> KernelBackend:
+    """Add a named backend (replacing any previous holder of the name)."""
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+register_backend(RefBackend())
+register_backend(PallasBackend())
+
+
+def available_backends() -> tuple:
+    """Registered backend names plus the ``"auto"`` alias."""
+    return tuple(sorted(_REGISTRY)) + ("auto",)
+
+
+def resolve(name: Optional[str]) -> str:
+    """Canonical backend name: ``None`` / ``"auto"`` pick per JAX backend
+    (pallas on TPU hosts, ref elsewhere); unknown names raise."""
+    name = name or "auto"
+    if name == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown kernel backend {name!r} "
+                         f"(have {available_backends()})")
+    return name
+
+
+def get_backend(name: Optional[str] = None) -> KernelBackend:
+    """Backend instance for ``name`` (default: auto-resolve)."""
+    return _REGISTRY[resolve(name)]

@@ -66,24 +66,57 @@ def _fp_local(vol_slab, angles_local, geo: ConeGeometry, z0):
     return jax.lax.map(one, angles_local)
 
 
+def _fp_local_fn(geo: ConeGeometry, backend: Optional[str]):
+    """Local slab-FP for an arbitrary-dominance angle shard, on the
+    selected kernel backend.
+
+    The dominant axis is a *static* host decision in the plain/stream
+    paths, but a shard_map angle shard may mix dominances, and the
+    Pallas FP kernel is single-dominance.  The ref backend keeps the
+    per-angle ``lax.cond`` (one projector runs per angle); other
+    backends evaluate both dominance variants for the shard and select
+    per angle — 2x local FP compute, traded for running the optimized
+    kernel inside the sharded path (the BP side has no such cost: the
+    voxel-driven kernel is dominance-free).
+    """
+    from .backend import get_backend, resolve
+    if resolve(backend) == "ref":
+        return lambda vol_slab, angles_local, z0: _fp_local(
+            vol_slab, angles_local, geo, z0)
+    bk = get_backend(backend)
+    fpx = bk.fp(geo, xdom=True)
+    fpy = bk.fp(geo, xdom=False)
+
+    def f(vol_slab, angles_local, z0):
+        px = fpx(vol_slab, angles_local, z0)
+        py = fpy(vol_slab, angles_local, z0)
+        xdom = jnp.abs(jnp.cos(angles_local)) >= jnp.abs(jnp.sin(angles_local))
+        return jnp.where(xdom[:, None, None], px, py)
+    return f
+
+
 def dist_forward_project(mesh: Mesh, geo: ConeGeometry,
                          data_axis: str = "data", model_axis: str = "model",
-                         reduce: str = "psum"):
+                         reduce: str = "psum",
+                         backend: Optional[str] = None):
     """Build a jitted sharded FP: ``f(vol, angles) -> proj``.
 
     ``vol`` sharded ``P(model, None, None)`` (z slabs); ``angles`` sharded
     ``P(data)``; output sharded ``P(data, None, None)``.  ``reduce`` selects
     the cross-slab reduction schedule: ``"psum"`` or ``"ring"``.
+    ``backend`` selects the per-shard slab kernels (see
+    :mod:`repro.core.backend` and :func:`_fp_local_fn`).
     """
     n_model = mesh.shape[model_axis]
     nz = geo.n_voxel[0]
     if nz % n_model:
         raise ValueError(f"Nz={nz} not divisible by model axis {n_model}")
     planes = nz // n_model
+    fp_local = _fp_local_fn(geo, backend)
 
     def body(vol_slab, angles_local):
         z0 = jax.lax.axis_index(model_axis) * planes
-        part = _fp_local(vol_slab, angles_local, geo, z0)
+        part = fp_local(vol_slab, angles_local, z0)
         if reduce == "psum":
             return jax.lax.psum(part, model_axis)
         # ring reduce: n-1 hops of (shift, add); result replicated on axis.
@@ -103,23 +136,27 @@ def dist_forward_project(mesh: Mesh, geo: ConeGeometry,
 
 
 def dist_backproject(mesh: Mesh, geo: ConeGeometry, weight: str = "fdk",
-                     data_axis: str = "data", model_axis: str = "model"):
+                     data_axis: str = "data", model_axis: str = "model",
+                     backend: Optional[str] = None):
     """Build a jitted sharded BP: ``g(proj, angles) -> vol``.
 
     ``proj``/``angles`` sharded over ``data``; output volume z-sharded over
     ``model`` (each device updates its own slab from its angle subset, then
     the partial updates are summed over ``data`` -- additive in angles).
+    ``backend`` selects the slab kernel (the voxel-driven BP is
+    dominance-free, so the Pallas kernel drops straight in).
     """
+    from .backend import get_backend
     n_model = mesh.shape[model_axis]
     nz = geo.n_voxel[0]
     if nz % n_model:
         raise ValueError(f"Nz={nz} not divisible by model axis {n_model}")
     planes = nz // n_model
+    bp = get_backend(backend).bp(geo, planes=planes, weight=weight)
 
     def body(proj_local, angles_local):
         z0 = jax.lax.axis_index(model_axis) * planes
-        slab = backproject_voxel(proj_local, geo, angles_local, weight=weight,
-                                 z_start=z0, z_planes=planes)
+        slab = bp(proj_local, angles_local, z0)
         return jax.lax.psum(slab, data_axis)
 
     fn = shard_map(

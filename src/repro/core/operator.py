@@ -1,36 +1,46 @@
-"""Unified CT operator: one object, three execution backends.
+"""Unified CT operator: one object, three execution modes, any kernel backend.
 
 The paper's point is that the *same* algorithms run regardless of how the
 operators are executed ("TIGRE's architecture is modular, thus all of the
 GPU code is independent from the algorithm that uses it").  ``CTOperator``
-exposes ``A`` (forward) and ``At`` (back) and hides the backend:
+exposes ``A`` (forward) and ``At`` (back) and hides the execution:
 
 * ``mode="plain"``   -- monolithic jitted operators (volume fits on device).
 * ``mode="stream"``  -- the paper's out-of-core double-buffered executor
                          (host-resident arrays, slab streaming).
 * ``mode="dist"``    -- shard_map over a device mesh (angles x z-slabs).
 
-All three produce identical results (tests/test_splitting.py,
-tests/test_distributed.py); algorithms in ``repro.core.algorithms`` are
-written against this interface only.
+All three are built from one memoized :class:`~repro.core.plan.ExecutionPlan`
+(``self.plan``) and draw their kernels from the backend registry
+(:mod:`repro.core.backend`): ``backend="ref"`` runs the pure-JAX
+projectors, ``backend="pallas"`` the Pallas TPU kernels, ``"auto"``
+(default) picks per JAX backend.  The plan fixes the slab/chunk/device
+structure; the backend fixes the kernel that executes each piece — either
+can change without touching the other (or the algorithms).
+
+All modes and backends produce matching results (tests/test_splitting.py,
+tests/test_distributed.py, tests/test_backend.py); algorithms in
+``repro.core.algorithms`` are written against this interface only.
+Exact-adjoint ("matched") weighting always uses the ref projector's vjp
+pair — see :mod:`repro.core.backend`.
 """
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .backend import get_backend, resolve as resolve_backend
 from .geometry import ConeGeometry, dominant_axis_mask
-from . import projector as proj_mod
-from .splitting import MemoryModel, plan_backward, plan_forward
+from .plan import ExecutionPlan, plan as plan_execution
+from .splitting import MemoryModel
 
 
 class CTOperator:
-    """``A`` / ``At`` with selectable execution backend.
+    """``A`` / ``At`` with selectable execution mode and kernel backend.
 
     Parameters
     ----------
@@ -40,12 +50,17 @@ class CTOperator:
         vjp adjoint; "fdk"/"pmatched"/"none" use the voxel-driven kernel).
     mesh : required for mode="dist".
     memory : memory model for mode="stream" (defaults to an 11 GiB device).
+    backend : kernel backend name ("ref" | "pallas" | "auto"/None).
+    plan : pre-computed :class:`~repro.core.plan.ExecutionPlan`; derived
+        (memoized) from the other arguments when omitted.
     """
 
     def __init__(self, geo: ConeGeometry, angles: np.ndarray,
                  mode: str = "plain", bp_weight: str = "matched",
                  mesh=None, memory: Optional[MemoryModel] = None,
-                 devices: Optional[Sequence] = None):
+                 devices: Optional[Sequence] = None,
+                 backend: Optional[str] = None,
+                 plan: Optional[ExecutionPlan] = None):
         self.geo = geo
         self.angles_np = np.asarray(angles, np.float32)
         self.angles = jnp.asarray(self.angles_np)
@@ -54,49 +69,56 @@ class CTOperator:
         self.mesh = mesh
         self.devices = devices
         self.memory = memory or MemoryModel()
+        self.backend_name = resolve_backend(backend)
+        self._backend = get_backend(self.backend_name)
         self._xdom = dominant_axis_mask(self.angles_np)
 
-        if mode == "plain":
-            self._a_cache = {}
-            self._at_voxel = jax.jit(partial(
-                proj_mod.backproject_voxel, geo=geo), static_argnames=("weight",))
-        elif mode == "dist":
-            if mesh is None:
-                raise ValueError("mode='dist' needs a mesh")
+        if mode not in ("plain", "stream", "dist"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if mode == "dist" and mesh is None:
+            raise ValueError("mode='dist' needs a mesh")
+
+        # one plan drives every mode: the stream executors iterate its
+        # slab/chunk schedule verbatim, plain mode is its n_slabs == 1
+        # fast path, and dist mode partitions by the mesh (the plan still
+        # carries the footprint/pass model the serving layer prices with)
+        n_dev = len(devices) if (mode == "stream" and devices) else 1
+        self.plan = plan if plan is not None else \
+            plan_execution(geo, len(self.angles_np), n_dev, self.memory)
+
+        if mode == "dist":
             from .distributed import (dist_backproject,
                                       dist_backproject_matched,
                                       dist_forward_project)
-            self._a = dist_forward_project(mesh, geo)
-            self._at_fdk = dist_backproject(mesh, geo, weight="fdk")
-            self._at_none = dist_backproject(mesh, geo, weight="none")
-            self._at_pm = dist_backproject(mesh, geo, weight="pmatched")
+            self._a = dist_forward_project(mesh, geo,
+                                           backend=self.backend_name)
+            self._at_fdk = dist_backproject(mesh, geo, weight="fdk",
+                                            backend=self.backend_name)
+            self._at_none = dist_backproject(mesh, geo, weight="none",
+                                             backend=self.backend_name)
+            self._at_pm = dist_backproject(mesh, geo, weight="pmatched",
+                                           backend=self.backend_name)
             self._at_matched = dist_backproject_matched(mesh, geo)
             self._data_axis_size = mesh.shape["data"]
         elif mode == "stream":
-            n_dev = len(devices) if devices else 1
-            self.plan_f = plan_forward(geo, len(self.angles_np), n_dev,
-                                       self.memory)
-            self.plan_b = plan_backward(geo, len(self.angles_np), n_dev,
-                                        self.memory)
-        else:
-            raise ValueError(f"unknown mode {mode!r}")
+            # kept as attributes: the executors (and older callers) read
+            # the per-operator schedules straight off the shared plan
+            self.plan_f = self.plan.forward
+            self.plan_b = self.plan.backward
 
     def _plain_fp(self, angles_np: np.ndarray):
-        """jitted forward for a concrete angle subset (cached per mask)."""
-        mask = dominant_axis_mask(angles_np)
-        key = (len(angles_np), mask.tobytes())
-        if key not in self._a_cache:
-            self._a_cache[key] = jax.jit(
-                lambda v, a, m=mask: proj_mod.forward_project(v, self.geo, a, m))
-        return self._a_cache[key]
+        """Compiled forward for a concrete angle subset: the backend's
+        mixed-dominance dispatch, cached process-wide per (geo, mask)."""
+        return self._backend.fp_mixed(self.geo, dominant_axis_mask(angles_np))
 
     # ---- forward ----------------------------------------------------------
     def A(self, vol, angles=None):
         if self.mode == "stream":
             a = self.angles_np if angles is None else np.asarray(angles)
             from .streaming import stream_forward
-            return stream_forward(np.asarray(vol), self.geo, a, self.plan_f,
-                                  devices=self.devices)
+            return stream_forward(np.asarray(vol), self.geo, a, self.plan,
+                                  devices=self.devices,
+                                  backend=self.backend_name)
         if self.mode == "dist":
             from .distributed import pad_angles
             angles_np = self.angles_np if angles is None else \
@@ -120,8 +142,9 @@ class CTOperator:
             # "matched" streams the exact per-slab vjp adjoint (CGLS keeps
             # its convergence guarantees out-of-core)
             return stream_backward(np.asarray(proj), self.geo,
-                                   np.asarray(angles), self.plan_b,
-                                   weight=weight, devices=self.devices)
+                                   np.asarray(angles), self.plan,
+                                   weight=weight, devices=self.devices,
+                                   backend=self.backend_name)
         if self.mode == "dist":
             from .distributed import pad_angles
             angles_np = np.asarray(angles, np.float32)
@@ -142,23 +165,15 @@ class CTOperator:
             if weight == "matched":
                 return self._at_matched(proj, angles)
             return self._at_pm(proj, angles)
+        angles_np = np.asarray(angles)
         if weight == "matched":
-            # exact adjoint via vjp of the jitted forward
-            angles_np = np.asarray(angles)
-            key = ("at", len(angles_np),
-                   dominant_axis_mask(angles_np).tobytes())
-            if key not in self._a_cache:
-                fp = self._plain_fp(angles_np)
-
-                def at_fn(p, a):
-                    _, vjp = jax.vjp(
-                        lambda v: fp(v, a),
-                        jnp.zeros(self.geo.n_voxel, jnp.float32))
-                    return vjp(p)[0]
-
-                self._a_cache[key] = jax.jit(at_fn)
-            return self._a_cache[key](proj, jnp.asarray(angles_np))
-        return self._at_voxel(proj, angles=angles, weight=weight)
+            # exact adjoint via vjp of the compiled mixed-dominance forward
+            at = self._backend.at_matched_mixed(
+                self.geo, dominant_axis_mask(angles_np))
+            return at(proj, jnp.asarray(angles_np))
+        bp = self._backend.bp(self.geo, planes=self.geo.n_voxel[0],
+                              weight=weight)
+        return bp(proj, jnp.asarray(angles_np), 0)
 
     # ---- spectral norm estimate (power iterations) -------------------------
     def norm_squared_est(self, n_iter: int = 8, seed: int = 0) -> float:

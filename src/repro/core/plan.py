@@ -1,0 +1,184 @@
+"""Unified execution-plan IR: one planner output for every executor.
+
+The paper's central claim is that the splitting decisions — how the image
+is cut into axial slabs, how angles are chunked and assigned to devices —
+are independent of both the algorithm and the kernels that execute them
+(TIGRE: "all of the GPU code is independent from the algorithm that uses
+it").  Historically this repo re-derived that structure in three places:
+the executors interpreted :func:`~repro.core.splitting.plan_forward` /
+:func:`~repro.core.splitting.plan_backward` ad hoc, and the serving layer
+re-ran the planners to price jobs.  :class:`ExecutionPlan` makes the
+partition/communication schedule a first-class object instead: a single
+memoized :func:`plan` entry point produces one IR that
+
+* the executors consume verbatim (``CTOperator`` plain / stream / dist
+  iterate the plan's slab ranges and angle chunks),
+* the kernel-backend registry (:mod:`repro.core.backend`) keys its
+  cached-jit dispatch table on (the static plan args are exactly the jit
+  static args), and
+* the serving cost model reads — footprints, modeled pass counts and
+  host<->device transfer bytes come off the plan, never from re-invoked
+  planners (``serve/scheduler.py``, ``serve/pool.py`` routing and
+  ``serve/steal.py``'s benefit checks all price through here).
+
+The IR is pure Python/numpy (static): it feeds jit-compiled executors
+without retracing, and because every field derives deterministically from
+``(geo, n_angles, n_devices, memory)`` the memo table can be shared by
+every scheduler, pod and benchmark in the process.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import List, Optional, Tuple
+
+from .geometry import ConeGeometry
+from .splitting import (F32, BackwardPlan, ForwardPlan, MemoryModel,
+                        plan_backward, plan_forward)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """The partition/communication schedule for one (geometry, workload).
+
+    One plan covers *both* operators: ``forward`` holds the FP schedule
+    (paper Alg 1 — angles across devices, z-slabs sized to the budget)
+    and ``backward`` the BP schedule (paper Alg 2 — slab queues across
+    devices, angle-chunk double buffers).  Everything below is derived,
+    so consumers never re-run the planners.
+    """
+
+    geo: ConeGeometry
+    n_angles: int
+    n_devices: int
+    memory: MemoryModel
+    forward: ForwardPlan
+    backward: BackwardPlan
+
+    # ---- structure (what the executors iterate) ----------------------------
+
+    @property
+    def streams(self) -> bool:
+        """True when either operator must split the volume: the workload
+        cannot be held resident and belongs on the out-of-core path."""
+        return self.forward.n_slabs > 1 or self.backward.n_slabs > 1
+
+    @property
+    def slab_ranges(self) -> List[Tuple[int, int]]:
+        """Union schedule: the finer of the two operators' slab splits
+        (forward and backward agree on (0, nz) when nothing splits)."""
+        if self.forward.n_slabs >= self.backward.n_slabs:
+            return list(self.forward.slab_ranges)
+        return list(self.backward.slab_ranges)
+
+    @property
+    def device_of_slab(self) -> List[int]:
+        """Backward-pass slab ownership (forward slabs stream on every
+        device; backward slabs are round-robin queued, paper SS2.2)."""
+        return list(self.backward.device_of_slab)
+
+    @property
+    def angle_ranges(self) -> List[Tuple[int, int]]:
+        """Forward-pass per-device angle assignment (paper SS2.1)."""
+        return list(self.forward.angle_ranges)
+
+    # ---- cost model (what the serving layer prices with) -------------------
+
+    @property
+    def step_passes(self) -> float:
+        """Relative cost of one outer iteration in units of an in-core
+        iteration (= 1.0).  A streamed iteration re-stages the volume once
+        per forward slab and the projections once per backward slab, so it
+        costs ``(fp slabs + bp slabs) / 2`` — the one cost model shared by
+        deadline admission, multi-pod routing and the stealing benefit
+        check."""
+        if not self.streams:
+            return 1.0
+        return (self.forward.n_slabs + self.backward.n_slabs) / 2.0
+
+    @property
+    def stream_bytes_on_device(self) -> int:
+        """Per-device working set of the out-of-core executors: the larger
+        of the two operators' ``slab + projection buffers`` budgets."""
+        return max(
+            self.forward.bytes_image_slab + self.forward.bytes_proj_buffers,
+            self.backward.bytes_image_slab + self.backward.bytes_proj_buffers)
+
+    @property
+    def vol_bytes(self) -> int:
+        nz, ny, nx = self.geo.n_voxel
+        return nz * ny * nx * F32
+
+    @property
+    def proj_bytes(self) -> int:
+        nv, nu = self.geo.n_detector
+        return self.n_angles * nv * nu * F32
+
+    @property
+    def transfer_bytes_forward(self) -> int:
+        """Host<->device bytes one FP pass moves: every device streams the
+        whole volume slab by slab (paper Fig 3), and each device's partial
+        projections come back once."""
+        return self.n_devices * self.vol_bytes + self.proj_bytes
+
+    @property
+    def transfer_bytes_backward(self) -> int:
+        """Host<->device bytes one BP pass moves: every slab's owner
+        consumes the entire projection set through its double buffer
+        (paper Fig 5), and each finished slab comes back once."""
+        return self.backward.n_slabs * self.proj_bytes + self.vol_bytes
+
+    @property
+    def transfer_bytes(self) -> int:
+        """One ``A`` plus one ``At`` pass (a gradient-like iteration)."""
+        return self.transfer_bytes_forward + self.transfer_bytes_backward
+
+    def describe(self) -> str:
+        """Human-readable one-plan summary (docs / benchmarks)."""
+        f, b = self.forward, self.backward
+        return (f"ExecutionPlan(vol={self.geo.n_voxel}, "
+                f"angles={self.n_angles}, devices={self.n_devices}, "
+                f"streams={self.streams}, "
+                f"fp: {f.n_slabs} slab(s) x chunk {f.angle_chunk}, "
+                f"bp: {b.n_slabs} slab(s) x chunk {b.angle_chunk}, "
+                f"passes/iter={self.step_passes:g}, "
+                f"device bytes={self.stream_bytes_on_device})")
+
+
+@lru_cache(maxsize=1024)
+def _plan_cached(geo: ConeGeometry, n_angles: int, n_devices: int,
+                 memory: MemoryModel, angle_chunk_fp: int,
+                 angle_chunk_bp: int) -> ExecutionPlan:
+    return ExecutionPlan(
+        geo=geo, n_angles=n_angles, n_devices=n_devices, memory=memory,
+        forward=plan_forward(geo, n_angles, n_devices, memory,
+                             angle_chunk=angle_chunk_fp),
+        backward=plan_backward(geo, n_angles, n_devices, memory,
+                               angle_chunk=angle_chunk_bp))
+
+
+def plan(geo: ConeGeometry, n_angles: int, n_devices: int = 1,
+         memory: Optional[MemoryModel] = None, angle_chunk_fp: int = 16,
+         angle_chunk_bp: int = 32) -> ExecutionPlan:
+    """The single planning entry point (subsumes ``plan_forward`` /
+    ``plan_backward``).  Memoized: every consumer in the process —
+    operators, streaming executors, schedulers, routing, stealing,
+    benchmarks — shares one plan object per (geometry, workload, budget),
+    so the pure-python planners never re-run on a hot path.
+
+    Raises :class:`MemoryError` (not cached) when even one image plane
+    plus the projection buffers exceed the budget."""
+    return _plan_cached(geo, int(n_angles), int(n_devices),
+                        memory or MemoryModel(),
+                        int(angle_chunk_fp), int(angle_chunk_bp))
+
+
+def plan_cache_info():
+    """Memo-table statistics (hits/misses/currsize) — the regression tests
+    assert the serving layer's load polling stays on the cache."""
+    return _plan_cached.cache_info()
+
+
+def plan_cache_clear() -> None:
+    _plan_cached.cache_clear()

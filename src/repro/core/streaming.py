@@ -13,6 +13,13 @@ On hosts with several devices, each device processes its own angle range
 "each of these instructions is executed for all available GPUs
 simultaneously".
 
+The kernels executing each slab come from the backend registry
+(:mod:`repro.core.backend`): ``backend="pallas"`` streams the same plan
+through the Pallas TPU kernels, ``"ref"`` (resolved default on CPU)
+through the pure-JAX projectors.  Either way the compiled slab operators
+are shared process-wide through the registry's cached-jit dispatch table
+(equal-size slabs guarantee at most two shapes per plan).
+
 A :class:`Timeline` instruments the three bins of the paper's Fig 9
 (compute / host-device staging / other memory ops) for the breakdown
 benchmark.
@@ -20,18 +27,17 @@ benchmark.
 
 from __future__ import annotations
 
-import dataclasses
 import time
 from collections import defaultdict
-from functools import partial
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .backend import get_backend
 from .geometry import ConeGeometry, dominant_axis_mask
-from .projector import backproject_voxel, forward_project_joseph
+from .plan import ExecutionPlan
 from .splitting import BackwardPlan, ForwardPlan
 
 
@@ -69,32 +75,25 @@ def _timed(tl: Optional[Timeline], name: str):
 # forward projection streaming (paper Alg 1)
 # --------------------------------------------------------------------------
 
-from functools import lru_cache
-
-
-@lru_cache(maxsize=None)
-def _fp_slab_fn(geo: ConeGeometry, xdom: bool):
-    """jit-compiled partial FP of a z slab for a chunk of angles.
-
-    ``z0`` is traced, so every same-shape slab reuses one executable
-    (the paper's equal-size slabs guarantee at most two shapes).
-    """
-    @jax.jit
-    def f(slab, angles, z0):
-        return forward_project_joseph(slab, geo, angles, xdom=xdom, z0=z0)
-    return f
-
 
 def stream_forward(vol: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
-                   plan: ForwardPlan, devices: Optional[Sequence] = None,
-                   timeline: Optional[Timeline] = None) -> np.ndarray:
+                   plan: Union[ExecutionPlan, ForwardPlan],
+                   devices: Optional[Sequence] = None,
+                   timeline: Optional[Timeline] = None,
+                   backend: Optional[str] = None) -> np.ndarray:
     """Out-of-core forward projection.
 
     ``vol`` is a host (numpy) array that may exceed device memory; only
     slab-sized pieces are staged.  Angles are partitioned over ``devices``
     (paper SS2.1); each device streams all slabs and accumulates its partial
-    projections on-device.
+    projections on-device.  ``plan`` is the unified
+    :class:`~repro.core.plan.ExecutionPlan` (its forward schedule is
+    iterated verbatim) or a bare ``ForwardPlan``; ``backend`` selects the
+    slab kernels ("ref" | "pallas" | "auto"/None).
     """
+    if isinstance(plan, ExecutionPlan):
+        plan = plan.forward
+    bk = get_backend(backend)
     if devices is None:
         devices = jax.local_devices()[: plan.n_devices]
     if len(devices) < plan.n_devices:
@@ -139,7 +138,7 @@ def stream_forward(vol: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
         with _timed(timeline, "compute"):
             for d, groups in dev_acc.items():
                 for key, g in groups.items():
-                    fp = _fp_slab_fn(geo, xdom=(key == "x"))
+                    fp = bk.fp(geo, xdom=(key == "x"))
                     slab = current[d]
                     g["acc"] = g["acc"] + fp(slab, g["angles"], z0)
             for d, groups in dev_acc.items():
@@ -158,39 +157,23 @@ def stream_forward(vol: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
 # backprojection streaming (paper Alg 2)
 # --------------------------------------------------------------------------
 
-@lru_cache(maxsize=None)
-def _bp_slab_fn(geo: ConeGeometry, planes: int, weight: str):
-    @jax.jit
-    def f(proj_chunk, angles, z0):
-        return backproject_voxel(proj_chunk, geo, angles, weight=weight,
-                                 z_start=z0, z_planes=planes)
-    return f
-
-
-@lru_cache(maxsize=None)
-def _bp_slab_matched_fn(geo: ConeGeometry, planes: int, xdom: bool):
-    """Exact adjoint restricted to a z slab: the vjp of the slab's partial
-    forward projection.  Linear => the adjoint restricted to disjoint
-    slabs stacks to the monolithic A^T exactly, so CGLS keeps its
-    convergence guarantees on the out-of-core backend."""
-    @jax.jit
-    def f(proj_chunk, angles, z0):
-        def fwd(slab):
-            return forward_project_joseph(slab, geo, angles, xdom=xdom,
-                                          z0=z0)
-        zeros = jnp.zeros((planes,) + tuple(geo.n_voxel[1:]), jnp.float32)
-        _, vjp = jax.vjp(fwd, zeros)
-        return vjp(proj_chunk)[0]
-    return f
-
-
 def stream_backward(proj: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
-                    plan: BackwardPlan, weight: str = "fdk",
+                    plan: Union[ExecutionPlan, BackwardPlan],
+                    weight: str = "fdk",
                     devices: Optional[Sequence] = None,
-                    timeline: Optional[Timeline] = None) -> np.ndarray:
+                    timeline: Optional[Timeline] = None,
+                    backend: Optional[str] = None) -> np.ndarray:
     """Out-of-core backprojection: every device consumes the entire
     projection set in ``angle_chunk`` double-buffered pieces while updating
-    its resident image slab (paper Fig 5)."""
+    its resident image slab (paper Fig 5).  ``plan`` is the unified
+    :class:`~repro.core.plan.ExecutionPlan` (its backward schedule is
+    iterated verbatim) or a bare ``BackwardPlan``; ``backend`` selects the
+    slab kernels.  ``weight="matched"`` streams the exact per-slab vjp
+    adjoint — always ref-built (see :mod:`repro.core.backend`) so CGLS
+    keeps its convergence guarantees out-of-core on every backend."""
+    if isinstance(plan, ExecutionPlan):
+        plan = plan.backward
+    bk = get_backend(backend)
     if devices is None:
         devices = jax.local_devices()[: plan.n_devices]
     if len(devices) < plan.n_devices:
@@ -207,8 +190,8 @@ def stream_backward(proj: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
     # Slab queue per device (paper: "a queue of image pieces is added").
     for k, (z0, z1) in enumerate(plan.slab_ranges):
         dev = devices[plan.device_of_slab[k]]
-        bp = None if weight == "matched" else _bp_slab_fn(geo, z1 - z0,
-                                                          weight)
+        bp = None if weight == "matched" else bk.bp(geo, planes=z1 - z0,
+                                                    weight=weight)
         acc = jax.device_put(jnp.zeros((z1 - z0,) + tuple(geo.n_voxel[1:]),
                                        jnp.float32), dev)
         # prefetch chunk 0; then stream with one-chunk lookahead
@@ -232,7 +215,8 @@ def stream_backward(proj: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
                                      ("y", np.nonzero(~m)[0])):
                         if idx.size == 0:
                             continue
-                        fn = _bp_slab_matched_fn(geo, z1 - z0, key == "x")
+                        fn = bk.bp_matched(geo, planes=z1 - z0,
+                                           xdom=(key == "x"))
                         acc = acc + fn(cur[0][jnp.asarray(idx)],
                                        cur[1][jnp.asarray(idx)], z0)
                 else:

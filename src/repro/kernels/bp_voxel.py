@@ -29,8 +29,16 @@ from repro.core.geometry import ConeGeometry
 from .fp_ray import angle_constants
 
 
-def _bp_kernel(consts_ref, proj_ref, out_ref, *, geo: ConeGeometry,
+def _bp_kernel(consts_ref, zs_ref, proj_ref, out_ref, *, geo: ConeGeometry,
                bz: int, ca: int, weight: str):
+    """One (z_block, angle_chunk) grid step.
+
+    ``zs_ref[0, 0]`` is the (traced) global starting plane of the output
+    slab: the kernel updates planes ``[z_start, z_start + z_planes)`` of
+    ``geo``'s volume — the full volume when ``z_planes == Nz``, one
+    streamed axial slab otherwise (the angle axis is additive, so chunked
+    accumulation reproduces the monolithic result exactly).
+    """
     c_idx = pl.program_id(1)
     zb_idx = pl.program_id(0)
     nz, ny, nx = geo.n_voxel
@@ -43,8 +51,8 @@ def _bp_kernel(consts_ref, proj_ref, out_ref, *, geo: ConeGeometry,
     xs = (jnp.arange(nx, dtype=jnp.float32) - (nx - 1) / 2.0) * dx + offx
     ys = (jnp.arange(ny, dtype=jnp.float32) - (ny - 1) / 2.0) * dy + offy
     z0 = zb_idx * bz
-    zs = ((jnp.arange(bz, dtype=jnp.float32) + z0.astype(jnp.float32))
-          - (nz - 1) / 2.0) * dz + offz
+    zs = ((jnp.arange(bz, dtype=jnp.float32) + z0.astype(jnp.float32)
+           + zs_ref[0, 0]) - (nz - 1) / 2.0) * dz + offz
 
     X = xs[None, :]
     Y = ys[:, None]
@@ -104,30 +112,37 @@ def _bp_kernel(consts_ref, proj_ref, out_ref, *, geo: ConeGeometry,
     out_ref[...] += acc
 
 
-def bp_voxel_pallas(proj: jnp.ndarray, geo: ConeGeometry, angles: np.ndarray,
+def bp_voxel_pallas(proj: jnp.ndarray, geo: ConeGeometry, angles,
                     z_block: int = 16, angle_chunk: int = 8,
-                    weight: str = "fdk", interpret: bool = True
-                    ) -> jnp.ndarray:
+                    weight: str = "fdk", interpret: bool = True,
+                    z_start=0, z_planes: int = None) -> jnp.ndarray:
     """Backproject with the Pallas kernel.
 
     VMEM working set: ``Bz * Ny * Nx`` volume block (resident, accumulated)
     + double-buffered ``angle_chunk`` projections -- the paper's Alg 2
     budget ("two buffers of size N_angles ... plus the image piece").
+
+    ``z_start`` (traced OK) + ``z_planes`` (static) select an axial slab
+    of ``geo``'s volume (the paper's per-device image pieces) — the
+    out-of-core streaming executor accumulates angle chunks into such
+    slabs.  ``angles`` may be traced (see :mod:`repro.core.backend`).
     """
     nz, ny, nx = geo.n_voxel
     nv, nu = geo.n_detector
-    a = np.asarray(angles, np.float32)
-    n_angles = len(a)
-    if nz % z_block:
-        raise ValueError(f"Nz={nz} not divisible by z_block={z_block}")
+    planes = nz if z_planes is None else z_planes
+    n_angles = angles.shape[0] if hasattr(angles, "shape") else len(angles)
+    if planes % z_block:
+        raise ValueError(f"z_planes={planes} not divisible by "
+                         f"z_block={z_block}")
     if n_angles % angle_chunk:
         raise ValueError(f"n_angles={n_angles} not divisible by "
                          f"angle_chunk={angle_chunk}")
-    n_zb = nz // z_block
+    n_zb = planes // z_block
     n_ch = n_angles // angle_chunk
 
-    consts = jnp.asarray(angle_constants(geo, a)).reshape(n_ch, angle_chunk, 8)
+    consts = angle_constants(geo, angles).reshape(n_ch, angle_chunk, 8)
     proj_ch = jnp.asarray(proj).reshape(n_ch, angle_chunk, nv, nu)
+    zs_arr = jnp.asarray(z_start, jnp.float32).reshape(1, 1)
 
     kernel = functools.partial(_bp_kernel, geo=geo, bz=z_block,
                                ca=angle_chunk, weight=weight)
@@ -136,9 +151,10 @@ def bp_voxel_pallas(proj: jnp.ndarray, geo: ConeGeometry, angles: np.ndarray,
         grid=(n_zb, n_ch),
         in_specs=[
             pl.BlockSpec((1, angle_chunk, 8), lambda z_, c_: (c_, 0, 0)),
+            pl.BlockSpec((1, 1), lambda z_, c_: (0, 0)),
             pl.BlockSpec((1, angle_chunk, nv, nu), lambda z_, c_: (c_, 0, 0, 0)),
         ],
         out_specs=pl.BlockSpec((z_block, ny, nx), lambda z_, c_: (z_, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((nz, ny, nx), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((planes, ny, nx), jnp.float32),
         interpret=interpret,
-    )(consts, proj_ch)
+    )(consts, zs_arr, proj_ch)

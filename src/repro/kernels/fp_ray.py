@@ -36,26 +36,39 @@ from jax.experimental import pallas as pl
 from repro.core.geometry import ConeGeometry
 
 
-def angle_constants(geo: ConeGeometry, angles: np.ndarray) -> np.ndarray:
-    """(A, 8) per-angle table: src(3), det_c(2), e_u(2), pad."""
-    a = np.asarray(angles, np.float64)
-    c, s = np.cos(a), np.sin(a)
-    out = np.stack([
+def angle_constants(geo: ConeGeometry, angles) -> jnp.ndarray:
+    """(A, 8) per-angle table: src(3), det_c(2), e_u(2), pad.
+
+    Built with jnp so ``angles`` may be a *traced* array: the wrappers in
+    :mod:`repro.core.backend` / :mod:`repro.kernels.ops` jit once per
+    static key and reuse the compiled kernel across angle values instead
+    of retracing per call.
+    """
+    a = jnp.asarray(angles, jnp.float32)
+    c, s = jnp.cos(a), jnp.sin(a)
+    z = jnp.zeros_like(a)
+    return jnp.stack([
         geo.DSO * c,                    # Sx
         geo.DSO * s,                    # Sy
-        np.zeros_like(a),               # Sz
+        z,                              # Sz
         -(geo.DSD - geo.DSO) * c,       # det_c x
         -(geo.DSD - geo.DSO) * s,       # det_c y
         -s,                             # e_u x
         c,                              # e_u y
-        np.zeros_like(a),
+        z,
     ], axis=-1)
-    return out.astype(np.float32)
 
 
-def _fp_kernel(consts_ref, xc_ref, vol_ref, out_ref, *, geo: ConeGeometry,
-               px: int):
-    """One (angle, slab) grid step: accumulate Px marching planes."""
+def _fp_kernel(consts_ref, xc_ref, z0_ref, vol_ref, out_ref, *,
+               geo: ConeGeometry, px: int, nz_slab: int):
+    """One (angle, slab) grid step: accumulate Px marching planes.
+
+    ``vol_ref`` holds ``nz_slab`` z planes starting at the (traced) global
+    plane ``z0_ref[0, 0]`` — the full volume when ``nz_slab == Nz``, a
+    streamed axial slab otherwise.  Interpolation taps outside the slab
+    evaluate to zero, so partial projections over disjoint slabs sum to
+    the monolithic integral exactly (the paper's splitting claim).
+    """
     s_idx = pl.program_id(1)
     nz, ny, nx = geo.n_voxel
     nv, nu = geo.n_detector
@@ -63,6 +76,7 @@ def _fp_kernel(consts_ref, xc_ref, vol_ref, out_ref, *, geo: ConeGeometry,
     dv, du = geo.d_detector
     offz, offy, offx = geo.off_origin
     offv, offu = geo.off_detector
+    z0 = z0_ref[0, 0]
 
     c = consts_ref[0]
     sx, sy, sz = c[0], c[1], c[2]
@@ -89,8 +103,8 @@ def _fp_kernel(consts_ref, xc_ref, vol_ref, out_ref, *, geo: ConeGeometry,
         yw = sy + s_par * d_y                      # (Nu,)
         fj = (yw - offy) / dy + (ny - 1) / 2.0     # (Nu,)
         fk = ((sz + s_par[None, :] * d_z[:, None] - offz) / dz
-              + (nz - 1) / 2.0)                    # (Nv, Nu)
-        plane = vol_block[p]                       # (Nz, Ny)
+              + (nz - 1) / 2.0) - z0               # (Nv, Nu), slab-local
+        plane = vol_block[p]                       # (nz_slab, Ny)
 
         # --- y interpolation: gather two columns per u, blend -------------
         j0 = jnp.floor(fj)
@@ -109,12 +123,13 @@ def _fp_kernel(consts_ref, xc_ref, vol_ref, out_ref, *, geo: ConeGeometry,
         k0 = jnp.floor(fk)
         wk = fk - k0
         k0i = k0.astype(jnp.int32)
-        k0c = jnp.clip(k0i, 0, nz - 1)
-        k1c = jnp.clip(k0i + 1, 0, nz - 1)
-        z0 = jnp.take_along_axis(colz, k0c, axis=0)          # (Nv, Nu)
-        z1 = jnp.take_along_axis(colz, k1c, axis=0)
-        val = (z0 * jnp.where((k0i >= 0) & (k0i < nz), 1.0 - wk, 0.0)
-               + z1 * jnp.where((k0i + 1 >= 0) & (k0i + 1 < nz), wk, 0.0))
+        k0c = jnp.clip(k0i, 0, nz_slab - 1)
+        k1c = jnp.clip(k0i + 1, 0, nz_slab - 1)
+        t0 = jnp.take_along_axis(colz, k0c, axis=0)          # (Nv, Nu)
+        t1 = jnp.take_along_axis(colz, k1c, axis=0)
+        val = (t0 * jnp.where((k0i >= 0) & (k0i < nz_slab), 1.0 - wk, 0.0)
+               + t1 * jnp.where((k0i + 1 >= 0) & (k0i + 1 < nz_slab),
+                                wk, 0.0))
 
         w = ((s_par > 0.0) & (s_par <= 1.0)).astype(jnp.float32)[None, :]
         return acc + val * w
@@ -129,42 +144,53 @@ def _fp_kernel(consts_ref, xc_ref, vol_ref, out_ref, *, geo: ConeGeometry,
     out_ref[0] += acc * seg
 
 
-def fp_ray_pallas(vol: jnp.ndarray, geo: ConeGeometry, angles: np.ndarray,
-                  slab_planes: int = 16, interpret: bool = True
-                  ) -> jnp.ndarray:
+def fp_ray_pallas(vol: jnp.ndarray, geo: ConeGeometry, angles,
+                  slab_planes: int = 16, interpret: bool = True,
+                  z0=0) -> jnp.ndarray:
     """Forward-project x-dominant ``angles`` with the Pallas kernel.
 
     ``slab_planes`` (Px) sets the marching-axis slab streamed per grid step;
     the VMEM working set is ``Px * Nz * Ny * 4`` bytes for the slab plus one
     ``(Nv, Nu)`` accumulator and output block (the paper's "two projection
     buffers" become the pipeline's double-buffered output window).
+
+    ``vol`` may be an axial slab of ``geo``'s volume: z planes
+    ``[z0, z0 + vol.shape[0])`` — the result is that slab's *partial*
+    projection, and summing over a disjoint slab partition reproduces the
+    monolithic projection exactly, which is how the out-of-core streaming
+    executor drives this kernel.  ``angles`` and ``z0`` may be traced
+    (the cached-jit dispatch in :mod:`repro.core.backend` relies on it).
     """
     nz, ny, nx = geo.n_voxel
     nv, nu = geo.n_detector
     if nx % slab_planes:
         raise ValueError(f"Nx={nx} not divisible by slab_planes={slab_planes}")
     n_slabs = nx // slab_planes
-    a = np.asarray(angles, np.float32)
-    n_angles = len(a)
+    nz_slab = vol.shape[0]
+    n_angles = angles.shape[0] if hasattr(angles, "shape") else len(angles)
 
-    # (Nz, Ny, Nx) -> (S, Px, Nz, Ny): marching-axis slabs
-    vol_slabs = jnp.transpose(vol, (2, 0, 1)).reshape(
-        n_slabs, slab_planes, nz, ny)
-    consts = jnp.asarray(angle_constants(geo, a))
+    # (nz_slab, Ny, Nx) -> (S, Px, nz_slab, Ny): marching-axis slabs
+    vol_slabs = jnp.transpose(jnp.asarray(vol), (2, 0, 1)).reshape(
+        n_slabs, slab_planes, nz_slab, ny)
+    consts = angle_constants(geo, angles)
     xc = np.asarray(
         (np.arange(nx) - (nx - 1) / 2.0) * geo.d_voxel[2] + geo.off_origin[2],
         np.float32).reshape(n_slabs, slab_planes)
+    z0_arr = jnp.asarray(z0, jnp.float32).reshape(1, 1)
 
-    kernel = functools.partial(_fp_kernel, geo=geo, px=slab_planes)
+    kernel = functools.partial(_fp_kernel, geo=geo, px=slab_planes,
+                               nz_slab=nz_slab)
     return pl.pallas_call(
         kernel,
         grid=(n_angles, n_slabs),
         in_specs=[
             pl.BlockSpec((1, 8), lambda a_, s_: (a_, 0)),
             pl.BlockSpec((1, slab_planes), lambda a_, s_: (s_, 0)),
-            pl.BlockSpec((1, slab_planes, nz, ny), lambda a_, s_: (s_, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda a_, s_: (0, 0)),
+            pl.BlockSpec((1, slab_planes, nz_slab, ny),
+                         lambda a_, s_: (s_, 0, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, nv, nu), lambda a_, s_: (a_, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((n_angles, nv, nu), jnp.float32),
         interpret=interpret,
-    )(consts, jnp.asarray(xc), vol_slabs)
+    )(consts, jnp.asarray(xc), z0_arr, vol_slabs)

@@ -2,16 +2,24 @@
 
 ``interpret`` defaults to auto-detection: True on CPU hosts (this
 container), False on real TPU backends where Mosaic compiles the kernels.
+
+Compiled functions are cached per static key (geometry, block sizes,
+weight, interpret) and take ``angles`` as a *traced* argument, so
+repeated calls reuse one executable.  The previous wrappers built
+``jax.jit(partial(...))`` inside every call — each invocation allocated
+a fresh jit wrapper and retraced from scratch (angles were baked in as
+static constants), which made every FDK filter step or per-iteration
+kernel call pay full trace+compile cost.  ``cache_info()`` exposes the
+hit counters; ``tests/test_backend.py`` has the regression test.
 """
 
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import bp_voxel as _bp
 from . import flash_attention as _fa
@@ -24,14 +32,55 @@ def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+@lru_cache(maxsize=None)
+def _fp_compiled(geo: ConeGeometry, slab_planes: int, interpret: bool):
+    @jax.jit
+    def f(vol, angles):
+        return _fp.fp_ray_pallas(vol, geo, angles, slab_planes=slab_planes,
+                                 interpret=interpret)
+    return f
+
+
+@lru_cache(maxsize=None)
+def _bp_compiled(geo: ConeGeometry, z_block: int, angle_chunk: int,
+                 weight: str, interpret: bool):
+    @jax.jit
+    def f(proj, angles):
+        return _bp.bp_voxel_pallas(proj, geo, angles, z_block=z_block,
+                                   angle_chunk=angle_chunk, weight=weight,
+                                   interpret=interpret)
+    return f
+
+
+@lru_cache(maxsize=None)
+def _tv_compiled(eps: float, z_block: int, interpret: bool):
+    @jax.jit
+    def f(vol):
+        return _tv.tv_grad_pallas(vol, eps=eps, z_block=z_block,
+                                  interpret=interpret)
+    return f
+
+
+def cache_info():
+    """lru statistics of the compiled-wrapper caches (regression-tested:
+    repeated calls must hit, never rebuild)."""
+    return {"fp": _fp_compiled.cache_info(),
+            "bp": _bp_compiled.cache_info(),
+            "tv": _tv_compiled.cache_info()}
+
+
+def clear_cache() -> None:
+    _fp_compiled.cache_clear()
+    _bp_compiled.cache_clear()
+    _tv_compiled.cache_clear()
+
+
 def fp_ray_project(vol, geo: ConeGeometry, angles, slab_planes: int = 16,
                    interpret: Optional[bool] = None):
     """Joseph forward projection (x-dominant angles) via the Pallas kernel."""
     interpret = _auto_interpret() if interpret is None else interpret
-    fn = jax.jit(partial(_fp.fp_ray_pallas, geo=geo,
-                         angles=np.asarray(angles),
-                         slab_planes=slab_planes, interpret=interpret))
-    return fn(vol)
+    return _fp_compiled(geo, slab_planes, interpret)(vol,
+                                                     jnp.asarray(angles))
 
 
 def bp_voxel_backproject(proj, geo: ConeGeometry, angles, z_block: int = 16,
@@ -39,19 +88,15 @@ def bp_voxel_backproject(proj, geo: ConeGeometry, angles, z_block: int = 16,
                          interpret: Optional[bool] = None):
     """Voxel-driven backprojection via the Pallas kernel."""
     interpret = _auto_interpret() if interpret is None else interpret
-    fn = jax.jit(partial(_bp.bp_voxel_pallas, geo=geo,
-                         angles=np.asarray(angles), z_block=z_block,
-                         angle_chunk=angle_chunk, weight=weight,
-                         interpret=interpret))
-    return fn(proj)
+    return _bp_compiled(geo, z_block, angle_chunk, weight, interpret)(
+        proj, jnp.asarray(angles))
 
 
 def tv_gradient_fused(vol, eps: float = 1e-6, z_block: int = 16,
                       interpret: Optional[bool] = None):
     """Fused TV-gradient stencil via the Pallas kernel."""
     interpret = _auto_interpret() if interpret is None else interpret
-    return jax.jit(partial(_tv.tv_grad_pallas, eps=eps, z_block=z_block,
-                           interpret=interpret))(vol)
+    return _tv_compiled(eps, z_block, interpret)(vol)
 
 
 def flash_attention(q, k, v, causal: bool = True,

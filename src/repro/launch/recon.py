@@ -2,9 +2,10 @@
 
 Builds a :class:`repro.serve.ReconJob` from the CLI arguments, submits it
 to a :class:`repro.serve.Scheduler` and drives it with the threaded
-:class:`repro.serve.AsyncDriver`; the scheduler picks the backend
-(in-core "plain" vs out-of-core "stream") from the planner's footprint
-estimate unless ``--mode`` forces one.  ``--mode dist`` bypasses the
+:class:`repro.serve.AsyncDriver`; the scheduler picks the execution mode
+(in-core "plain" vs out-of-core "stream") from the planned footprint
+unless ``--mode`` forces one, and ``--backend`` selects the kernel
+backend (ref | pallas | auto; see docs/operators.md).  ``--mode dist`` bypasses the
 scheduler and runs the shard_map backend over the local device mesh.
 ``--snapshot-dir`` makes the run restart-safe: a SIGTERM parks the job's
 step-wise checkpoint durably, and re-running the same command resumes it
@@ -49,8 +50,10 @@ def _job_params(algname: str, n_angles: int) -> dict:
 def reconstruct(algname: str = "cgls", n: int = 64, n_angles: int = 96,
                 iters: int = 10, mode: str = "auto",
                 device_bytes: int = 0, verbose: bool = True,
-                snapshot_dir: str = "", pods: int = 1):
+                snapshot_dir: str = "", pods: int = 1,
+                backend: str = "auto"):
     geo = ConeGeometry.nice(n)
+    job_backend = None if backend == "auto" else backend
     vol, angles, proj = make_ct_dataset(geo, n_angles)
     mem = (MemoryModel(device_bytes=device_bytes)
            if device_bytes else MemoryModel())
@@ -89,7 +92,8 @@ def reconstruct(algname: str = "cgls", n: int = 64, n_angles: int = 96,
             jid = mps.submit(ReconJob(
                 algname, geo, angles, proj, n_iter=iters,
                 params=_job_params(algname, n_angles),
-                mode=None if mode == "auto" else mode))
+                mode=None if mode == "auto" else mode,
+                backend=job_backend))
         # periodic per-pod snapshots make a kill -9 recoverable too
         MultiPodDriver(mps, snapshot_every_seconds=1.0 if root else 0.0
                        ).run()
@@ -113,7 +117,7 @@ def reconstruct(algname: str = "cgls", n: int = 64, n_angles: int = 96,
         mesh = make_host_mesh(model_axis=1)
         op = CTOperator(geo, angles, mode="dist", mesh=mesh,
                         bp_weight="matched" if algname in ("cgls", "fista")
-                        else "pmatched")
+                        else "pmatched", backend=job_backend)
         with mesh:
             rec = _run_monolithic(algname, proj, geo, angles, iters, op)
     else:
@@ -131,7 +135,8 @@ def reconstruct(algname: str = "cgls", n: int = 64, n_angles: int = 96,
             jid = sched.submit(ReconJob(
                 algname, geo, angles, proj, n_iter=iters,
                 params=_job_params(algname, n_angles),
-                mode=None if mode == "auto" else mode))
+                mode=None if mode == "auto" else mode,
+                backend=job_backend))
         AsyncDriver(sched).run()
         record = sched.records[jid]
         if record.status is JobStatus.PREEMPTED:   # SIGTERM parked it
@@ -179,6 +184,12 @@ def main():
     ap.add_argument("--iters", type=int, default=10)
     ap.add_argument("--mode", default="auto",
                     choices=("auto", "plain", "stream", "dist"))
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "ref", "pallas"),
+                    help="kernel backend for the operators: the pure-JAX "
+                         "projectors (ref), the Pallas TPU kernels "
+                         "(pallas; interpret mode off-TPU), or per-JAX-"
+                         "backend auto-detection (see docs/operators.md)")
     ap.add_argument("--device-bytes", type=int, default=0,
                     help="per-device memory budget (streaming/placement)")
     ap.add_argument("--snapshot-dir", default="",
@@ -192,7 +203,7 @@ def main():
     args = ap.parse_args()
     reconstruct(args.alg, args.n, args.angles, args.iters, args.mode,
                 args.device_bytes, snapshot_dir=args.snapshot_dir,
-                pods=args.pods)
+                pods=args.pods, backend=args.backend)
 
 
 if __name__ == "__main__":

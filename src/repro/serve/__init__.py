@@ -5,8 +5,9 @@ subsystem makes *many* reconstructions share a device pool.  A
 :class:`ReconJob` (geometry + data + algorithm + priority) is submitted to
 a :class:`Scheduler`, which
 
-* estimates the job's per-device footprint with the paper's planners
-  (``plan_forward`` / ``plan_backward``),
+* estimates the job's per-device footprint off the shared memoized
+  execution plan (:func:`repro.core.plan.plan` — the same IR the
+  executors run),
 * packs several small jobs per device and routes oversized jobs through
   the out-of-core streaming executors,
 * interleaves one outer iteration per job per quantum (fair share) using
@@ -64,8 +65,8 @@ from .metrics import ServeMetrics, merge_metrics, percentile
 from .scheduler import (DevicePool, DeviceSlot, JobFootprint, Scheduler,
                         estimate_job_footprint, fair_share_weight)
 from .driver import AsyncDriver, MultiPodDriver
-from .pool import (MultiPodScheduler, Pod, PodSpec, modeled_job_seconds,
-                   pods_from_mesh)
+from .pool import (MultiPodScheduler, Pod, PodSpec, RetiredPodSummary,
+                   modeled_job_seconds, pods_from_mesh)
 from .steal import StealPolicy, drain_pod, steal_once, steal_pass
 from .autoscale import Autoscaler, AutoscalePolicy, ScaleEvent
 
@@ -74,6 +75,7 @@ __all__ = ["ReconJob", "JobRecord", "JobStatus", "PriorityJobQueue",
            "merge_metrics", "percentile", "DevicePool", "DeviceSlot",
            "JobFootprint", "Scheduler", "estimate_job_footprint",
            "fair_share_weight", "AsyncDriver", "MultiPodDriver",
-           "MultiPodScheduler", "Pod", "PodSpec", "modeled_job_seconds",
+           "MultiPodScheduler", "Pod", "PodSpec", "RetiredPodSummary",
+           "modeled_job_seconds",
            "pods_from_mesh", "StealPolicy", "drain_pod", "steal_once",
            "steal_pass", "Autoscaler", "AutoscalePolicy", "ScaleEvent"]

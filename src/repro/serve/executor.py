@@ -45,9 +45,11 @@ def clear_operator_cache() -> None:
 
 
 def _get_operator(geo, angles: np.ndarray, mode: str, bp_weight: str,
-                  memory: MemoryModel,
-                  devices: Optional[Sequence]) -> CTOperator:
-    key = (geo, angles.tobytes(), mode, bp_weight,
+                  memory: MemoryModel, devices: Optional[Sequence],
+                  backend: Optional[str] = None) -> CTOperator:
+    from repro.core.backend import resolve
+    backend = resolve(backend)     # "auto"/None and its target share a key
+    key = (geo, angles.tobytes(), mode, bp_weight, backend,
            memory.device_bytes, memory.usable_fraction,
            tuple(getattr(d, "id", id(d)) for d in devices or ()))
     with _op_cache_lock:
@@ -56,7 +58,7 @@ def _get_operator(geo, angles: np.ndarray, mode: str, bp_weight: str,
             _op_cache.move_to_end(key)
             return op
     op = CTOperator(geo, angles, mode=mode, bp_weight=bp_weight,
-                    memory=memory, devices=devices)
+                    memory=memory, devices=devices, backend=backend)
     with _op_cache_lock:
         _op_cache[key] = op
         if len(_op_cache) > _OP_CACHE_MAX:
@@ -115,7 +117,7 @@ class JobExecutor:
         proj = self.job.resolve_projections()
         op = _get_operator(self.job.geo, self.job.angles, self.mode,
                            self.alg.default_bp_weight, self.memory,
-                           self.devices)
+                           self.devices, backend=self.job.backend)
         params = dict(self.job.params)
         if checkpoint is not None:
             # feed checkpointed scalars back through init so restore does

@@ -52,8 +52,11 @@ class ReconJob:
     params : extra keyword arguments for the algorithm's ``init``.
     memory_hint_bytes : optional override of the planner's footprint
         estimate (0 = use the estimate).
-    mode : force the execution backend ("plain" | "stream"); ``None`` lets
+    mode : force the execution mode ("plain" | "stream"); ``None`` lets
         the scheduler choose from the footprint vs. the device budget.
+    backend : kernel backend for the job's operators ("ref" | "pallas");
+        ``None`` = "auto" (per JAX backend — see
+        :mod:`repro.core.backend`).
     deadline_seconds : SLO budget measured from submission (0 = none).  At
         admission the scheduler models the job's completion time from the
         observed init/step costs and *rejects* the job outright if the
@@ -70,6 +73,7 @@ class ReconJob:
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     memory_hint_bytes: int = 0
     mode: Optional[str] = None
+    backend: Optional[str] = None
     deadline_seconds: float = 0.0
     job_id: str = ""
 

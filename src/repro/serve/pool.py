@@ -54,8 +54,7 @@ from ..core.algorithms.stepwise import get_algorithm
 from ..core.splitting import MemoryModel
 from .job import JobRecord, ReconJob
 from .metrics import ServeMetrics, merge_metrics
-from .scheduler import (DevicePool, Scheduler, _atomic_write_json,
-                        estimate_job_footprint, modeled_step_passes)
+from .scheduler import DevicePool, Scheduler, _atomic_write_json
 from .steal import (StealPolicy, effective_units, fleet_units, pod_load,
                     steal_pass)
 
@@ -109,6 +108,32 @@ class Pod:
                 f"usable={self.pool.memory.usable}B)")
 
 
+@dataclasses.dataclass
+class RetiredPodSummary:
+    """Compact tombstone of a retired pod after its TTL expired.
+
+    A retired :class:`Pod` keeps its whole scheduler — records with
+    result arrays, executor caches — so ``owner()`` / ``result()`` stay
+    answerable for jobs that completed there.  A server that scales down
+    thousands of times would grow without bound, so after
+    ``retired_pod_ttl_seconds`` the pod is folded into this summary:
+    counters (:class:`ServeMetrics`), per-device busy clocks and each
+    job's terminal status survive (fleet metrics and summaries stay
+    exact); the result arrays and the scheduler are dropped.
+    """
+    name: str
+    retired_at: float
+    n_devices: int
+    metrics: ServeMetrics
+    device_busy: List[float]
+    job_statuses: Dict[str, str]     # job_id -> terminal status value
+
+    def summary(self) -> Dict:
+        out = self.metrics.summary(device_busy=self.device_busy)
+        out["compacted"] = True
+        return out
+
+
 def pods_from_mesh(mesh, memory: Optional[MemoryModel] = None,
                    pod_axis: str = "pod", **spec_kwargs) -> List[Pod]:
     """One :class:`Pod` per group along the mesh's ``pod_axis`` (the whole
@@ -127,18 +152,22 @@ def modeled_job_seconds(job: ReconJob, pod: Pod,
     """Modeled cost of running ``job`` on ``pod``, or None if the job can
     never fit there (not even streamed).
 
-    The unit cost is the pod's observed per-pass step EMA, scaled by
-    :func:`repro.serve.scheduler.modeled_step_passes` — the slab-pass
-    multiplier under *that pod's* budget, so a pod with more memory per
-    device models (and is) cheaper for oversized volumes.  ``unit`` /
-    ``init`` supply the fleet-wide fallback for a pod with no
-    observations yet (see :func:`repro.serve.steal.fleet_units`); with
-    no fallback either, a cold pod costs 1.0 per pass."""
+    The unit cost is the pod's observed per-pass step EMA, scaled by the
+    job's slab-pass multiplier under *that pod's* budget, so a pod with
+    more memory per device models (and is) cheaper for oversized
+    volumes.  Footprint and multiplier are read off the scheduler's
+    memoized plan (:meth:`Scheduler.job_footprint` /
+    :meth:`Scheduler.job_passes`, both backed by the shared
+    :func:`repro.core.plan.plan` memo) — routing a submission across N
+    pods re-prices, never re-plans.  ``unit`` / ``init`` supply the
+    fleet-wide fallback for a pod with no observations yet (see
+    :func:`repro.serve.steal.fleet_units`); with no fallback either, a
+    cold pod costs 1.0 per pass."""
     try:
-        fp = estimate_job_footprint(job, pod.pool.memory)
-        passes = modeled_step_passes(job, pod.pool.memory)
+        fp = pod.scheduler.job_footprint(job)
     except Exception:
         return None
+    passes = pod.scheduler.job_passes(job)
     if fp.bytes_on_device > pod.pool.fits_nowhere_bytes:
         return None
     alg = get_algorithm(job.algorithm)
@@ -178,13 +207,22 @@ class MultiPodScheduler:
         :meth:`drain_fleet` persist the whole fleet and
         :meth:`restore_fleet` rebuilds it (membership *and* parked jobs)
         after process death.
+    retired_pod_ttl_seconds : fold a retired pod's full records into a
+        compact :class:`RetiredPodSummary` once it has been retired this
+        long (``None`` = keep forever).  Counters, busy clocks and job
+        statuses survive compaction; result arrays do not — a long-lived
+        autoscaled server stays bounded no matter how often it scales
+        down.  Compaction runs opportunistically on every
+        :meth:`remove_pod` / :meth:`metrics` / :meth:`summary` call (or
+        explicitly via :meth:`compact_retired`).
     """
 
     def __init__(self, pods: Sequence[Pod], steal: bool = True,
                  transfer_dir: Optional[str] = None,
                  steal_policy: StealPolicy = StealPolicy(),
                  data_refs: Optional[Dict[str, Callable]] = None,
-                 snapshot_root: Optional[str] = None):
+                 snapshot_root: Optional[str] = None,
+                 retired_pod_ttl_seconds: Optional[float] = None):
         if not pods:
             raise ValueError("MultiPodScheduler needs at least one pod")
         names = [p.name for p in pods]
@@ -213,6 +251,9 @@ class MultiPodScheduler:
         self._manifest_written = 0    # guarded by the manifest lock
         self.pods: List[Pod] = []
         self.retired_pods: List[Pod] = []
+        self.retired_pod_ttl_seconds = retired_pod_ttl_seconds
+        self.retired_summaries: List[RetiredPodSummary] = []
+        self._retired_at: Dict[str, float] = {}
         # fleet gauges: scale events + pods-online timeline + the
         # *retired* pods' accumulated pod-seconds (live pods' seconds are
         # added on the fly in `metrics()`)
@@ -274,6 +315,7 @@ class MultiPodScheduler:
         with self._fleet_lock:
             taken = {p.name for p in self.pods}
             taken.update(p.name for p in self.retired_pods)
+            taken.update(s.name for s in self.retired_summaries)
             if pod.name in taken:
                 raise ValueError(f"pod name {pod.name!r} already used")
             self._admit_pod(pod, time.monotonic())
@@ -300,13 +342,43 @@ class MultiPodScheduler:
             self.pods.remove(target)
             self.retired_pods.append(target)
             now = time.monotonic()
+            self._retired_at[target.name] = now
             started = self._pod_started.pop(target.name, now)
             self.fleet_metrics.pod_seconds += now - started
             if target.scheduler.metrics.wall_end is None:
                 target.scheduler.metrics.wall_end = now
             self.fleet_metrics.record_pods_online(now, len(self.pods))
+        self.compact_retired()
         self._write_fleet_manifest()   # I/O outside the lock (see add_pod)
         return target
+
+    def compact_retired(self, now: Optional[float] = None) -> int:
+        """Fold retired pods whose TTL has expired into
+        :class:`RetiredPodSummary` tombstones (see
+        ``retired_pod_ttl_seconds``); returns how many pods were folded.
+        After compaction a pod's job *results* are gone — :meth:`owner` /
+        :meth:`result` raise a KeyError naming the compaction — but its
+        counters, busy clocks and job statuses stay in the fleet
+        metrics/summary forever."""
+        if self.retired_pod_ttl_seconds is None:
+            return 0
+        now = time.monotonic() if now is None else now
+        cutoff = now - self.retired_pod_ttl_seconds
+        with self._fleet_lock:
+            fold = [p for p in self.retired_pods
+                    if self._retired_at.get(p.name, now) <= cutoff]
+            for pod in fold:
+                self.retired_pods.remove(pod)
+                self.retired_summaries.append(RetiredPodSummary(
+                    name=pod.name,
+                    retired_at=self._retired_at.pop(pod.name, now),
+                    n_devices=pod.n_devices,
+                    metrics=pod.scheduler.metrics,
+                    device_busy=list(pod.pool.busy_clocks()),
+                    job_statuses={
+                        jid: rec.status.value
+                        for jid, rec in pod.scheduler.records.items()}))
+        return len(fold)
 
     def record_scale_event(self, direction: str) -> None:
         with self._fleet_lock:
@@ -398,12 +470,21 @@ class MultiPodScheduler:
 
     def owner(self, job_id: str) -> Pod:
         """Pod currently holding the job's record (stealing moves it;
-        retired pods keep the records of jobs that completed on them)."""
+        retired pods keep the records of jobs that completed on them,
+        until compaction — see :meth:`compact_retired`)."""
         with self._fleet_lock:
             pods = list(self.pods) + list(self.retired_pods)
+            summaries = list(self.retired_summaries)
         for pod in pods:
             if job_id in pod.scheduler.records:
                 return pod
+        for s in summaries:
+            if job_id in s.job_statuses:
+                raise KeyError(
+                    f"job {job_id} ({s.job_statuses[job_id]}) ran on "
+                    f"retired pod {s.name!r}, whose records were "
+                    f"compacted after the retired-pod TTL; its result is "
+                    f"no longer held")
         raise KeyError(f"unknown job {job_id}")
 
     def home(self, job_id: str) -> str:
@@ -497,27 +578,36 @@ class MultiPodScheduler:
         return g
 
     def metrics(self) -> ServeMetrics:
-        """Merged fleet metrics over live *and* retired pods, plus the
-        fleet gauges (scale events, pods-online timeline, pod-seconds)."""
+        """Merged fleet metrics over live and retired pods — compacted
+        tombstones included, so scaling down (and compacting) never loses
+        counters — plus the fleet gauges (scale events, pods-online
+        timeline, pod-seconds)."""
+        self.compact_retired()
         with self._fleet_lock:
             parts = [p.scheduler.metrics
                      for p in self.pods + self.retired_pods]
+            parts += [s.metrics for s in self.retired_summaries]
         return merge_metrics(parts + [self._gauge_metrics()])
 
     def summary(self) -> Dict:
         """Fleet summary (merged counters, fleet-wide makespan over every
         device busy clock — retired pods included) plus a per-pod
         breakdown."""
+        self.compact_retired()
         with self._fleet_lock:
             live = list(self.pods)
             retired = list(self.retired_pods)
+            summaries = list(self.retired_summaries)
         busy: List[float] = []
         for pod in live + retired:
             busy.extend(pod.pool.busy_clocks())
+        for s in summaries:
+            busy.extend(s.device_busy)
         out = self.metrics().summary(device_busy=busy)
         out["pods"] = {p.name: p.scheduler.summary() for p in live}
         out["retired_pods"] = {p.name: p.scheduler.summary()
                                for p in retired}
+        out["retired_pods"].update({s.name: s.summary() for s in summaries})
         out["jobs_stolen"] = len(self.stolen_jobs)
         return out
 

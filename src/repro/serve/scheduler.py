@@ -1,7 +1,8 @@
 """Multi-tenant job scheduler: placement, fair-share interleaving, preemption.
 
 This is the serving layer the paper's planners make possible: because
-``plan_forward`` / ``plan_backward`` can *predict* a reconstruction's
+the execution plan (:func:`repro.core.plan.plan` — the same memoized IR
+the executors run) can *predict* a reconstruction's
 per-device footprint before any array is allocated, the scheduler can pack
 several small jobs onto one device, route oversized jobs through the
 out-of-core streaming path (whose working set is bounded by the device
@@ -80,7 +81,8 @@ from ..checkpoint.sharded import (latest_step, manifest_target,
                                   restore_checkpoint, save_checkpoint)
 from ..core.algorithms.stepwise import get_algorithm
 from ..core.geometry import ConeGeometry
-from ..core.splitting import MemoryModel, plan_backward, plan_forward
+from ..core.plan import plan as plan_execution
+from ..core.splitting import MemoryModel
 from .executor import JobExecutor
 from .job import JobRecord, JobStatus, ReconJob
 from .metrics import ServeMetrics
@@ -121,21 +123,20 @@ def estimate_job_footprint(job: ReconJob,
                            memory: MemoryModel) -> JobFootprint:
     """Per-device bytes the job needs under ``memory``, and whether it must
     stream.  Mirrors the paper's "check GPU memory / split" decision
-    (Alg 1-2): if the planners would split the volume, the job cannot be
-    held resident and is routed out-of-core."""
+    (Alg 1-2): if the plan would split the volume, the job cannot be held
+    resident and is routed out-of-core.  All structure comes off the
+    shared memoized :func:`repro.core.plan.plan` — the same IR the
+    executors run — so the scheduler prices exactly what would execute."""
     geo, n_angles = job.geo, job.n_angles
-    plan_f = plan_forward(geo, n_angles, 1, memory)
-    plan_b = plan_backward(geo, n_angles, 1, memory)
-    streams = plan_f.n_slabs > 1 or plan_b.n_slabs > 1
+    p = plan_execution(geo, n_angles, 1, memory)
+    streams = p.streams
     if job.mode == "plain":
         streams = False
     elif job.mode == "stream":
         streams = True
 
     if streams:
-        bytes_needed = max(
-            plan_f.bytes_image_slab + plan_f.bytes_proj_buffers,
-            plan_b.bytes_image_slab + plan_b.bytes_proj_buffers)
+        bytes_needed = p.stream_bytes_on_device
     else:
         nz, ny, nx = geo.n_voxel
         nv, nu = geo.n_detector
@@ -225,19 +226,17 @@ class DevicePool:
 
 def modeled_step_passes(job: ReconJob, memory: MemoryModel) -> float:
     """Relative cost of one outer iteration of ``job`` under ``memory``,
-    in units of an in-core iteration (= 1.0).  A job the planners would
-    stream costs ``(forward slabs + backward slabs) / 2`` — the slab
-    counts are exactly what the paper's Alg 1-2 choose for that budget,
-    so a pod with more memory per device models (and is) cheaper for
-    oversized volumes.  This is the one cost model shared by multi-pod
-    routing and the work-stealing benefit check; raises if the job is
-    unplannable under ``memory``."""
+    in units of an in-core iteration (= 1.0): the memoized
+    :attr:`~repro.core.plan.ExecutionPlan.step_passes` of the job's plan
+    — the slab counts are exactly what the paper's Alg 1-2 choose for
+    that budget, so a pod with more memory per device models (and is)
+    cheaper for oversized volumes.  This is the one cost model shared by
+    multi-pod routing and the work-stealing benefit check; raises if the
+    job is unplannable under ``memory``."""
     fp = estimate_job_footprint(job, memory)
-    if not fp.streams:
+    if not fp.streams:     # honours a forced job.mode="plain"
         return 1.0
-    plan_f = plan_forward(job.geo, job.n_angles, 1, memory)
-    plan_b = plan_backward(job.geo, job.n_angles, 1, memory)
-    return (plan_f.n_slabs + plan_b.n_slabs) / 2.0
+    return plan_execution(job.geo, job.n_angles, 1, memory).step_passes
 
 
 @dataclasses.dataclass
@@ -295,7 +294,12 @@ class Scheduler:
         # periodic snapshot's disk writes for unchanged parked jobs)
         self._snapshotted: Dict[str, tuple] = {}
         # job_id -> slab-pass multiplier / footprint under this pool's
-        # fixed budget (memos for the oft-polled load signals)
+        # fixed budget (memos for the oft-polled load signals).  Bounded:
+        # fleet routing prices every submission on every pod, so without
+        # a cap these would grow by one entry per job ever *considered*
+        # here, not just per job run here; eviction is cheap because the
+        # heavy planning underneath is memoized per geometry in
+        # repro.core.plan anyway
         self._passes_cache: Dict[str, float] = {}
         self._footprint_cache: Dict[str, JobFootprint] = {}
 
@@ -927,6 +931,18 @@ class Scheduler:
                           * run.passes)
             return total
 
+    #: per-scheduler pricing-memo bound (entries are tiny; the cap only
+    #: guards a long-lived server that prices millions of submissions)
+    _PRICING_CACHE_MAX = 4096
+
+    @staticmethod
+    def _cache_put(cache: Dict, key: str, value) -> None:
+        """Insert with FIFO eviction at the bound (python dicts preserve
+        insertion order, so the oldest — coldest — entry goes first)."""
+        if len(cache) >= Scheduler._PRICING_CACHE_MAX:
+            cache.pop(next(iter(cache)))
+        cache[key] = value
+
     def job_passes(self, job: ReconJob) -> float:
         """This job's slab-pass multiplier under the pool's budget (1.0
         when unplannable — the placement path reports that failure).
@@ -940,7 +956,7 @@ class Scheduler:
             passes = modeled_step_passes(job, self.pool.memory)
         except Exception:
             passes = 1.0
-        self._passes_cache[job.job_id] = passes
+        self._cache_put(self._passes_cache, job.job_id, passes)
         return passes
 
     def job_footprint(self, job: ReconJob) -> JobFootprint:
@@ -950,7 +966,7 @@ class Scheduler:
         fp = self._footprint_cache.get(job.job_id)
         if fp is None:
             fp = estimate_job_footprint(job, self.pool.memory)
-            self._footprint_cache[job.job_id] = fp
+            self._cache_put(self._footprint_cache, job.job_id, fp)
         return fp
 
     @staticmethod
@@ -1158,6 +1174,7 @@ def _job_payload(rec: JobRecord) -> Tuple[str, Dict, Dict[str, Any], int]:
         "params": job.params,
         "memory_hint_bytes": job.memory_hint_bytes,
         "mode": job.mode,
+        "backend": job.backend,
         "deadline_seconds": job.deadline_seconds,
         "seq": rec.seq,
         "status": rec.status.value,
@@ -1289,6 +1306,8 @@ def _load_job(job_dir: str,
                    priority=spec["priority"], params=spec["params"],
                    memory_hint_bytes=spec["memory_hint_bytes"],
                    mode=spec["mode"],
+                   # absent in pre-backend snapshots: None = auto-resolve
+                   backend=spec.get("backend"),
                    deadline_seconds=spec["deadline_seconds"],
                    job_id=spec["job_id"])
     return JobRecord(

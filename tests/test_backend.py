@@ -1,0 +1,280 @@
+"""Kernel-backend registry: ref/pallas parity across modes, shapes and
+dominances, plus the cached-jit dispatch regressions (no per-call
+retracing anywhere in the kernel path).
+
+Pallas runs in interpret mode on the CPU test rig; tolerances follow
+tests/test_kernels.py.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import backend as backend_mod
+from repro.core.backend import (available_backends, dispatch_cache_info,
+                                get_backend, resolve)
+from repro.core.geometry import ConeGeometry, circular_angles
+from repro.core.operator import CTOperator
+from repro.core.plan import plan, plan_cache_info
+from repro.core.splitting import MemoryModel
+from repro.kernels import ops
+
+RTOL, ATOL = 2e-4, 5e-3
+
+GEO = ConeGeometry.nice(16)
+ANGLES = circular_angles(8)          # mixed x/y dominance
+VOL = np.asarray(jax.random.normal(jax.random.PRNGKey(0), GEO.n_voxel),
+                 np.float32)
+PROJ = np.asarray(jax.random.normal(jax.random.PRNGKey(1),
+                                    (len(ANGLES),) + GEO.n_detector),
+                  np.float32)
+
+
+def _tiny_memory(geo, n_angles):
+    """Budget forcing the plan to split the volume (several slabs): about
+    a third of the volume plus room for the projection buffers."""
+    nz, ny, nx = geo.n_voxel
+    nv, nu = geo.n_detector
+    return MemoryModel(
+        device_bytes=(nz * ny * nx * 4) // 3 + 12 * n_angles * nv * nu,
+        usable_fraction=1.0)
+
+
+# --------------------------------------------------------------------------
+# registry basics
+# --------------------------------------------------------------------------
+
+def test_registry_resolve():
+    assert set(available_backends()) >= {"ref", "pallas", "auto"}
+    # auto picks per JAX backend: ref everywhere but TPU hosts
+    expect = "pallas" if jax.default_backend() == "tpu" else "ref"
+    assert resolve(None) == expect
+    assert resolve("auto") == expect
+    assert resolve("ref") == "ref"
+    with pytest.raises(ValueError, match="unknown kernel backend"):
+        resolve("cuda")
+    with pytest.raises(ValueError, match="unknown kernel backend"):
+        CTOperator(GEO, ANGLES, backend="nope")
+
+
+def test_operator_records_backend_and_plan():
+    op = CTOperator(GEO, ANGLES, backend="pallas")
+    assert op.backend_name == "pallas"
+    assert op.plan.n_angles == len(ANGLES)
+    assert not op.plan.streams
+    # default mode resolves and still runs
+    auto = CTOperator(GEO, ANGLES)
+    assert auto.backend_name in ("ref", "pallas")
+
+
+# --------------------------------------------------------------------------
+# parity: plain mode (mixed dominance, odd/uneven shapes)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [
+    (16, 16, 16),        # even cube
+    (18, 24, 24),        # uneven z vs square xy
+    (20, 25, 25),        # odd xy extent (block sizes fall back to divisors)
+])
+def test_plain_parity_shapes(shape):
+    geo = GEO.with_voxels(shape)
+    vol = np.asarray(jax.random.normal(jax.random.PRNGKey(2), shape),
+                     np.float32)
+    r = CTOperator(geo, ANGLES, backend="ref")
+    p = CTOperator(geo, ANGLES, backend="pallas")
+    np.testing.assert_allclose(p.A(vol), r.A(vol), rtol=RTOL, atol=ATOL)
+    for w in ("fdk", "pmatched", "none", "matched"):
+        np.testing.assert_allclose(p.At(PROJ, weight=w),
+                                   r.At(PROJ, weight=w),
+                                   rtol=RTOL, atol=ATOL)
+
+
+def test_plain_parity_single_dominance_subsets():
+    """All-x and all-y dominant angle subsets exercise both kernel paths
+    (the y-dominant one runs through the rotation trick)."""
+    from repro.core.geometry import dominant_axis_mask
+    mask = dominant_axis_mask(ANGLES)
+    for idx in (np.nonzero(mask)[0], np.nonzero(~mask)[0]):
+        sub = ANGLES[idx]
+        r = CTOperator(GEO, sub, backend="ref")
+        p = CTOperator(GEO, sub, backend="pallas")
+        np.testing.assert_allclose(p.A(VOL), r.A(VOL), rtol=RTOL, atol=ATOL)
+
+
+# --------------------------------------------------------------------------
+# parity: stream mode (pallas inside the out-of-core path)
+# --------------------------------------------------------------------------
+
+def test_stream_parity():
+    mem = _tiny_memory(GEO, len(ANGLES))
+    r = CTOperator(GEO, ANGLES, mode="stream", memory=mem, backend="ref")
+    p = CTOperator(GEO, ANGLES, mode="stream", memory=mem, backend="pallas")
+    assert r.plan.streams, "budget should force slab splitting"
+    assert r.plan is p.plan, "memoized plan must be shared across backends"
+    np.testing.assert_allclose(p.A(VOL), r.A(VOL), rtol=RTOL, atol=ATOL)
+    for w in ("fdk", "matched"):
+        np.testing.assert_allclose(p.At(PROJ, weight=w),
+                                   r.At(PROJ, weight=w),
+                                   rtol=RTOL, atol=ATOL)
+    # and the streamed pallas result matches the monolithic plain ref
+    plain = CTOperator(GEO, ANGLES, backend="ref")
+    np.testing.assert_allclose(p.A(VOL), plain.A(VOL), rtol=RTOL, atol=ATOL)
+
+
+def test_stream_parity_odd_shape():
+    shape = (18, 24, 24)
+    geo = GEO.with_voxels(shape)
+    vol = np.asarray(jax.random.normal(jax.random.PRNGKey(3), shape),
+                     np.float32)
+    mem = _tiny_memory(geo, len(ANGLES))
+    r = CTOperator(geo, ANGLES, mode="stream", memory=mem, backend="ref")
+    p = CTOperator(geo, ANGLES, mode="stream", memory=mem, backend="pallas")
+    assert r.plan.streams
+    np.testing.assert_allclose(p.A(vol), r.A(vol), rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(p.At(PROJ, weight="fdk"),
+                               r.At(PROJ, weight="fdk"),
+                               rtol=RTOL, atol=ATOL)
+
+
+# --------------------------------------------------------------------------
+# parity: dist mode (pallas inside shard_map)
+# --------------------------------------------------------------------------
+
+def test_dist_parity(host_mesh):
+    r = CTOperator(GEO, ANGLES, mode="dist", mesh=host_mesh, backend="ref")
+    p = CTOperator(GEO, ANGLES, mode="dist", mesh=host_mesh,
+                   backend="pallas")
+    plain = CTOperator(GEO, ANGLES, backend="ref")
+    with host_mesh:
+        np.testing.assert_allclose(p.A(VOL), r.A(VOL), rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(p.A(VOL), plain.A(VOL),
+                                   rtol=RTOL, atol=ATOL)
+        for w in ("fdk", "pmatched", "none", "matched"):
+            np.testing.assert_allclose(p.At(PROJ, weight=w),
+                                       r.At(PROJ, weight=w),
+                                       rtol=RTOL, atol=ATOL)
+
+
+# --------------------------------------------------------------------------
+# hypothesis sweep: random angle sets and uneven shapes, all modes
+# --------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HYP = True
+except ImportError:                      # pragma: no cover - CI installs it
+    _HYP = False
+
+
+if _HYP:
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(0, 1000), st.sampled_from([16, 18, 20]),
+           st.integers(4, 8))
+    def test_backend_parity_property(seed, nz, n_angles):
+        """Pallas == ref within tolerance for random rotations/shapes in
+        plain and (slab-forced) stream modes."""
+        rng = np.random.default_rng(seed)
+        geo = GEO.with_voxels((nz, 16, 16))
+        angles = rng.uniform(0, 2 * np.pi, n_angles).astype(np.float32)
+        vol = rng.standard_normal(geo.n_voxel).astype(np.float32)
+        proj = rng.standard_normal((n_angles,) + geo.n_detector) \
+            .astype(np.float32)
+        r = CTOperator(geo, angles, backend="ref")
+        p = CTOperator(geo, angles, backend="pallas")
+        np.testing.assert_allclose(p.A(vol), r.A(vol), rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(p.At(proj, weight="fdk"),
+                                   r.At(proj, weight="fdk"),
+                                   rtol=RTOL, atol=ATOL)
+        mem = _tiny_memory(geo, n_angles)
+        rs = CTOperator(geo, angles, mode="stream", memory=mem,
+                        backend="ref")
+        ps = CTOperator(geo, angles, mode="stream", memory=mem,
+                        backend="pallas")
+        np.testing.assert_allclose(ps.A(vol), rs.A(vol),
+                                   rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(ps.At(proj, weight="fdk"),
+                                   rs.At(proj, weight="fdk"),
+                                   rtol=RTOL, atol=ATOL)
+
+
+# --------------------------------------------------------------------------
+# cached-jit dispatch: no per-call rebuild / retrace
+# --------------------------------------------------------------------------
+
+def test_ops_wrappers_cache_compiled_fns():
+    """Regression for the per-call ``jax.jit(partial(...))`` bug: the
+    public kernel wrappers must reuse one compiled callable per static
+    key — the second call hits the cache and jax's jit cache stays at one
+    entry even when the angle *values* change."""
+    from repro.core.geometry import dominant_axis_mask
+    ops.clear_cache()
+    ax = ANGLES[np.nonzero(dominant_axis_mask(ANGLES))[0]]
+    ops.fp_ray_project(jnp.asarray(VOL), GEO, ax, slab_planes=4)
+    before = ops.cache_info()["fp"]
+    assert before.misses == 1
+    # same static key, different angle values: cache hit, no retrace
+    ops.fp_ray_project(jnp.asarray(VOL), GEO, ax + 0.01, slab_planes=4)
+    after = ops.cache_info()["fp"]
+    assert after.hits == before.hits + 1
+    assert after.misses == before.misses
+    compiled = ops._fp_compiled(GEO, 4, True)
+    assert compiled._cache_size() == 1
+
+    ops.bp_voxel_backproject(jnp.asarray(PROJ), GEO, ANGLES, z_block=4,
+                             angle_chunk=4)
+    ops.bp_voxel_backproject(jnp.asarray(PROJ), GEO, ANGLES + 0.01,
+                             z_block=4, angle_chunk=4)
+    bp = ops.cache_info()["bp"]
+    assert bp.misses == 1 and bp.hits >= 1
+    assert ops._bp_compiled(GEO, 4, 4, "fdk", True)._cache_size() == 1
+
+
+def test_backend_dispatch_table_caches():
+    """Two operators over the same geometry share one compiled callable
+    per (backend, kind, static args) key."""
+    backend_mod.clear_dispatch_cache()
+    bk = get_backend("ref")
+    f1 = bk.fp(GEO, xdom=True)
+    f2 = bk.fp(GEO, xdom=True)
+    assert f1 is f2
+    info = dispatch_cache_info()
+    assert info["hits"] >= 1 and info["misses"] >= 1
+    # distinct static args get distinct entries
+    assert bk.fp(GEO, xdom=False) is not f1
+    # two CTOperator instances share the table
+    a = CTOperator(GEO, ANGLES, backend="ref")
+    b = CTOperator(GEO, ANGLES, backend="ref")
+    assert a._plain_fp(ANGLES) is b._plain_fp(ANGLES)
+
+
+def test_plan_is_memoized_and_shared():
+    mem = MemoryModel(device_bytes=1 << 26, usable_fraction=1.0)
+    p1 = plan(GEO, 8, 1, mem)
+    before = plan_cache_info().hits
+    p2 = plan(GEO, 8, 1, mem)
+    assert p1 is p2
+    assert plan_cache_info().hits == before + 1
+    # the serving cost model goes through the same memo
+    from repro.serve.scheduler import estimate_job_footprint
+    from repro.serve.job import ReconJob
+    job = ReconJob("cgls", GEO, ANGLES, PROJ, n_iter=1)
+    estimate_job_footprint(job, mem)
+    hits = plan_cache_info().hits
+    estimate_job_footprint(job, mem)
+    assert plan_cache_info().hits > hits
+
+
+def test_plan_structure():
+    mem = _tiny_memory(GEO, len(ANGLES))
+    p = plan(GEO, len(ANGLES), 1, mem)
+    assert p.streams and p.step_passes > 1.0
+    assert p.slab_ranges[0][0] == 0
+    assert p.slab_ranges[-1][1] == GEO.n_voxel[0]
+    assert p.stream_bytes_on_device <= mem.usable
+    assert p.transfer_bytes == (p.transfer_bytes_forward
+                                + p.transfer_bytes_backward)
+    assert p.transfer_bytes_forward >= p.vol_bytes + p.proj_bytes
+    assert "streams=True" in p.describe()
+    big = plan(GEO, len(ANGLES), 1, MemoryModel())
+    assert not big.streams and big.step_passes == 1.0

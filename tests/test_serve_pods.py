@@ -581,3 +581,67 @@ def test_restore_lazy_job_without_ref_raises_then_succeeds(tmp_path):
     s2.run()
     np.testing.assert_array_equal(
         s2.result(jid), np.asarray(cgls(PROJ, GEO, ANGLES, n_iter=3)))
+
+
+# --------------------------------------------------------------------------
+# retired-pod compaction (bounded memory for long-lived autoscaled fleets)
+# --------------------------------------------------------------------------
+
+def _run_and_retire(mps, pod_name="p1"):
+    """Complete one job on each pod, then retire ``pod_name`` (idle)."""
+    jids = [mps.submit(_job(n_iter=1), pod=p.name) for p in mps.pods]
+    mps.run()
+    mps.remove_pod(pod_name)
+    return jids
+
+
+def test_retired_pod_kept_without_ttl():
+    mps = MultiPodScheduler(_pods(2), steal=False)
+    jids = _run_and_retire(mps)
+    assert [p.name for p in mps.retired_pods] == ["p1"]
+    mps.compact_retired()                  # no TTL: never folds
+    assert mps.retired_pods and not mps.retired_summaries
+    for jid in jids:                       # results stay answerable
+        assert mps.result(jid) is not None
+
+
+def test_retired_pod_compacts_after_ttl():
+    mps = MultiPodScheduler(_pods(2), steal=False,
+                            retired_pod_ttl_seconds=0.05)
+    jids = _run_and_retire(mps)
+    completed_before = mps.metrics().completed
+    # inside the TTL: still a full Pod, result answerable
+    assert mps.compact_retired() == 0
+    on_retired = [j for j in jids if mps.owner(j).name == "p1"]
+    assert on_retired and mps.result(on_retired[0]) is not None
+    time.sleep(0.06)
+    assert mps.compact_retired() == 1      # TTL expired: folded
+    assert not mps.retired_pods
+    [summ] = mps.retired_summaries
+    assert summ.name == "p1"
+    assert summ.job_statuses[on_retired[0]] == "completed"
+    # counters, busy clocks and the per-pod summary survive compaction
+    assert mps.metrics().completed == completed_before
+    s = mps.summary()
+    assert s["retired_pods"]["p1"]["compacted"] is True
+    assert s["retired_pods"]["p1"]["completed"] == len(on_retired)
+    assert s["completed"] == completed_before
+    # the result arrays do not: owner()/result() fail loudly, naming it
+    with pytest.raises(KeyError, match="compacted"):
+        mps.owner(on_retired[0])
+    with pytest.raises(KeyError, match="compacted"):
+        mps.result(on_retired[0])
+    with pytest.raises(KeyError, match="unknown job"):
+        mps.owner("never-submitted")
+
+
+def test_compaction_triggered_by_reporting_and_guards_names():
+    mps = MultiPodScheduler(_pods(2), steal=False,
+                            retired_pod_ttl_seconds=0.0)
+    _run_and_retire(mps)
+    # metrics()/summary() run the opportunistic compaction pass
+    mps.metrics()
+    assert not mps.retired_pods and len(mps.retired_summaries) == 1
+    # a compacted name stays reserved (records merged into fleet history)
+    with pytest.raises(ValueError, match="already used"):
+        mps.add_pod(Pod(PodSpec("p1", n_devices=1, memory=_mem(220))))

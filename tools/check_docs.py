@@ -5,9 +5,9 @@
    a relative target) in every tracked ``*.md`` file must resolve to an
    existing file or directory, anchors stripped.  External links
    (``http(s)://``, ``mailto:``) and pure anchors are ignored.
-2. **Doctests**: the fenced examples in ``README.md`` and
-   ``docs/serve.md`` run under :mod:`doctest` (same engine as
-   ``python -m doctest README.md docs/serve.md``) — documentation that
+2. **Doctests**: the fenced examples in ``README.md``,
+   ``docs/serve.md`` and ``docs/operators.md`` run under :mod:`doctest`
+   (same engine as ``python -m doctest <files>``) — documentation that
    stops executing fails the build instead of rotting.
 
 Usage::
@@ -29,7 +29,7 @@ _SKIP_DIRS = {".git", ".tmp", "__pycache__", "node_modules", ".pytest_cache"}
 _EXTERNAL = ("http://", "https://", "mailto:", "#")
 
 # files whose fenced examples must execute
-DOCTEST_FILES = ("README.md", "docs/serve.md")
+DOCTEST_FILES = ("README.md", "docs/serve.md", "docs/operators.md")
 
 
 def markdown_files(root: pathlib.Path):

@@ -29,6 +29,8 @@ Usage::
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
 
 import numpy as np
@@ -144,16 +146,44 @@ def main():
                     help="comma list of plain,stream,dist")
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: tiny shapes, 1 repeat, parity asserted")
+    ap.add_argument("--json", default="", dest="json_out",
+                    help="write the result rows (plus shape metadata) as "
+                         "machine-readable JSON here ('-' for stdout)")
+    ap.add_argument("--trace", default="",
+                    help="enable tracing and write a Chrome-trace JSON of "
+                         "the benchmark here (see docs/observability.md)")
     args = ap.parse_args()
+    if args.trace:
+        from repro import obs
+        obs.get_tracer().enable()
     if args.smoke:
-        rows = run(n=16, n_angles=8, repeats=1, modes=("plain", "stream"))
-        report(rows)
+        n, angles, repeats, modes = 16, 8, 1, ("plain", "stream")
+    else:
+        n, angles, repeats = args.n, args.angles, args.repeats
+        modes = tuple(args.modes.split(","))
+    rows = run(n=n, n_angles=angles, repeats=repeats, modes=modes)
+    report(rows)
+    if args.smoke:
         assert len(rows) == 4, "smoke expected plain+stream x ref+pallas"
         print("SMOKE OK: ref-vs-pallas parity held in plain + stream modes")
-        return
-    rows = run(n=args.n, n_angles=args.angles, repeats=args.repeats,
-               modes=tuple(args.modes.split(",")))
-    report(rows)
+    if args.json_out:
+        doc = {"bench": "operators",
+               "params": {"n": n, "angles": angles, "repeats": repeats,
+                          "modes": list(modes), "smoke": args.smoke,
+                          "jax_backend": jax.default_backend()},
+               "rows": rows}
+        if args.json_out == "-":
+            json.dump(doc, sys.stdout, indent=2)
+            print()
+        else:
+            with open(args.json_out, "w") as f:
+                json.dump(doc, f, indent=2)
+            print(f"# json -> {args.json_out}")
+    if args.trace:
+        from repro import obs
+        obs.write_chrome_trace(args.trace)
+        print(f"# chrome trace -> {args.trace} "
+              f"(load at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

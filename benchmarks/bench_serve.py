@@ -52,6 +52,8 @@ paper's per-GPU timelines (Fig 3/5).
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import tempfile
 import time
 from typing import Dict, List
@@ -264,7 +266,7 @@ def run_bursty(name: str, n_bursts: int, jobs_per_burst: int,
     return s
 
 
-def bursty_section(args, smoke: bool = False) -> None:
+def bursty_section(args, smoke: bool = False) -> Dict[str, Dict]:
     print("\nconfig,pods_peak,jobs,wall_s,jobs_per_sec_wall,pod_seconds,"
           "scale_up,scale_down,drained_verified")
     results = {}
@@ -287,19 +289,32 @@ def bursty_section(args, smoke: bool = False) -> None:
           f"{ps_ratio:.2f}x pod-seconds (target <= 0.7x); "
           f"{results['autoscaled'].get('drained_verified', 0)} "
           f"drained jobs verified bit-identical to undrained reruns")
+    return results
 
 
-def smoke_main() -> None:
+def smoke_main() -> Dict[str, Dict]:
     """Tiny end-to-end gate for CI: one threaded single-pod config and
     one 2-burst autoscaled trace must run to completion (the asserts
     inside run_config / run_bursty are the check)."""
     ns = argparse.Namespace(bursts=2, jobs_per_burst=3, gap_seconds=0.6,
                             max_pods=2, mp_budget_kib=800)
     run_config("warmup", make_workload(2, 0), 2, 220)
-    run_config("threaded", make_workload(4, 0), 2, 220, threaded=True)
+    threaded = run_config("threaded", make_workload(4, 0), 2, 220,
+                          threaded=True)
     run_config("mp-warmup", make_multipod_workload(2), 1, 800)
-    bursty_section(ns, smoke=True)
+    bursty = bursty_section(ns, smoke=True)
     print("SMOKE OK")
+    return {"configs": {"threaded": threaded}, "bursty": bursty}
+
+
+def _write_json(doc: Dict, path: str) -> None:
+    if path == "-":
+        json.dump(doc, sys.stdout, indent=2, default=list)
+        print()
+        return
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, default=list)
+    print(f"# json -> {path}")
 
 
 def main():
@@ -333,10 +348,28 @@ def main():
                     help="tiny end-to-end trace for CI: asserts the "
                          "serving + autoscaling paths run to completion, "
                          "prints SMOKE OK")
+    ap.add_argument("--json", default="", dest="json_out",
+                    help="write every section's summaries as machine-"
+                         "readable JSON here ('-' for stdout)")
+    ap.add_argument("--trace", default="",
+                    help="enable tracing and write a Chrome-trace JSON of "
+                         "the whole benchmark here (per-pod process "
+                         "tracks; see docs/observability.md)")
     args = ap.parse_args()
 
+    if args.trace:
+        from repro import obs
+        obs.get_tracer().enable()
+
     if args.smoke:
-        smoke_main()
+        doc = smoke_main()
+        if args.json_out:
+            _write_json({"bench": "serve", "smoke": True, **doc},
+                        args.json_out)
+        if args.trace:
+            from repro import obs
+            obs.write_chrome_trace(args.trace)
+            print(f"# chrome trace -> {args.trace}")
         return
 
     # Unmeasured warm-up pass: the scheduler's shared operator cache (and
@@ -375,6 +408,8 @@ def main():
     print(f"# threaded vs cooperative (WALL jobs/sec): "
           f"{threaded_speedup:.2f}x; p95 latency {p95_ratio:.2f}x lower")
 
+    doc = {"bench": "serve", "smoke": False, "configs": results,
+           "multipod": {}, "bursty": {}}
     if args.pods >= 2:
         n_mp_jobs = args.small + args.large
         # separate warm-up: the shared operator cache keys on the memory
@@ -400,9 +435,17 @@ def main():
               f"{mp['stealing']['stolen_in']} jobs stolen, "
               f"{mp['stealing'].get('stolen_verified', 0)} verified "
               f"bit-identical to unstolen runs")
+        doc["multipod"] = mp
 
     if args.bursts >= 1 and args.max_pods >= 2:
-        bursty_section(args)
+        doc["bursty"] = bursty_section(args)
+
+    if args.json_out:
+        _write_json(doc, args.json_out)
+    if args.trace:
+        from repro import obs
+        obs.write_chrome_trace(args.trace)
+        print(f"# chrome trace -> {args.trace}")
 
 
 if __name__ == "__main__":

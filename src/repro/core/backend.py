@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from . import projector as proj_mod
 from .geometry import ConeGeometry
 
@@ -71,9 +72,15 @@ class _DispatchTable:
             fn = self._fns.get(key)
             if fn is not None:
                 self.hits += 1
+                obs.incr("dispatch_hits")
                 return fn
             self.misses += 1
-        fn = build()
+        obs.incr("dispatch_misses")
+        # The "compile" span times the builder.  XLA compilation proper is
+        # lazy (first invocation), so it lands in whichever compute/init
+        # span makes that first call -- documented in docs/observability.md.
+        with obs.span("compile", "compile", key=str(key[:2])):
+            fn = build()
         with self._lock:
             return self._fns.setdefault(key, fn)
 

@@ -30,10 +30,37 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .. import obs
 from .compat import axis_size as compat_axis_size, shard_map
 from .geometry import ConeGeometry
 from .projector import (_joseph_xdom_one_angle, _rotate_vol_90,
                         backproject_voxel)
+
+
+def _traced_dist(fn, op: str, mesh: Mesh, data_axis: str, model_axis: str,
+                 **extra):
+    """Wrap a jitted sharded op with a host-side compute span.
+
+    Spans cannot be opened *inside* shard_map (the body is traced code),
+    so each call gets one span carrying the shard layout; with tracing
+    enabled the wrapper blocks on the result so the span is honest
+    compute time (when disabled the raw async-dispatch fn runs —
+    zero overhead, unchanged overlap behaviour)."""
+    n_data = mesh.shape[data_axis]
+    n_model = mesh.shape[model_axis]
+
+    def traced(*args):
+        if not obs.enabled():
+            return fn(*args)
+        with obs.span(op, "compute", op=op, data_shards=n_data,
+                      model_shards=n_model, **extra):
+            out = fn(*args)
+            for leaf in jax.tree_util.tree_leaves(out):
+                block = getattr(leaf, "block_until_ready", None)
+                if block is not None:
+                    block()
+        return out
+    return traced
 
 
 def _joseph_any_angle(vol, vol_rot, geo: ConeGeometry, theta, z0):
@@ -132,7 +159,8 @@ def dist_forward_project(mesh: Mesh, geo: ConeGeometry,
         body, mesh=mesh,
         in_specs=(P(model_axis, None, None), P(data_axis)),
         out_specs=P(data_axis, None, None), check_vma=False)
-    return jax.jit(fn)
+    return _traced_dist(jax.jit(fn), "dist_fp", mesh, data_axis,
+                        model_axis, reduce=reduce)
 
 
 def dist_backproject(mesh: Mesh, geo: ConeGeometry, weight: str = "fdk",
@@ -163,7 +191,8 @@ def dist_backproject(mesh: Mesh, geo: ConeGeometry, weight: str = "fdk",
         body, mesh=mesh,
         in_specs=(P(data_axis, None, None), P(data_axis)),
         out_specs=P(model_axis, None, None), check_vma=False)
-    return jax.jit(fn)
+    return _traced_dist(jax.jit(fn), "dist_bp", mesh, data_axis,
+                        model_axis, weight=weight)
 
 
 def dist_backproject_matched(mesh: Mesh, geo: ConeGeometry,
@@ -197,7 +226,8 @@ def dist_backproject_matched(mesh: Mesh, geo: ConeGeometry,
         body, mesh=mesh,
         in_specs=(P(data_axis, None, None), P(data_axis)),
         out_specs=P(model_axis, None, None), check_vma=False)
-    return jax.jit(fn)
+    return _traced_dist(jax.jit(fn), "dist_bp_matched", mesh, data_axis,
+                        model_axis)
 
 
 def pad_angles(angles: np.ndarray, multiple: int):

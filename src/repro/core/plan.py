@@ -169,9 +169,24 @@ def plan(geo: ConeGeometry, n_angles: int, n_devices: int = 1,
 
     Raises :class:`MemoryError` (not cached) when even one image plane
     plus the projection buffers exceed the budget."""
-    return _plan_cached(geo, int(n_angles), int(n_devices),
-                        memory or MemoryModel(),
-                        int(angle_chunk_fp), int(angle_chunk_bp))
+    from .. import obs
+    if not obs.enabled():
+        return _plan_cached(geo, int(n_angles), int(n_devices),
+                            memory or MemoryModel(),
+                            int(angle_chunk_fp), int(angle_chunk_bp))
+    # Span only the memo *misses*: hits are sub-microsecond dict lookups
+    # and the serving layer's load polling would flood the ring with them.
+    # An abandoned begin() handle costs nothing (miss check is advisory
+    # under concurrent planners).
+    misses0 = _plan_cached.cache_info().misses
+    h = obs.begin("plan", "plan", n_angles=int(n_angles),
+                  n_devices=int(n_devices))
+    out = _plan_cached(geo, int(n_angles), int(n_devices),
+                       memory or MemoryModel(),
+                       int(angle_chunk_fp), int(angle_chunk_bp))
+    if _plan_cached.cache_info().misses != misses0:
+        obs.end(h)
+    return out
 
 
 def plan_cache_info():

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from .backend import get_backend
 from .geometry import ConeGeometry, dominant_axis_mask
 from .plan import ExecutionPlan
@@ -60,15 +61,37 @@ class Timeline:
         return f"Timeline({dict(self.bins)})"
 
 
-def _timed(tl: Optional[Timeline], name: str):
-    class _Ctx:
-        def __enter__(self):
-            self.t0 = time.monotonic()
+# Timeline bin -> obs span category (paper Fig 9 bins -> ISSUE 6 phases).
+_BIN_CAT = {"staging": "h2d", "compute": "compute", "other_memory": "d2h"}
 
-        def __exit__(self, *a):
-            if tl is not None:
-                tl.add(name, time.monotonic() - self.t0)
-    return _Ctx()
+
+class _Timed:
+    """Times one block into a Timeline bin *and* an obs span.
+
+    The obs span (category from ``_BIN_CAT``, attrs like slab/device/op)
+    is only materialised when the process tracer is enabled, so the
+    streaming hot loop keeps its zero-overhead default path."""
+    __slots__ = ("tl", "name", "sp", "t0")
+
+    def __init__(self, tl, name, attrs, emit_span=True):
+        self.tl, self.name = tl, name
+        self.sp = (obs.span(name, _BIN_CAT.get(name, name), **attrs)
+                   if emit_span else obs.trace._NULL)
+
+    def __enter__(self):
+        self.sp.__enter__()
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *a):
+        if self.tl is not None:
+            self.tl.add(self.name, time.monotonic() - self.t0)
+        self.sp.__exit__(*a)
+        return False
+
+
+def _timed(tl: Optional[Timeline], name: str, _span: bool = True, **attrs):
+    return _Timed(tl, name, attrs, emit_span=_span)
 
 
 # --------------------------------------------------------------------------
@@ -126,17 +149,30 @@ def stream_forward(vol: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
         z0, z1 = plan.slab_ranges[k]
         return jax.device_put(jnp.asarray(vol[z0:z1]), dev)
 
-    with _timed(timeline, "staging"):
-        current = {d: put_slab(0, devices[d]) for d in dev_acc}
+    current = {}
+    for d in dev_acc:
+        with _timed(timeline, "staging", op="fp", slab=0, device=d):
+            current[d] = put_slab(0, devices[d])
 
     for k in range(plan.n_slabs):
         z0, z1 = plan.slab_ranges[k]
         nxt = None
         if k + 1 < plan.n_slabs:
-            with _timed(timeline, "staging"):
-                nxt = {d: put_slab(k + 1, devices[d]) for d in dev_acc}
-        with _timed(timeline, "compute"):
+            nxt = {}
+            for d in dev_acc:
+                with _timed(timeline, "staging", op="fp", slab=k + 1,
+                            device=d):
+                    nxt[d] = put_slab(k + 1, devices[d])
+        # Per-device compute spans use begin/end: the work for every
+        # device is *queued* first (async dispatch = the paper's overlap),
+        # then each device's span closes when its accumulator is ready.
+        # The Timeline bin wraps the whole block; the obs spans are the
+        # per-device ones (``_span=False`` avoids double-counted compute).
+        with _timed(timeline, "compute", _span=False):
+            handles = {}
             for d, groups in dev_acc.items():
+                handles[d] = obs.begin("fp_slab", "compute", op="fp",
+                                       slab=k, device=d)
                 for key, g in groups.items():
                     fp = bk.fp(geo, xdom=(key == "x"))
                     slab = current[d]
@@ -144,10 +180,11 @@ def stream_forward(vol: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
             for d, groups in dev_acc.items():
                 for g in groups.values():
                     g["acc"].block_until_ready()
+                obs.end(handles[d])
         current = nxt if nxt is not None else current
 
-    with _timed(timeline, "other_memory"):
-        for d, groups in dev_acc.items():
+    for d, groups in dev_acc.items():
+        with _timed(timeline, "other_memory", op="fp", device=d):
             for g in groups.values():
                 out[g["idx"]] = np.asarray(g["acc"])
     return out
@@ -189,13 +226,14 @@ def stream_backward(proj: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
 
     # Slab queue per device (paper: "a queue of image pieces is added").
     for k, (z0, z1) in enumerate(plan.slab_ranges):
-        dev = devices[plan.device_of_slab[k]]
+        d = plan.device_of_slab[k]
+        dev = devices[d]
         bp = None if weight == "matched" else bk.bp(geo, planes=z1 - z0,
                                                     weight=weight)
         acc = jax.device_put(jnp.zeros((z1 - z0,) + tuple(geo.n_voxel[1:]),
                                        jnp.float32), dev)
         # prefetch chunk 0; then stream with one-chunk lookahead
-        with _timed(timeline, "staging"):
+        with _timed(timeline, "staging", op="bp", slab=k, chunk=0, device=d):
             cur = (jax.device_put(jnp.asarray(proj[chunks[0][0]:chunks[0][1]]), dev),
                    jax.device_put(jnp.asarray(angles[chunks[0][0]:chunks[0][1]]), dev),
                    chunks[0])
@@ -203,11 +241,13 @@ def stream_backward(proj: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
             nxt = None
             if ci + 1 < len(chunks):
                 n0, n1 = chunks[ci + 1]
-                with _timed(timeline, "staging"):
+                with _timed(timeline, "staging", op="bp", slab=k,
+                            chunk=ci + 1, device=d):
                     nxt = (jax.device_put(jnp.asarray(proj[n0:n1]), dev),
                            jax.device_put(jnp.asarray(angles[n0:n1]), dev),
                            chunks[ci + 1])
-            with _timed(timeline, "compute"):
+            with _timed(timeline, "compute", op="bp", slab=k, chunk=ci,
+                        device=d):
                 if weight == "matched":
                     # exact adjoint: per-dominance vjp of the slab FP
                     m = xmask[c0:c1]
@@ -224,6 +264,6 @@ def stream_backward(proj: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
                 acc.block_until_ready()
             if nxt is not None:
                 cur = nxt
-        with _timed(timeline, "other_memory"):
+        with _timed(timeline, "other_memory", op="bp", slab=k, device=d):
             vol_out[z0:z1] = np.asarray(acc)
     return vol_out

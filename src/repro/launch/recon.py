@@ -17,6 +17,13 @@ own subdirectory, a ``fleet.json`` manifest records the membership, and
 a re-run rebuilds the whole fleet with
 ``MultiPodScheduler.restore_fleet`` and resumes bit-identically.
 
+``--trace out.json`` enables the process tracer
+(:mod:`repro.obs`) for the run and writes a Chrome-trace JSON —
+load it at https://ui.perfetto.dev to see the per-slab
+H2D / compute / D2H spans on per-device tracks (the paper's Fig 3/5
+timelines); ``--prometheus out.prom`` writes a Prometheus-style text
+snapshot of the phase totals and counters at exit.
+
 Numerics are identical to the old monolithic driver: the scheduler steps
 the same algorithm iterators the monolithic entry points wrap.
 
@@ -51,7 +58,34 @@ def reconstruct(algname: str = "cgls", n: int = 64, n_angles: int = 96,
                 iters: int = 10, mode: str = "auto",
                 device_bytes: int = 0, verbose: bool = True,
                 snapshot_dir: str = "", pods: int = 1,
-                backend: str = "auto"):
+                backend: str = "auto", trace: str = "",
+                prometheus: str = ""):
+    if trace or prometheus:
+        from repro import obs
+        obs.get_tracer().enable()
+        try:
+            return _reconstruct(algname, n, n_angles, iters, mode,
+                                device_bytes, verbose, snapshot_dir,
+                                pods, backend)
+        finally:
+            # written even on a preempted exit: the partial timeline is
+            # exactly what you want to look at after a preemption
+            if trace:
+                obs.write_chrome_trace(trace)
+                if verbose:
+                    print(f"[recon] chrome trace -> {trace} "
+                          f"(load at https://ui.perfetto.dev)")
+            if prometheus:
+                with open(prometheus, "w") as f:
+                    f.write(obs.prometheus_snapshot())
+                if verbose:
+                    print(f"[recon] prometheus snapshot -> {prometheus}")
+    return _reconstruct(algname, n, n_angles, iters, mode, device_bytes,
+                        verbose, snapshot_dir, pods, backend)
+
+
+def _reconstruct(algname, n, n_angles, iters, mode, device_bytes,
+                 verbose, snapshot_dir, pods, backend):
     geo = ConeGeometry.nice(n)
     job_backend = None if backend == "auto" else backend
     vol, angles, proj = make_ct_dataset(geo, n_angles)
@@ -200,10 +234,18 @@ def main():
                          "pods (multi-pod routing + work stealing; see "
                          "docs/serve.md); works with --snapshot-dir for "
                          "fleet-level durable resume")
+    ap.add_argument("--trace", default="",
+                    help="enable tracing and write a Chrome-trace JSON "
+                         "here (open at https://ui.perfetto.dev; see "
+                         "docs/observability.md)")
+    ap.add_argument("--prometheus", default="",
+                    help="write a Prometheus-style text snapshot of the "
+                         "phase totals and counters here at exit")
     args = ap.parse_args()
     reconstruct(args.alg, args.n, args.angles, args.iters, args.mode,
                 args.device_bytes, snapshot_dir=args.snapshot_dir,
-                pods=args.pods, backend=args.backend)
+                pods=args.pods, backend=args.backend, trace=args.trace,
+                prometheus=args.prometheus)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,20 @@
+"""Observability: process-wide tracing, fleet event log, exporters.
+
+See :mod:`repro.obs.trace` for the span recorder and the Chrome-trace /
+Prometheus exporters, :mod:`repro.obs.events` for the fleet event
+taxonomy, and ``docs/observability.md`` for the user guide.
+"""
+
+from .events import FLEET_EVENT_KINDS, fleet_event, fleet_event_log
+from .trace import (PHASE_CATEGORIES, InstantEvent, Span, SpanHandle,
+                    Tracer, begin, chrome_trace, context, enabled, end,
+                    event, get_tracer, incr, prometheus_snapshot,
+                    set_tracer, span, write_chrome_trace)
+
+__all__ = [
+    "FLEET_EVENT_KINDS", "fleet_event", "fleet_event_log",
+    "PHASE_CATEGORIES", "InstantEvent", "Span", "SpanHandle", "Tracer",
+    "begin", "chrome_trace", "context", "enabled", "end", "event",
+    "get_tracer", "incr", "prometheus_snapshot", "set_tracer", "span",
+    "write_chrome_trace",
+]

@@ -64,7 +64,8 @@ import itertools
 import time
 from typing import Callable, List, Optional, Sequence, Tuple
 
-from .pool import MultiPodScheduler, Pod, PodSpec
+from ..obs import fleet_event
+from .pool import DuplicatePodName, MultiPodScheduler, Pod, PodSpec
 from .scheduler import estimate_job_footprint
 from .steal import drain_pod, fleet_units, pod_load
 
@@ -250,7 +251,18 @@ class Autoscaler:
     # ---- scale up ----------------------------------------------------------
 
     def _next_pod(self, template_index: Optional[int] = None) -> Pod:
-        """Instantiate the next template as a uniquely-named pod."""
+        """Instantiate the next template as a uniquely-named pod.
+
+        Only :class:`~repro.serve.pool.DuplicatePodName` retries (a name
+        collision, e.g. after a fleet restore re-seeded the counter's
+        namespace, is fixed by the next counter value).  Any other error
+        — a bad template the Pod constructor rejects, a scheduler init
+        failure — propagates: this runs *inside the fleet lock*, and a
+        blanket ``except ValueError: continue`` would spin forever
+        there, wedging every submit/steal/snapshot in the process.
+        The manifest write is deferred (``flush_manifest=False``)
+        because the caller holds the fleet lock; the caller flushes
+        after releasing it."""
         while True:
             k = next(self._spawned)
             spec = self.templates[(template_index if template_index
@@ -260,8 +272,9 @@ class Autoscaler:
             try:
                 return self.mps.add_pod(
                     Pod(dataclasses.replace(spec, name=name),
-                        guard=self.guard))
-            except ValueError:
+                        guard=self.guard),
+                    flush_manifest=False)
+            except DuplicatePodName:
                 continue    # name collision (e.g. after restore): next k
 
     def _scale_up(self, now: float, load: float,
@@ -278,11 +291,16 @@ class Autoscaler:
                     >= self.policy.max_pods:
                 return None
             pod = self._next_pod(template_index)
+        # the add above only *marked* the manifest dirty (we held the
+        # fleet lock; disk I/O under it would stall the whole fleet) —
+        # write it now the lock is released
+        self.mps._flush_manifest()
         self.mps.record_scale_event("up")
         self._last_event = now
         self._above_since = None
         ev = ScaleEvent(now, "up", pod.name, load,
                         len(self.mps.pods_snapshot()))
+        fleet_event("scale-up", pod=pod.name, load=load, n_pods=ev.n_pods)
         self.events.append(ev)
         return ev
 
@@ -348,5 +366,7 @@ class Autoscaler:
         self._below_since = None
         ev = ScaleEvent(now, "down", victim.name, load,
                         len(self.mps.pods_snapshot()))
+        fleet_event("scale-down", pod=victim.name, load=load,
+                    n_pods=ev.n_pods, moved=len(moved))
         self.events.append(ev)
         return ev

@@ -22,6 +22,7 @@ from typing import Any, Dict, Optional, Sequence
 import jax
 import numpy as np
 
+from .. import obs
 from ..core.algorithms.stepwise import (checkpoint_state, get_algorithm,
                                         restore_state)
 from ..core.operator import CTOperator
@@ -86,14 +87,33 @@ class JobExecutor:
 
     def __init__(self, job: ReconJob, mode: str,
                  memory: Optional[MemoryModel] = None,
-                 devices: Optional[Sequence] = None):
+                 devices: Optional[Sequence] = None,
+                 labels: Optional[Dict[str, Any]] = None):
         self.job = job
         self.alg = get_algorithm(job.algorithm)
         self.mode = mode
         self.memory = memory or MemoryModel()
         self.devices = devices
+        # ambient trace identity (pod name, device slot) merged into every
+        # span this executor's work opens — streaming-loop spans inherit
+        # it without new plumbing through the operator call signatures
+        self.labels = {k: v for k, v in (labels or {}).items()
+                       if v is not None}
         self._state = None
         self.init_seconds = 0.0
+        # span-category seconds from the most recent start()/step(),
+        # drained by the scheduler into ServeMetrics.phase_seconds
+        self._phase_delta: Dict[str, float] = {}
+
+    def take_phase_seconds(self) -> Dict[str, float]:
+        out, self._phase_delta = self._phase_delta, {}
+        return out
+
+    @staticmethod
+    def _phase_diff(after: Dict[str, float],
+                    before: Dict[str, float]) -> Dict[str, float]:
+        return {k: v - before.get(k, 0.0) for k, v in after.items()
+                if v - before.get(k, 0.0) > 0.0}
 
     @property
     def total_steps(self) -> int:
@@ -113,25 +133,33 @@ class JobExecutor:
 
     def start(self, checkpoint: Optional[Dict[str, Any]] = None) -> None:
         """Resolve data, build the operator, init (or restore) the state."""
+        tracer = obs.get_tracer()
+        before = (tracer.thread_phase_seconds() if tracer.enabled else None)
         t0 = time.monotonic()
-        proj = self.job.resolve_projections()
-        op = _get_operator(self.job.geo, self.job.angles, self.mode,
-                           self.alg.default_bp_weight, self.memory,
-                           self.devices, backend=self.job.backend)
-        params = dict(self.job.params)
-        if checkpoint is not None:
-            # feed checkpointed scalars back through init so restore does
-            # not recompute them (e.g. FISTA's power-iteration L)
-            for k in self.alg.resume_params:
-                if k in checkpoint:
-                    params[k] = checkpoint[k]
-        state = self.alg.init(proj, self.job.geo, self.job.angles, op=op,
-                              **params)
-        if checkpoint is not None:
-            state = restore_state(self.alg, state, checkpoint)
-        _block_on_state(state)
+        with obs.context(job=self.job.job_id, **self.labels), \
+                obs.span("init", "init", alg=self.job.algorithm,
+                         mode=self.mode):
+            proj = self.job.resolve_projections()
+            op = _get_operator(self.job.geo, self.job.angles, self.mode,
+                               self.alg.default_bp_weight, self.memory,
+                               self.devices, backend=self.job.backend)
+            params = dict(self.job.params)
+            if checkpoint is not None:
+                # feed checkpointed scalars back through init so restore
+                # does not recompute them (e.g. FISTA's power-iteration L)
+                for k in self.alg.resume_params:
+                    if k in checkpoint:
+                        params[k] = checkpoint[k]
+            state = self.alg.init(proj, self.job.geo, self.job.angles,
+                                  op=op, **params)
+            if checkpoint is not None:
+                state = restore_state(self.alg, state, checkpoint)
+            _block_on_state(state)
         self._state = state
         self.init_seconds = time.monotonic() - t0
+        if before is not None:
+            self._phase_delta = self._phase_diff(
+                tracer.thread_phase_seconds(), before)
 
     def step(self) -> int:
         """Advance one outer iteration; returns iterations done so far.
@@ -141,8 +169,27 @@ class JobExecutor:
         honest compute time."""
         if self._state is None:
             raise RuntimeError(f"{self.job.job_id}: step() before start()")
-        self._state = self.alg.step(self._state)
-        _block_on_state(self._state)
+        tracer = obs.get_tracer()
+        if not tracer.enabled:
+            self._state = self.alg.step(self._state)
+            _block_on_state(self._state)
+            return self.iterations_done
+        # Trace path: ambient job/pod/device context tags every span the
+        # operators open underneath.  Streamed jobs emit their own
+        # h2d/compute/d2h leaf spans; plain (in-core) steps are wrapped in
+        # one compute span so phase attribution covers them too.
+        before = tracer.thread_phase_seconds()
+        with obs.context(job=self.job.job_id, **self.labels):
+            if self.mode == "plain":
+                with obs.span("step", "compute", alg=self.job.algorithm,
+                              it=self.iterations_done):
+                    self._state = self.alg.step(self._state)
+                    _block_on_state(self._state)
+            else:
+                self._state = self.alg.step(self._state)
+                _block_on_state(self._state)
+        self._phase_delta = self._phase_diff(
+            tracer.thread_phase_seconds(), before)
         return self.iterations_done
 
     def checkpoint(self) -> Dict[str, Any]:

@@ -52,12 +52,22 @@ class ServeMetrics:
     latencies: List[float] = dataclasses.field(default_factory=list)
     queue_waits: List[float] = dataclasses.field(default_factory=list)
 
+    # -- phase-attributed seconds (h2d / compute / d2h / compile / ...),
+    #    fed from the obs tracer's span categories by the executor; empty
+    #    unless tracing was enabled during the run (zero-overhead default)
+    phase_seconds: Dict[str, float] = dataclasses.field(default_factory=dict)
+
     wall_start: Optional[float] = None
     wall_end: Optional[float] = None
 
     def record_step(self, seconds: float) -> None:
         self.steps += 1
         self.step_seconds.append(seconds)
+
+    def record_phases(self, phases: Dict[str, float]) -> None:
+        """Fold one step's (or init's) span-category seconds in."""
+        for k, v in phases.items():
+            self.phase_seconds[k] = self.phase_seconds.get(k, 0.0) + v
 
     def record_pods_online(self, t: float, count: int) -> None:
         self.pods_online.append((t, count))
@@ -106,6 +116,7 @@ class ServeMetrics:
             "pods_online": list(self.pods_online),
             "pods_online_peak": (max(n for _, n in self.pods_online)
                                  if self.pods_online else 0),
+            "phase_seconds": dict(self.phase_seconds),
         }
         if device_busy is not None:
             makespan = max(device_busy) if device_busy else 0.0
@@ -141,6 +152,7 @@ def merge_metrics(parts: List["ServeMetrics"]) -> "ServeMetrics":
         out.scale_down_events += m.scale_down_events
         out.pod_seconds += m.pod_seconds
         out.pods_online.extend(m.pods_online)
+        out.record_phases(m.phase_seconds)
         out.step_seconds.extend(m.step_seconds)
         out.latencies.extend(m.latencies)
         out.queue_waits.extend(m.queue_waits)

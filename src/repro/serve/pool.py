@@ -52,6 +52,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from ..core.algorithms.stepwise import get_algorithm
 from ..core.splitting import MemoryModel
+from ..obs import fleet_event
 from .job import JobRecord, ReconJob
 from .metrics import ServeMetrics, merge_metrics
 from .scheduler import DevicePool, Scheduler, _atomic_write_json
@@ -60,6 +61,14 @@ from .steal import (StealPolicy, effective_units, fleet_units, pod_load,
 
 #: membership manifest at the root of a fleet snapshot directory
 FLEET_MANIFEST = "fleet.json"
+
+
+class DuplicatePodName(ValueError):
+    """A pod name is already used by a live or retired pod.
+
+    Distinct from plain :class:`ValueError` so retry loops that probe
+    for a free name (``Autoscaler._next_pod``) can catch *exactly* the
+    collision and surface every other admission failure."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,7 +99,8 @@ class Pod:
             max_jobs_per_device=spec.max_jobs_per_device,
             policy=spec.placement)
         self.scheduler = Scheduler(pool=self.pool, guard=guard,
-                                   snapshot_dir=snapshot_dir)
+                                   snapshot_dir=snapshot_dir,
+                                   name=spec.name)
         # set by the autoscaler while the pod is being emptied: routing
         # and stealing skip a draining pod, so no new work lands on it
         self.draining = False
@@ -249,6 +259,12 @@ class MultiPodScheduler:
         self._manifest_lock = threading.Lock()
         self._manifest_gen = 0        # bumped under the fleet lock
         self._manifest_written = 0    # guarded by the manifest lock
+        # latest captured-but-unwritten (gen, spec); guarded by the
+        # manifest lock.  Paths that mutate membership while already
+        # holding the fleet lock re-entrantly (autoscaler scale-up from
+        # submit) only *mark* and leave the flush to their outermost
+        # caller, so the disk write never runs with the fleet lock held.
+        self._pending_manifest: Optional[Tuple[int, Dict]] = None
         self.pods: List[Pod] = []
         self.retired_pods: List[Pod] = []
         self.retired_pod_ttl_seconds = retired_pod_ttl_seconds
@@ -305,26 +321,35 @@ class MultiPodScheduler:
                 return [p for p in self.pods if not p.draining]
             return list(self.pods)
 
-    def add_pod(self, pod: Pod) -> Pod:
+    def add_pod(self, pod: Pod, flush_manifest: bool = True) -> Pod:
         """Grow the fleet at runtime (the autoscaler's scale-up).  The
         new pod is immediately visible to routing and stealing; a
         threaded fleet driver picks it up on its next membership sync.
         Names must be unique across live *and* retired pods (retired
         pods keep their completed-job records and their slice of the
-        pod-seconds ledger)."""
+        pod-seconds ledger) — collisions raise :class:`DuplicatePodName`.
+
+        ``flush_manifest=False`` defers the manifest disk write to a
+        later :meth:`_flush_manifest` — callers already holding the
+        (re-entrant) fleet lock, like the autoscaler's scale-up, pass
+        this so the I/O never runs with the lock held."""
         with self._fleet_lock:
             taken = {p.name for p in self.pods}
             taken.update(p.name for p in self.retired_pods)
             taken.update(s.name for s in self.retired_summaries)
             if pod.name in taken:
-                raise ValueError(f"pod name {pod.name!r} already used")
+                raise DuplicatePodName(
+                    f"pod name {pod.name!r} already used")
             self._admit_pod(pod, time.monotonic())
             self.fleet_metrics.record_pods_online(time.monotonic(),
                                                   len(self.pods))
+            fleet_event("pod-add", pod=pod.name, n_pods=len(self.pods))
+            self._mark_manifest_dirty()
         # manifest I/O outside the lock: scale_up_for runs add_pod from
         # inside `submit`, and a disk write under the fleet lock would
         # serialize every tenant's submission behind it
-        self._write_fleet_manifest()
+        if flush_manifest:
+            self._flush_manifest()
         return pod
 
     def remove_pod(self, pod: Union[str, Pod]) -> Pod:
@@ -348,8 +373,11 @@ class MultiPodScheduler:
             if target.scheduler.metrics.wall_end is None:
                 target.scheduler.metrics.wall_end = now
             self.fleet_metrics.record_pods_online(now, len(self.pods))
+            fleet_event("pod-remove", pod=target.name,
+                        n_pods=len(self.pods))
+            self._mark_manifest_dirty()
         self.compact_retired()
-        self._write_fleet_manifest()   # I/O outside the lock (see add_pod)
+        self._flush_manifest()         # I/O outside the lock (see add_pod)
         return target
 
     def compact_retired(self, now: Optional[float] = None) -> int:
@@ -464,6 +492,9 @@ class MultiPodScheduler:
                                  key=lambda p: p.pool.memory.usable)
             jid = target.scheduler.submit(job)
             self._home[jid] = target.name
+        # an autoscaler scale-up above only *marked* the fleet manifest
+        # dirty (we held the fleet lock); write it now the lock is free
+        self._flush_manifest()
         return jid
 
     # ---- lookups across pods ----------------------------------------------
@@ -630,34 +661,58 @@ class MultiPodScheduler:
     # device count and budget — on a real cluster, re-derive the mesh and
     # pass fresh pods instead if device pinning matters.
 
-    def _write_fleet_manifest(self) -> None:
+    def _mark_manifest_dirty(self) -> None:
+        """Capture the current membership as the pending manifest.
+
+        Called with the fleet lock held (cheap: no I/O).  The lock order
+        is fleet -> manifest only; :meth:`_flush_manifest` never takes
+        the fleet lock, so there is no deadlock against a concurrent
+        writer."""
         if self.snapshot_root is None:
             return
-        # capture under the fleet lock, write under the manifest lock —
-        # never both at once (a submit thread already holding the fleet
-        # lock reaches here via scale_up_for, so nesting the two would
-        # deadlock against a concurrent writer)
-        with self._fleet_lock:
-            self._manifest_gen += 1
-            gen = self._manifest_gen
-            spec = {
-                "pods": [{
-                    "name": p.name,
-                    "n_devices": p.n_devices,
-                    "device_bytes": p.pool.memory.device_bytes,
-                    "usable_fraction": p.pool.memory.usable_fraction,
-                    "max_jobs_per_device": p.spec.max_jobs_per_device,
-                    "placement": p.spec.placement,
-                } for p in self.pods],
-                "homes": dict(self._home),
-            }
+        self._manifest_gen += 1
+        spec = {
+            "pods": [{
+                "name": p.name,
+                "n_devices": p.n_devices,
+                "device_bytes": p.pool.memory.device_bytes,
+                "usable_fraction": p.pool.memory.usable_fraction,
+                "max_jobs_per_device": p.spec.max_jobs_per_device,
+                "placement": p.spec.placement,
+            } for p in self.pods],
+            "homes": dict(self._home),
+        }
         with self._manifest_lock:
+            self._pending_manifest = (self._manifest_gen, spec)
+
+    def _flush_manifest(self) -> None:
+        """Write the pending manifest (if any) to disk.
+
+        Must be called with the fleet lock *released* — every scale-up
+        path (public ``add_pod``, ``Autoscaler.step``, ``submit`` via
+        ``scale_up_for``) reaches here only after its last fleet-lock
+        exit, so the disk write never serializes membership or
+        submissions.  Generation-ordered: a flush that lost the race to
+        a newer membership write skips (no stale overwrite)."""
+        if self.snapshot_root is None:
+            return
+        with self._manifest_lock:
+            pending = self._pending_manifest
+            self._pending_manifest = None
+            if pending is None:
+                return
+            gen, spec = pending
             if gen < self._manifest_written:
                 return        # a newer membership already landed on disk
             self._manifest_written = gen
             os.makedirs(self.snapshot_root, exist_ok=True)
             _atomic_write_json(
                 os.path.join(self.snapshot_root, FLEET_MANIFEST), spec)
+
+    def _write_fleet_manifest(self) -> None:
+        with self._fleet_lock:
+            self._mark_manifest_dirty()
+        self._flush_manifest()
 
     def snapshot_fleet(self, root: Optional[str] = None) -> int:
         """Persist the fleet durably: membership manifest + every pod's

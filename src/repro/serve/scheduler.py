@@ -80,6 +80,7 @@ import numpy as np
 from ..checkpoint.sharded import (latest_step, manifest_target,
                                   restore_checkpoint, save_checkpoint)
 from ..core.algorithms.stepwise import get_algorithm
+from ..obs import fleet_event
 from ..core.geometry import ConeGeometry
 from ..core.plan import plan as plan_execution
 from ..core.splitting import MemoryModel
@@ -267,8 +268,12 @@ class Scheduler:
                  memory: Optional[MemoryModel] = None,
                  metrics: Optional[ServeMetrics] = None,
                  guard=None,
-                 snapshot_dir: Optional[str] = None):
+                 snapshot_dir: Optional[str] = None,
+                 name: str = ""):
         self.pool = pool or DevicePool(n_devices, memory)
+        # trace identity: the pod name in fleet event logs / span tracks
+        # ("" for a standalone scheduler; Pod sets its spec name)
+        self.name = name
         self.queue = PriorityJobQueue()
         self.records: Dict[str, JobRecord] = {}
         self.running: Dict[str, _Running] = {}
@@ -313,6 +318,8 @@ class Scheduler:
             self.records[job.job_id] = rec
             self.queue.push(rec)
             self.metrics.submitted += 1
+            fleet_event("submit", job=job.job_id, pod=self.name,
+                        priority=job.priority)
         return job.job_id
 
     def cancel(self, job_id: str) -> bool:
@@ -368,6 +375,7 @@ class Scheduler:
         rec.error = msg
         rec.end_time = time.monotonic()
         self.metrics.failed += 1
+        fleet_event("fail", job=rec.job.job_id, pod=self.name, error=msg)
         self._mark_terminal_on_disk(rec)
 
     def _mark_terminal_on_disk(self, rec: JobRecord) -> None:
@@ -428,6 +436,9 @@ class Scheduler:
             self.pool.commit(slot, rec.job.job_id, fp.bytes_on_device)
             self._admitting += 1
             self._admitting_recs[rec.job.job_id] = rec
+            fleet_event("place", job=rec.job.job_id, pod=self.name,
+                        device=slot.index, bytes=fp.bytes_on_device,
+                        streams=fp.streams)
             return rec, slot, fp
 
     def _commit_admission(self, rec: JobRecord, slot: DeviceSlot,
@@ -442,6 +453,10 @@ class Scheduler:
             self.pool.release(slot, rec.job.job_id, fp.bytes_on_device)
             self._fail(rec, f"init failed: {err!r}")
             return
+        fleet_event("admit", job=rec.job.job_id, pod=self.name,
+                    device=slot.index, measured_s=executor.init_seconds,
+                    modeled_s=self._init_ema)
+        self.metrics.record_phases(executor.take_phase_seconds())
         self._init_ema = (executor.init_seconds if self._init_ema is None
                           else self._ema_alpha * executor.init_seconds
                           + (1 - self._ema_alpha) * self._init_ema)
@@ -488,7 +503,9 @@ class Scheduler:
                     rec.job, mode="stream" if fp.streams else "plain",
                     memory=self.pool.memory,
                     devices=([slot.jax_device] if slot.jax_device is not None
-                             else None))
+                             else None),
+                    labels={"pod": self.name or None,
+                            "device": slot.index})
                 executor.start(checkpoint=rec.checkpoint)
             except Exception as e:
                 if executor is not None:
@@ -523,6 +540,9 @@ class Scheduler:
         est = self.modeled_completion_seconds(rec)
         if est is not None and est > rec.job.deadline_seconds:
             self.metrics.deadline_rejected += 1
+            fleet_event("reject", job=rec.job.job_id, pod=self.name,
+                        modeled_s=est,
+                        deadline_s=rec.job.deadline_seconds)
             self._fail(rec, f"deadline {rec.job.deadline_seconds:.3f}s "
                             f"unmeetable: modeled completion {est:.3f}s")
             return True
@@ -605,6 +625,8 @@ class Scheduler:
         rec.status = JobStatus.PREEMPTED
         rec.preemptions += 1
         self.metrics.preemptions += 1
+        fleet_event("park", job=rec.job.job_id, pod=self.name,
+                    device=run.slot.index, it=rec.iterations_done)
         run.executor.release()
         self.pool.release(run.slot, rec.job.job_id, rec.footprint_bytes)
         del self.running[rec.job.job_id]
@@ -619,6 +641,9 @@ class Scheduler:
         rec.end_time = time.monotonic()
         self._mark_terminal_on_disk(rec)
         self.metrics.record_completion(rec.latency, rec.queue_wait)
+        fleet_event("complete", job=rec.job.job_id, pod=self.name,
+                    device=run.slot.index, measured_s=rec.latency,
+                    it=rec.iterations_done)
         run.executor.release()
         self.pool.release(run.slot, rec.job.job_id, rec.footprint_bytes)
         del self.running[rec.job.job_id]
@@ -626,6 +651,11 @@ class Scheduler:
     def _observe_step(self, run: _Running, dt: float) -> None:
         run.slot.busy_seconds += dt
         self.metrics.record_step(dt)
+        self.metrics.record_phases(run.executor.take_phase_seconds())
+        fleet_event("step", job=run.record.job.job_id, pod=self.name,
+                    device=run.slot.index, measured_s=dt,
+                    modeled_s=(None if self._step_ema is None
+                               else self._step_ema * max(run.passes, 1e-9)))
         # the EMA tracks the *per-pass* unit cost: a streamed step's wall
         # time is divided by its slab-pass multiplier, so steps observed
         # on oversized jobs don't inflate the modeled cost of small ones
@@ -787,6 +817,7 @@ class Scheduler:
             parked = sum(
                 1 for jid in before
                 if self.records[jid].status is JobStatus.PREEMPTED)
+            fleet_event("drain", pod=self.name, parked=parked)
             if ckpt_dir is not None:
                 self.snapshot(ckpt_dir)
         return parked
@@ -833,6 +864,8 @@ class Scheduler:
             if stale_status is not None:
                 _stale_job_dir(os.path.join(ckpt_dir, "jobs", job_id),
                                stale_status)
+        if payloads:
+            fleet_event("snapshot", pod=self.name, jobs=len(payloads))
         return len(payloads)
 
     def restore(self, ckpt_dir: str,
@@ -1021,6 +1054,8 @@ class Scheduler:
             raise
         with self._lock:
             self.metrics.stolen_out += 1
+        fleet_event("export", job=job_id, pod=self.name,
+                    it=rec.iterations_done)
         # a periodic snapshot may also have persisted this job under our
         # own snapshot_dir (distinct from transfer_dir, checked above);
         # flip that copy to "stolen" so a restart of *this* pod cannot
@@ -1062,6 +1097,8 @@ class Scheduler:
             self.records[rec.job.job_id] = rec
             self.queue.push(rec)
             self.metrics.stolen_in += 1
+            fleet_event("import", job=rec.job.job_id, pod=self.name,
+                        it=rec.iterations_done)
             current = next(self._seq)
             self._seq = itertools.count(max(current, rec.seq + 1))
             snapshot_dir = self.snapshot_dir

@@ -304,24 +304,36 @@ def steal_pass(pods: Sequence, transfer_dir: str,
                data_refs: Optional[Dict[str, Callable]] = None,
                policy: StealPolicy = StealPolicy()) -> List[str]:
     """One rebalancing pass over a pod set (each pod exposing
-    ``.scheduler``, ``.pool`` and ``.n_devices``): repeatedly pair the
-    most loaded pod with the least loaded one and move tail jobs while
-    the modeled imbalance exceeds ``policy.min_imbalance_seconds``.
-    Jobs already moved this pass are never moved again.  Returns the
-    ids of every job moved (possibly empty)."""
+    ``.scheduler``, ``.pool`` and ``.n_devices``): pair the most loaded
+    pod with the least loaded one and move tail jobs from victim to
+    thief while the modeled imbalance exceeds
+    ``policy.min_imbalance_seconds``.  Jobs already moved this pass are
+    never moved again.  Returns the ids of every job moved (possibly
+    empty).
+
+    The fleet units and the (victim, thief) pairing are computed
+    **once** and pinned for the whole pass.  Re-ranking after every
+    move would let a single steal flip the ordering — the former thief
+    now tops the ranking by a hair and a job bounces straight back
+    toward the pod it just left (under unit skew the bounce can even
+    favor the warmer pod systematically).  Per-move load *levels*
+    still update inside :func:`steal_once` (its benefit check prices
+    each candidate against the live loads), so a pinned pair cannot
+    overshoot; when the pinned pair has no more profitable moves the
+    pass ends, and the caller's next pass re-ranks from scratch."""
     moved: List[str] = []
     if len(pods) < 2:
         return moved
+    units = fleet_units(pods)
+    unit, init = units
+    ranked: List[Tuple[float, object]] = sorted(
+        ((pod_load(p.scheduler, p.n_devices, unit=unit, init=init), p)
+         for p in pods),
+        key=lambda t: t[0])
+    (lo, thief), (hi, victim) = ranked[0], ranked[-1]
+    if victim is thief or hi - lo <= policy.min_imbalance_seconds:
+        return moved
     for _ in range(policy.max_jobs_per_pass):
-        units = fleet_units(pods)
-        unit, init = units
-        ranked: List[Tuple[float, object]] = sorted(
-            ((pod_load(p.scheduler, p.n_devices, unit=unit, init=init), p)
-             for p in pods),
-            key=lambda t: t[0])
-        (lo, thief), (hi, victim) = ranked[0], ranked[-1]
-        if victim is thief or hi - lo <= policy.min_imbalance_seconds:
-            return moved
         jid = steal_once(victim, thief, transfer_dir,
                          data_refs=data_refs, policy=policy,
                          exclude=moved, units=units)

@@ -1,0 +1,456 @@
+"""The tracing layer: span recording (nesting, cross-thread, ambient
+context), the zero-cost disabled path, ring-buffer bounds, the Chrome
+trace-event / Prometheus exporters, the fleet event taxonomy and its
+ordering across a steal + drain, per-slab streaming spans, and the
+phase-seconds plumbing through ServeMetrics / merge_metrics."""
+
+import json
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import phantoms
+from repro.core.geometry import ConeGeometry, circular_angles
+from repro.core.operator import CTOperator
+from repro.core.plan import plan as plan_execution
+from repro.core.splitting import MemoryModel
+from repro.obs.trace import _NULL, Tracer, chrome_trace
+from repro.serve import (MultiPodScheduler, Pod, PodSpec, ReconJob,
+                         Scheduler, ServeMetrics, merge_metrics)
+
+GEO = ConeGeometry.nice(16)
+ANGLES = circular_angles(12)
+PROJ = phantoms.sphere_projection_analytic(GEO, ANGLES)
+
+KIB = 1024
+
+
+def _mem(kib, frac=1.0):
+    return MemoryModel(device_bytes=kib * KIB, usable_fraction=frac)
+
+
+def _job(alg="cgls", n_iter=2, **kw):
+    return ReconJob(alg, GEO, ANGLES, PROJ, n_iter=n_iter, **kw)
+
+
+@pytest.fixture
+def tracer():
+    """The process tracer, enabled and empty; restored disabled+empty."""
+    t = obs.get_tracer()
+    t.clear()
+    t.enable()
+    yield t
+    t.disable()
+    t.clear()
+
+
+# --------------------------------------------------------------------------
+# recorder semantics
+# --------------------------------------------------------------------------
+
+def test_span_nesting_records_both_with_attrs(tracer):
+    with obs.span("outer", "compute", job="j1"):
+        with obs.span("inner", "h2d", slab=3):
+            pass
+    spans = tracer.spans()
+    assert [s.name for s in spans] == ["inner", "outer"]   # close order
+    inner, outer = spans
+    assert inner.cat == "h2d" and inner.attrs == {"slab": 3}
+    assert outer.cat == "compute" and outer.attrs == {"job": "j1"}
+    assert outer.t0 <= inner.t0 and inner.t1 <= outer.t1   # true nesting
+    assert all(s.duration >= 0 for s in spans)
+
+
+def test_cross_thread_begin_end_attributed_to_opening_thread(tracer):
+    h = obs.begin("init", "compile", job="j2")
+    opener = threading.get_ident()
+
+    def closer():
+        obs.end(h, extra=1)
+
+    t = threading.Thread(target=closer)
+    t.start()
+    t.join()
+    (s,) = tracer.spans()
+    assert s.thread == opener          # not the closing thread
+    assert s.attrs == {"job": "j2", "extra": 1}
+
+
+def test_abandoned_handle_records_nothing(tracer):
+    obs.begin("never-closed", "compute")
+    assert tracer.spans() == []
+    assert tracer.phase_seconds() == {}
+
+
+def test_clear_orphans_open_handles(tracer):
+    h = obs.begin("stale", "compute")
+    tracer.clear()
+    obs.end(h)                          # generation mismatch: no-op
+    assert tracer.spans() == []
+
+
+def test_context_merges_ambient_attrs_and_explicit_wins(tracer):
+    with obs.context(job="j3", pod="p0", device=1):
+        with obs.span("work", "compute", device=7):
+            pass
+        obs.event("mark")
+    with obs.span("outside", "compute"):
+        pass
+    work = tracer.spans(name="work")[0]
+    assert work.attrs == {"job": "j3", "pod": "p0", "device": 7}
+    (ev,) = tracer.events()
+    assert ev.attrs == {"job": "j3", "pod": "p0", "device": 1}
+    assert tracer.spans(name="outside")[0].attrs == {}   # ctx restored
+
+
+def test_ring_buffer_bounds_and_counts_drops():
+    t = Tracer(capacity=8, enabled=True)
+    for i in range(20):
+        with t.span(f"s{i}", "compute"):
+            pass
+    assert len(t.records()) == 8
+    assert t.dropped() == 12
+    # aggregate counters keep running past evictions
+    assert sum(1 for _ in t.spans("compute")) == 8
+    assert t.prometheus().count('repro_spans_total{cat="compute"} 20') == 1
+
+
+def test_threaded_hammer_loses_nothing():
+    t = Tracer(capacity=1 << 14, enabled=True)
+    n_threads, per_thread = 8, 200
+
+    def work(k):
+        for i in range(per_thread):
+            with t.span("w", "compute", thread=k, i=i):
+                pass
+            t.event("tick", thread=k)
+            t.incr("hits")
+
+    threads = [threading.Thread(target=work, args=(k,))
+               for k in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    total = n_threads * per_thread
+    assert len(t.spans("compute")) == total
+    assert len(t.events("tick")) == total
+    assert t.counters()["hits"] == total
+    assert t.dropped() == 0
+    seqs = [r.seq for r in t.records()]
+    assert len(set(seqs)) == len(seqs)              # unique, no torn writes
+
+
+def test_phase_seconds_global_and_per_thread(tracer):
+    def worker():
+        with obs.span("w", "h2d"):
+            time.sleep(0.01)
+
+    t = threading.Thread(target=worker)
+    t.start()
+    t.join()
+    with obs.span("m", "compute"):
+        time.sleep(0.01)
+    phases = tracer.phase_seconds()
+    assert phases["h2d"] >= 0.01 and phases["compute"] >= 0.01
+    # the calling thread's view excludes the worker's h2d time
+    mine = tracer.thread_phase_seconds()
+    assert "compute" in mine and "h2d" not in mine
+
+
+# --------------------------------------------------------------------------
+# disabled path: zero cost, shared no-ops
+# --------------------------------------------------------------------------
+
+def test_disabled_tracer_records_nothing_and_returns_singletons():
+    t = obs.get_tracer()
+    assert not t.enabled and not obs.enabled()
+    assert obs.span("x", "h2d") is _NULL
+    assert obs.context(job="j") is _NULL
+    assert obs.begin("x") is None
+    obs.end(None)
+    obs.event("submit")
+    obs.incr("c")
+    with obs.span("y", "compute"):
+        pass
+    assert t.records() == []
+    assert t.phase_seconds() == {}
+    assert t.counters() == {}
+
+
+def test_env_var_enables_at_construction(monkeypatch):
+    monkeypatch.setenv("REPRO_TRACE", "1")
+    assert Tracer().enabled
+    monkeypatch.setenv("REPRO_TRACE", "0")
+    assert not Tracer().enabled
+    monkeypatch.delenv("REPRO_TRACE")
+    assert not Tracer().enabled
+
+
+# --------------------------------------------------------------------------
+# exporters
+# --------------------------------------------------------------------------
+
+def test_chrome_trace_schema_tracks_and_rebase(tracer):
+    with obs.context(pod="p0"):
+        with obs.span("stage", "h2d", slab=0, device=0):
+            pass
+        with obs.span("fp_slab", "compute", slab=0, device=1):
+            pass
+    with obs.span("untracked", "compute"):       # no pod/device attrs
+        pass
+    obs.fleet_event("submit", job="j1", pod="p0")
+    doc = tracer.chrome_trace()
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    evs = doc["traceEvents"]
+    xs = [e for e in evs if e["ph"] == "X"]
+    metas = [e for e in evs if e["ph"] == "M"]
+    instants = [e for e in evs if e["ph"] == "i"]
+    assert len(xs) == 3 and len(instants) == 1
+    for e in xs:
+        assert {"name", "cat", "ts", "dur", "pid", "tid", "args"} <= set(e)
+        assert e["ts"] >= 0 and e["dur"] >= 0    # rebased to run start
+    assert instants[0]["s"] == "t"
+    # process per pod, thread track per device
+    procs = {m["args"]["name"] for m in metas if m["name"] == "process_name"}
+    tracks = {m["args"]["name"] for m in metas if m["name"] == "thread_name"}
+    assert procs == {"p0", "proc"}
+    assert {"device0", "device1"} <= tracks
+    # the pod-attributed spans land on the pod's pid
+    pod_pid = next(m["pid"] for m in metas
+                   if m["name"] == "process_name"
+                   and m["args"]["name"] == "p0")
+    assert all(e["pid"] == pod_pid for e in xs if e["args"].get("device")
+               is not None)
+    json.dumps(doc)                              # serializable end to end
+
+
+def test_chrome_trace_coerces_non_json_attrs(tracer):
+    with obs.span("s", "compute", count=np.int64(3), arr=np.float32(1.5),
+                  obj=object()):
+        pass
+    doc = chrome_trace(tracer.records())
+    (x,) = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert x["args"]["count"] == 3 and x["args"]["arr"] == 1.5
+    assert isinstance(x["args"]["obj"], str)
+    json.dumps(doc)
+
+
+def test_prometheus_text_format(tracer):
+    with obs.span("s", "h2d"):
+        pass
+    obs.fleet_event("submit", job="j1")
+    obs.incr("dispatch_hits", 3)
+    text = tracer.prometheus()
+    assert text.endswith("\n")
+    assert 'repro_phase_seconds_total{phase="h2d"} ' in text
+    assert 'repro_spans_total{cat="h2d"} 1' in text
+    assert 'repro_events_total{kind="submit"} 1' in text
+    assert "repro_dispatch_hits_total 3" in text
+    assert "repro_trace_dropped_records 0" in text
+    for line in text.splitlines():
+        assert line.startswith(("#", "repro_"))
+
+
+def test_validate_trace_tool_accepts_real_trace(tracer, tmp_path):
+    with obs.context(pod="p0", device=0):
+        for cat in ("h2d", "compute", "d2h"):
+            with obs.span(cat, cat, slab=0):
+                pass
+    path = str(tmp_path / "t.json")
+    tracer.write_chrome_trace(path)
+    proc = subprocess.run(
+        [sys.executable, "tools/validate_trace.py", path,
+         "--require-phases"],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "TRACE OK" in proc.stdout
+
+
+# --------------------------------------------------------------------------
+# fleet events
+# --------------------------------------------------------------------------
+
+def test_fleet_event_rejects_unknown_kind(tracer):
+    with pytest.raises(ValueError, match="unknown fleet event"):
+        obs.fleet_event("reboot", pod="p0")
+    obs.fleet_event("submit", job="j1", pod="p0")   # known kinds fine
+    assert [e.name for e in obs.fleet_event_log()] == ["submit"]
+
+
+def test_fleet_event_log_filters(tracer):
+    obs.fleet_event("submit", job="a", pod="p0")
+    obs.fleet_event("submit", job="b", pod="p1")
+    obs.fleet_event("complete", job="a", pod="p0")
+    assert len(obs.fleet_event_log(job="a")) == 2
+    assert len(obs.fleet_event_log(kind="submit")) == 2
+    assert [e.attrs["job"] for e in obs.fleet_event_log(pod="p1")] == ["b"]
+
+
+def test_scheduler_emits_lifecycle_events_in_order(tracer):
+    sched = Scheduler(n_devices=1, memory=_mem(220), name="solo")
+    jid = sched.submit(_job(n_iter=2))
+    sched.run()
+    names = [e.name for e in obs.fleet_event_log(job=jid)]
+    assert names[0] == "submit"
+    assert names[-1] == "complete"
+    for kind in ("place", "admit", "step"):
+        assert kind in names
+    # ordering: submit < place < admit < first step < complete
+    idx = {k: names.index(k) for k in ("submit", "place", "admit", "step",
+                                       "complete")}
+    assert idx["submit"] < idx["place"] < idx["admit"] < idx["step"] \
+        < idx["complete"]
+    admit = obs.fleet_event_log(job=jid, kind="admit")[0]
+    assert admit.attrs["pod"] == "solo"
+    assert admit.attrs["measured_s"] > 0
+    steps = obs.fleet_event_log(job=jid, kind="step")
+    assert len(steps) == 2 and all(e.attrs["measured_s"] > 0
+                                   for e in steps)
+
+
+def test_fleet_event_order_across_steal_and_drain(tracer, tmp_path):
+    """A stolen job's event trail reads submit -> export (victim) ->
+    import (thief) -> ... -> complete, strictly ordered; the scale-down
+    style drain leaves a drain event after the parks."""
+    pods = [Pod(PodSpec(f"p{i}", n_devices=1, memory=_mem(800)))
+            for i in range(2)]
+    mps = MultiPodScheduler(pods, transfer_dir=str(tmp_path / "xfer"))
+    jids = [mps.submit(_job(n_iter=2), pod="p0") for _ in range(3)]
+    moved = mps.steal_pass()
+    assert moved, "imbalanced fleet must steal"
+    for jid in moved:
+        names = [e.name for e in obs.fleet_event_log(job=jid)]
+        assert "export" in names and "import" in names
+        assert names.index("export") < names.index("import")
+        exp = obs.fleet_event_log(job=jid, kind="export")[0]
+        imp = obs.fleet_event_log(job=jid, kind="import")[0]
+        assert exp.attrs["pod"] == "p0" and imp.attrs["pod"] == "p1"
+        seqs = [e.seq for e in obs.fleet_event_log(job=jid)]
+        assert seqs == sorted(seqs)
+    mps.run()
+    for jid in jids:
+        assert obs.fleet_event_log(job=jid, kind="complete")
+    # drain: park everything left queued on a fresh scheduler
+    sched = Scheduler(n_devices=1, memory=_mem(800), name="drainee")
+    sched.submit(_job(n_iter=8))
+    sched.admit()
+    sched.drain(None, timeout=30)
+    drains = obs.fleet_event_log(kind="drain")
+    assert drains and drains[-1].attrs["pod"] == "drainee"
+    parks = obs.fleet_event_log(kind="park")
+    assert parks and parks[-1].seq < drains[-1].seq
+
+
+def test_autoscaler_scale_events_logged(tracer, tmp_path):
+    from repro.serve import Autoscaler, AutoscalePolicy
+    mps = MultiPodScheduler(
+        [Pod(PodSpec("seed", n_devices=1, memory=_mem(220)))],
+        transfer_dir=str(tmp_path / "xfer"))
+    asc = Autoscaler(mps, [PodSpec("burst", n_devices=1, memory=_mem(220))],
+                     AutoscalePolicy(scale_up_backlog_seconds=0.5,
+                                     scale_down_backlog_seconds=0.05,
+                                     down_window_seconds=0.0,
+                                     cooldown_seconds=0.0))
+    ev = asc._scale_up(0.0, 9.9)
+    assert ev is not None
+    (up,) = obs.fleet_event_log(kind="scale-up")
+    assert up.attrs["pod"] == ev.pod and up.attrs["n_pods"] == 2
+    adds = obs.fleet_event_log(kind="pod-add")
+    assert adds and adds[-1].attrs["pod"] == ev.pod
+
+
+# --------------------------------------------------------------------------
+# streaming + executor instrumentation
+# --------------------------------------------------------------------------
+
+def test_streaming_emits_per_slab_phase_spans(tracer):
+    geo = ConeGeometry.nice(16)
+    angles = circular_angles(8)
+    mem = _mem(24)                      # too small for 16^3 whole: splits
+    p = plan_execution(geo, len(angles), 1, mem)
+    assert p.forward.n_slabs >= 2, "budget must force a split"
+    op = CTOperator(geo, angles, mode="stream", memory=mem)
+    vol = np.asarray(phantoms.shepp_logan(geo))
+    proj = np.asarray(op.A(vol))
+    np.asarray(op.At(proj))
+    fp = tracer.spans(name="fp_slab")
+    assert {s.attrs["slab"] for s in fp} == set(range(p.forward.n_slabs))
+    assert all(s.cat == "compute" and "device" in s.attrs for s in fp)
+    h2d = tracer.spans("h2d")
+    assert {s.attrs.get("op") for s in h2d} == {"fp", "bp"}
+    assert tracer.spans("d2h")
+    bp = [s for s in tracer.spans("compute") if s.attrs.get("op") == "bp"]
+    assert bp and all("chunk" in s.attrs and "slab" in s.attrs for s in bp)
+
+
+def test_executor_phase_seconds_cover_step_wall_time(tracer):
+    from repro.serve.executor import JobExecutor
+    ex = JobExecutor(_job(n_iter=3), mode="plain", memory=_mem(800),
+                     labels={"pod": "p0", "device": 0})
+    ex.start()
+    ex.take_phase_seconds()
+    ex.step()                           # burn in compile effects
+    ex.take_phase_seconds()
+    t0 = time.monotonic()
+    ex.step()
+    dt = time.monotonic() - t0
+    phases = ex.take_phase_seconds()
+    assert "compute" in phases
+    total = sum(phases.values())
+    # the step span wraps ~the whole step; allow scheduling noise
+    assert 0.5 * dt <= total <= 1.05 * dt, (phases, dt)
+    # spans carry the ambient identity
+    step_spans = [s for s in tracer.spans(name="step")
+                  if s.attrs.get("pod") == "p0"]
+    assert step_spans and all(s.attrs["device"] == 0 for s in step_spans)
+
+
+def test_summary_reports_phase_seconds_and_disabled_is_empty(tracer):
+    sched = Scheduler(n_devices=1, memory=_mem(800), name="s0")
+    sched.submit(_job(n_iter=2))
+    sched.run()
+    s = sched.summary()
+    assert s["phase_seconds"].get("compute", 0) > 0
+    # phase attribution is within 10% of the measured step wall time
+    # (plus init, which is attributed separately)
+    busy = s["busy_seconds"]
+    attributed = sum(v for k, v in s["phase_seconds"].items()
+                     if k != "init")
+    assert attributed <= 1.1 * (busy + s["phase_seconds"].get("init", 0))
+    # disabled tracer -> empty phase dict (the zero-overhead default)
+    obs.get_tracer().disable()
+    sched2 = Scheduler(n_devices=1, memory=_mem(800))
+    sched2.submit(_job(n_iter=1))
+    sched2.run()
+    assert sched2.summary()["phase_seconds"] == {}
+
+
+def test_merge_metrics_phase_round_trip():
+    a = ServeMetrics(phase_seconds={"h2d": 1.0, "compute": 2.0})
+    b = ServeMetrics(phase_seconds={"compute": 3.0, "d2h": 0.5})
+    m = merge_metrics([a, b])
+    assert m.phase_seconds == {"h2d": 1.0, "compute": 5.0, "d2h": 0.5}
+    assert m.summary()["phase_seconds"] == m.phase_seconds
+    # and the round trip leaves the parts untouched
+    assert a.phase_seconds == {"h2d": 1.0, "compute": 2.0}
+
+
+def test_dispatch_counters_hit_and_miss(tracer):
+    from repro.core.backend import get_backend
+    tracer.clear()
+    bk = get_backend("ref")
+    geo = ConeGeometry.nice(16)
+    bk.fp(geo, xdom=True)
+    before = tracer.counters()
+    bk.fp(geo, xdom=True)               # same key: a hit
+    after = tracer.counters()
+    assert after.get("dispatch_hits", 0) \
+        == before.get("dispatch_hits", 0) + 1
+    assert after.get("dispatch_misses", 0) \
+        == before.get("dispatch_misses", 0)

@@ -5,6 +5,7 @@ mid-progress jobs bit-identically, fleet-level durable snapshots
 unlocked-executor-init admission path, and the recon CLI round trip
 with --pods N + --snapshot-dir."""
 
+import json
 import os
 import time
 
@@ -533,3 +534,82 @@ def test_recon_cli_resumes_interrupted_fleet_bit_identically(tmp_path):
                          snapshot_dir=snap)
     want = np.asarray(cgls(proj, geo, angles, n_iter=5))
     np.testing.assert_array_equal(np.asarray(rec), want)
+
+
+# --------------------------------------------------------------------------
+# _next_pod error discipline + manifest writes outside the fleet lock
+# --------------------------------------------------------------------------
+
+def test_scale_up_surfaces_non_collision_errors(tmp_path):
+    """Regression: _next_pod used to retry *every* ValueError forever —
+    a template the Pod constructor rejects (here: a bogus placement
+    policy) spun an infinite loop inside the fleet lock, wedging every
+    submit/steal/snapshot in the process.  Only name collisions retry;
+    anything else must propagate with the fleet lock released."""
+    mps = MultiPodScheduler([_pod("seed")],
+                            transfer_dir=str(tmp_path / "xfer"))
+    asc = Autoscaler(mps, [PodSpec("bad", n_devices=1, memory=_mem(),
+                                   placement="bogus")],
+                     _policy())
+    with pytest.raises(ValueError, match="placement"):
+        asc._scale_up(0.0, 1.0)
+    assert [p.name for p in mps.pods] == ["seed"]
+    assert asc.events == []
+    # the fleet lock must be free again (the old spin held it forever)
+    assert mps._fleet_lock.acquire(timeout=1)
+    mps._fleet_lock.release()
+    # and the fleet still serves
+    jid = mps.submit(_job(n_iter=1))
+    mps.autoscaler = None
+    mps.run()
+    assert mps.record(jid).status is JobStatus.COMPLETED
+
+
+def test_scale_up_still_retries_name_collisions(tmp_path):
+    """The one ValueError that *should* retry: a name already used (e.g.
+    re-seeded counter after a fleet restore) just advances the counter."""
+    mps = MultiPodScheduler([_pod("seed"), _pod("burst-as0")],
+                            transfer_dir=str(tmp_path / "xfer"))
+    asc = Autoscaler(mps, [PodSpec("burst", n_devices=1, memory=_mem())],
+                     _policy(max_pods=4))
+    ev = asc._scale_up(0.0, 1.0)
+    assert ev is not None and ev.pod == "burst-as1"
+    assert {p.name for p in mps.pods} == {"seed", "burst-as0", "burst-as1"}
+
+
+def test_scale_up_writes_manifest_outside_fleet_lock(tmp_path, monkeypatch):
+    """Regression: the autoscaler's scale-up used to write fleet.json
+    while holding the re-entrant fleet lock, serializing every submit
+    behind disk I/O.  The write is now deferred to after the last lock
+    exit: during the actual manifest write, another thread must be able
+    to take the fleet lock."""
+    import threading
+    import repro.serve.pool as pool_mod
+    root = str(tmp_path / "fleet")
+    mps = MultiPodScheduler([_pod("seed")], snapshot_root=root,
+                            transfer_dir=str(tmp_path / "xfer"))
+    asc = Autoscaler(mps, [PodSpec("burst", n_devices=1, memory=_mem())],
+                     _policy())
+    orig_write = pool_mod._atomic_write_json
+    probes = []
+
+    def probing_write(path, payload):
+        if path.endswith("fleet.json"):
+            def probe():
+                got = mps._fleet_lock.acquire(timeout=5)
+                if got:
+                    mps._fleet_lock.release()
+                probes.append(got)
+            t = threading.Thread(target=probe)
+            t.start()
+            t.join()
+        return orig_write(path, payload)
+
+    monkeypatch.setattr(pool_mod, "_atomic_write_json", probing_write)
+    ev = asc._scale_up(0.0, 1.0)
+    assert ev is not None and ev.pod == "burst-as0"
+    assert probes and all(probes), \
+        "fleet lock held across the manifest disk write"
+    with open(os.path.join(root, "fleet.json")) as f:
+        manifest = json.load(f)
+    assert {p["name"] for p in manifest["pods"]} == {"seed", "burst-as0"}

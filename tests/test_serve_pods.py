@@ -645,3 +645,38 @@ def test_compaction_triggered_by_reporting_and_guards_names():
     # a compacted name stays reserved (records merged into fleet history)
     with pytest.raises(ValueError, match="already used"):
         mps.add_pod(Pod(PodSpec("p1", n_devices=1, memory=_mem(220))))
+
+
+# --------------------------------------------------------------------------
+# steal_pass pins its victim/thief pairing for the whole pass
+# --------------------------------------------------------------------------
+
+def test_steal_pass_pins_pairing_and_never_bounces_jobs_back(tmp_path):
+    """Regression: steal_pass used to re-rank victim/thief after every
+    move, so a steal that inverted the load ordering by a hair made the
+    *former thief* the new victim — and its own queued job bounced
+    straight back toward the pod the pass was unloading (under unit
+    skew, systematically toward the warm pod).  The pairing is now
+    pinned per pass: with pod a holding two 4-iteration jobs and pod b
+    one 1-iteration job (equal unit costs), moving one job a->b inverts
+    the ranking (a=4, b=5), and the old code would then move b's own
+    tiny job b->a."""
+    a, b = _pods(2, kib=800)
+    a_jobs = [a.scheduler.submit(_job(n_iter=4)) for _ in range(2)]
+    tiny = b.scheduler.submit(_job(n_iter=1))
+    # identical observed unit costs on both pods: the imbalance is pure
+    # queue depth, so the modeled loads are exact integers (a=8, b=1)
+    a.scheduler._step_ema = 1.0
+    b.scheduler._step_ema = 1.0
+    moved = steal_pass([a, b], str(tmp_path / "xfer"))
+    assert moved, "the imbalanced pass must move at least one job"
+    assert set(moved) <= set(a_jobs), \
+        f"pass moved non-victim jobs: {moved}"
+    assert tiny in b.scheduler.records, \
+        "thief's own queued job bounced back to the victim mid-pass"
+    for pod in (a, b):
+        pod.scheduler.run()
+    want = np.asarray(cgls(PROJ, GEO, ANGLES, n_iter=4))
+    for jid in a_jobs:
+        owner = a if jid in a.scheduler.records else b
+        np.testing.assert_array_equal(owner.scheduler.result(jid), want)

@@ -29,7 +29,8 @@ _SKIP_DIRS = {".git", ".tmp", "__pycache__", "node_modules", ".pytest_cache"}
 _EXTERNAL = ("http://", "https://", "mailto:", "#")
 
 # files whose fenced examples must execute
-DOCTEST_FILES = ("README.md", "docs/serve.md", "docs/operators.md")
+DOCTEST_FILES = ("README.md", "docs/serve.md", "docs/operators.md",
+                 "docs/observability.md")
 
 
 def markdown_files(root: pathlib.Path):

@@ -1,0 +1,135 @@
+#!/usr/bin/env python
+"""Validate a Chrome-trace JSON (and optionally a bench ``--json`` file).
+
+CI runs a traced streaming reconstruction and a traced benchmark smoke
+and then gates on this script: the trace must be structurally loadable
+by Perfetto / chrome://tracing (the paper's Fig 3/5 timeline view) and
+must actually contain the per-slab phase spans the tracing layer
+promises — an instrumentation regression that silently drops the
+h2d/compute/d2h spans fails here, not in a human's Perfetto tab.
+
+Checks (Chrome trace):
+
+* top level is ``{"traceEvents": [...]}`` with a non-empty list;
+* every event has ``ph``, ``name``, ``pid``, ``tid``; duration events
+  (``ph == "X"``) additionally carry numeric ``ts`` and ``dur >= 0``;
+* instant events (``ph == "i"``) carry a scope ``s``;
+* with ``--require-phases`` (the recon smoke): at least one complete
+  span in each of the h2d / compute / d2h categories, and at least one
+  span carrying a ``slab`` arg on a named device track.
+
+Checks (bench JSON, ``--bench-json``): top level carries ``bench`` and
+a non-empty ``rows`` (operators) or ``configs`` (serve) payload.
+
+Usage::
+
+    python tools/validate_trace.py trace.json [--require-phases]
+        [--bench-json bench.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import numbers
+import sys
+
+REQUIRED_PHASES = ("h2d", "compute", "d2h")
+
+
+def fail(msg: str) -> None:
+    print(f"FAIL: {msg}")
+    sys.exit(1)
+
+
+def validate_chrome_trace(path: str, require_phases: bool) -> int:
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        fail(f"{path}: top level must be an object with 'traceEvents'")
+    events = doc["traceEvents"]
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: 'traceEvents' must be a non-empty list")
+    cats = set()
+    slab_span_on_device_track = False
+    device_tracks = set()
+    for e in events:
+        for key in ("ph", "name", "pid", "tid"):
+            if key not in e:
+                fail(f"{path}: event missing {key!r}: {e}")
+        if e["ph"] == "M":
+            if e["name"] == "thread_name" \
+                    and str(e["args"]["name"]).startswith("device"):
+                device_tracks.add((e["pid"], e["tid"]))
+            continue
+        if not isinstance(e.get("ts"), numbers.Real) or e["ts"] < 0:
+            fail(f"{path}: event needs numeric ts >= 0: {e}")
+        if e["ph"] == "X":
+            if not isinstance(e.get("dur"), numbers.Real) or e["dur"] < 0:
+                fail(f"{path}: complete event needs dur >= 0: {e}")
+            cats.add(e.get("cat"))
+        elif e["ph"] == "i":
+            if "s" not in e:
+                fail(f"{path}: instant event needs scope 's': {e}")
+    # the device-track check needs the metadata pass above complete
+    for e in events:
+        if e["ph"] == "X" and "slab" in e.get("args", {}) \
+                and (e["pid"], e["tid"]) in device_tracks:
+            slab_span_on_device_track = True
+            break
+    if require_phases:
+        missing = [c for c in REQUIRED_PHASES if c not in cats]
+        if missing:
+            fail(f"{path}: no spans in categories {missing} "
+                 f"(saw {sorted(x for x in cats if x)})")
+        if not slab_span_on_device_track:
+            fail(f"{path}: no per-slab span on a named device track")
+    print(f"OK: {path}: {len(events)} events, categories "
+          f"{sorted(x for x in cats if x)}, "
+          f"{len(device_tracks)} device tracks")
+    return len(events)
+
+
+def validate_bench_json(path: str) -> None:
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "bench" not in doc:
+        fail(f"{path}: bench JSON must be an object with 'bench'")
+    rows = doc.get("rows")
+    configs = doc.get("configs")
+    if rows is not None:
+        if not rows:
+            fail(f"{path}: empty 'rows'")
+        for r in rows:
+            for key in ("mode", "backend", "fp_s", "bp_s"):
+                if key not in r:
+                    fail(f"{path}: row missing {key!r}: {r}")
+    elif configs is not None:
+        if not configs:
+            fail(f"{path}: empty 'configs'")
+        for name, s in configs.items():
+            if "completed" not in s:
+                fail(f"{path}: config {name!r} missing 'completed'")
+    else:
+        fail(f"{path}: bench JSON needs 'rows' or 'configs'")
+    print(f"OK: {path}: bench={doc['bench']!r}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="validate Chrome-trace / bench JSON artifacts")
+    ap.add_argument("trace", help="Chrome-trace JSON to validate")
+    ap.add_argument("--require-phases", action="store_true",
+                    help="require h2d/compute/d2h spans and a per-slab "
+                         "span on a device track (streaming recon traces)")
+    ap.add_argument("--bench-json", default="",
+                    help="also validate this bench --json output")
+    args = ap.parse_args()
+    validate_chrome_trace(args.trace, args.require_phases)
+    if args.bench_json:
+        validate_bench_json(args.bench_json)
+    print("TRACE OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -89,6 +89,10 @@ class _DispatchTable:
             return {"hits": self.hits, "misses": self.misses,
                     "currsize": len(self._fns)}
 
+    def keys(self) -> tuple:
+        with self._lock:
+            return tuple(self._fns)
+
     def clear(self) -> None:
         with self._lock:
             self._fns.clear()
@@ -101,6 +105,14 @@ _TABLE = _DispatchTable()
 def dispatch_cache_info() -> Dict[str, int]:
     """Hit/miss/size counters of the shared dispatch table."""
     return _TABLE.info()
+
+
+def dispatch_cache_keys() -> tuple:
+    """The dispatch table's current ``(backend, kind, geometry, ...)``
+    keys.  Regression tests assert on *which* kernels materialised —
+    e.g. that the dominance-split dist FP never builds the unused
+    dominance variant on a single-dominance workload."""
+    return _TABLE.keys()
 
 
 def clear_dispatch_cache() -> None:

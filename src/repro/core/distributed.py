@@ -12,11 +12,15 @@ This is the paper's multi-GPU layer generalised to TPU meshes (DESIGN.md SS5):
 The reductions are exact because the operators are additive over disjoint
 z slabs / angle sets (tests/test_splitting.py, tests/test_distributed.py).
 
-Two collective schedules are provided for the FP reduction: a plain
-``psum`` (baseline, what XLA would do) and a ``ppermute`` ring that
-interleaves each hop with the next slab's compute -- the paper's
-"simultaneous memory transfer and computation" adapted to ICI links
-(used by the perf hillclimb; see EXPERIMENTS.md SS Perf).
+The communication decisions are no longer hard-coded at the call sites:
+the plan IR's :class:`~repro.core.plan.CommSchedule` selects the
+cross-shard reduction schedule (``"psum"`` baseline, ``"ppermute"``
+ring, or a hierarchical two-level tree — intra-group ring then
+cross-group hops, chosen from the mesh shape by
+:func:`~repro.core.plan.choose_reduction`) and whether the FP angle set
+is split by dominant axis on the host, so that non-ref backends run one
+single-dominance kernel per shard instead of evaluating both variants
+(the historical 2x local FP).
 """
 
 from __future__ import annotations
@@ -32,7 +36,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .. import obs
 from .compat import axis_size as compat_axis_size, shard_map
-from .geometry import ConeGeometry
+from .geometry import ConeGeometry, dominant_axis_mask
+from .plan import choose_reduction, hier_group_size
 from .projector import (_joseph_xdom_one_angle, _rotate_vol_90,
                         backproject_voxel)
 
@@ -61,6 +66,50 @@ def _traced_dist(fn, op: str, mesh: Mesh, data_axis: str, model_axis: str,
                     block()
         return out
     return traced
+
+
+def _reduce_partial(part, schedule: str, axis_name: str, n: int):
+    """Cross-shard all-reduce of a partial result, per the plan's
+    :func:`~repro.core.plan.choose_reduction` schedule.
+
+    ``"psum"`` is the one-shot baseline; ``"ring"`` runs ``n - 1``
+    ppermute hops each overlappable with compute; ``"hier"`` reduces
+    within contiguous groups first (ring), then accumulates the group
+    sums with group-stride hops — Petascale XCT's intra-node-before-
+    inter-node tree mapped onto one mesh axis.  All three produce the
+    full sum on every shard (summation order differs, so only ``psum``
+    is bit-identical to the historical default)."""
+    if schedule == "psum" or n == 1:
+        return jax.lax.psum(part, axis_name)
+    if schedule == "ring":
+        perm = [(j, (j + 1) % n) for j in range(n)]
+
+        def hop(_, acc_part):
+            acc, p = acc_part
+            p = jax.lax.ppermute(p, axis_name, perm)
+            return acc + p, p
+        acc, _ = jax.lax.fori_loop(0, n - 1, hop, (part, part))
+        return acc
+    if schedule == "hier":
+        g = hier_group_size(n)
+        intra = [(j, (j // g) * g + ((j % g) + 1) % g) for j in range(n)]
+        inter = [(j, (j + g) % n) for j in range(n)]
+
+        def hop1(_, acc_part):
+            acc, p = acc_part
+            p = jax.lax.ppermute(p, axis_name, intra)
+            return acc + p, p
+        group_sum, _ = jax.lax.fori_loop(0, g - 1, hop1, (part, part))
+
+        def hop2(_, tot_rot):
+            tot, rot = tot_rot
+            rot = jax.lax.ppermute(rot, axis_name, inter)
+            return tot + rot, rot
+        total, _ = jax.lax.fori_loop(0, n // g - 1, hop2,
+                                     (group_sum, group_sum))
+        return total
+    raise ValueError(f"unknown reduction schedule {schedule!r} "
+                     f"(have psum | ring | hier)")
 
 
 def _joseph_any_angle(vol, vol_rot, geo: ConeGeometry, theta, z0):
@@ -102,9 +151,10 @@ def _fp_local_fn(geo: ConeGeometry, backend: Optional[str]):
     Pallas FP kernel is single-dominance.  The ref backend keeps the
     per-angle ``lax.cond`` (one projector runs per angle); other
     backends evaluate both dominance variants for the shard and select
-    per angle — 2x local FP compute, traded for running the optimized
-    kernel inside the sharded path (the BP side has no such cost: the
-    voxel-driven kernel is dominance-free).
+    per angle — 2x local FP compute.  This is only the *fallback* for
+    ``dominance_split=False``: the default dist FP path regroups the
+    angles by dominance on the host so every shard runs exactly one
+    single-dominance kernel (see :func:`dist_forward_project`).
     """
     from .backend import get_backend, resolve
     if resolve(backend) == "ref":
@@ -124,58 +174,125 @@ def _fp_local_fn(geo: ConeGeometry, backend: Optional[str]):
 
 def dist_forward_project(mesh: Mesh, geo: ConeGeometry,
                          data_axis: str = "data", model_axis: str = "model",
-                         reduce: str = "psum",
-                         backend: Optional[str] = None):
-    """Build a jitted sharded FP: ``f(vol, angles) -> proj``.
+                         reduce: Optional[str] = None,
+                         backend: Optional[str] = None,
+                         dominance_split: Optional[bool] = None,
+                         comm=None):
+    """Build a sharded FP: ``f(vol, angles) -> proj``.
 
     ``vol`` sharded ``P(model, None, None)`` (z slabs); ``angles`` sharded
-    ``P(data)``; output sharded ``P(data, None, None)``.  ``reduce`` selects
-    the cross-slab reduction schedule: ``"psum"`` or ``"ring"``.
-    ``backend`` selects the per-shard slab kernels (see
-    :mod:`repro.core.backend` and :func:`_fp_local_fn`).
+    ``P(data)``; output sharded ``P(data, None, None)``.
+
+    Both communication decisions come off the plan IR: ``reduce`` selects
+    the cross-slab reduction schedule (``"psum"`` | ``"ring"`` |
+    ``"hier"``; default ``None`` reads ``comm.reduction`` or derives it
+    from the model-axis size via
+    :func:`~repro.core.plan.choose_reduction`), and ``dominance_split``
+    (default from ``comm``, else on) regroups the angle set by dominant
+    axis on the host so each group runs one *single-dominance* sharded
+    call — on non-ref backends this kills the 2x local FP of evaluating
+    both kernel variants per shard (:func:`_fp_local_fn`; ref needs no
+    split, its per-angle ``lax.cond`` already runs one projector).  Each
+    group is padded to the data-axis size with
+    :func:`pad_angles`-style duplicate angles and the rows scatter back
+    to input order afterwards, so the wrapper is call-compatible with
+    the plain sharded fn.
     """
     n_model = mesh.shape[model_axis]
+    n_data = mesh.shape[data_axis]
     nz = geo.n_voxel[0]
     if nz % n_model:
         raise ValueError(f"Nz={nz} not divisible by model axis {n_model}")
     planes = nz // n_model
-    fp_local = _fp_local_fn(geo, backend)
+    if comm is not None:
+        if reduce is None:
+            reduce = comm.reduction
+        if dominance_split is None:
+            dominance_split = comm.dominance_split
+    if reduce is None:
+        reduce = choose_reduction(n_model)
+    if dominance_split is None:
+        dominance_split = True
+    from .backend import get_backend, resolve
+    split = dominance_split and resolve(backend) != "ref"
 
-    def body(vol_slab, angles_local):
-        z0 = jax.lax.axis_index(model_axis) * planes
-        part = fp_local(vol_slab, angles_local, z0)
-        if reduce == "psum":
-            return jax.lax.psum(part, model_axis)
-        # ring reduce: n-1 hops of (shift, add); result replicated on axis.
-        def hop(i, acc_part):
-            acc, part = acc_part
-            perm = [(j, (j + 1) % n_model) for j in range(n_model)]
-            part = jax.lax.ppermute(part, model_axis, perm)
-            return acc + part, part
-        acc, _ = jax.lax.fori_loop(0, n_model - 1, hop, (part, part))
-        return acc
+    def sharded(fp_local):
+        def body(vol_slab, angles_local):
+            z0 = jax.lax.axis_index(model_axis) * planes
+            part = fp_local(vol_slab, angles_local, z0)
+            return _reduce_partial(part, reduce, model_axis, n_model)
+        fn = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(model_axis, None, None), P(data_axis)),
+            out_specs=P(data_axis, None, None), check_vma=False)
+        return jax.jit(fn)
 
-    fn = shard_map(
-        body, mesh=mesh,
-        in_specs=(P(model_axis, None, None), P(data_axis)),
-        out_specs=P(data_axis, None, None), check_vma=False)
-    return _traced_dist(jax.jit(fn), "dist_fp", mesh, data_axis,
-                        model_axis, reduce=reduce)
+    if not split:
+        return _traced_dist(sharded(_fp_local_fn(geo, backend)), "dist_fp",
+                            mesh, data_axis, model_axis, reduce=reduce)
+
+    # Host-level dominance split: one single-dominance sharded call per
+    # non-empty dominance group.  Built lazily so an all-one-dominance
+    # workload never even fetches the other kernel variant from the
+    # dispatch table (asserted via dispatch_cache_keys in the tests).
+    bk = get_backend(backend)
+    fns = {}
+
+    def fn_for(xdom: bool):
+        if xdom not in fns:
+            fp1 = bk.fp(geo, xdom=xdom)
+            fns[xdom] = _traced_dist(
+                sharded(lambda vs, al, z0, _fp=fp1: _fp(vs, al, z0)),
+                "dist_fp", mesh, data_axis, model_axis, reduce=reduce,
+                xdom=xdom)
+        return fns[xdom]
+
+    nv, nu = geo.n_detector
+
+    def call(vol, angles):
+        angles_np = np.asarray(angles, np.float32)
+        xm = dominant_axis_mask(angles_np)
+        groups = [(True, np.nonzero(xm)[0]), (False, np.nonzero(~xm)[0])]
+        groups = [(x, i) for x, i in groups if i.size]
+        parts = []
+        for xdom, idx in groups:
+            padded, valid = pad_angles(angles_np[idx], n_data)
+            outp = fn_for(xdom)(vol, jnp.asarray(padded))
+            parts.append((idx, outp if valid.all() else outp[:idx.size]))
+        if len(parts) == 1 and parts[0][0].size == len(angles_np):
+            return parts[0][1]     # single dominance: rows already ordered
+        out = jnp.zeros((len(angles_np), nv, nu), jnp.float32)
+        with obs.span("reduce", "reduce", op="dist_fp", schedule=reduce,
+                      groups=len(parts),
+                      bytes=int(len(angles_np)) * nv * nu * 4):
+            for idx, p in parts:
+                out = out.at[jnp.asarray(idx)].set(p)
+            if obs.enabled():
+                out.block_until_ready()
+        return out
+    return call
 
 
 def dist_backproject(mesh: Mesh, geo: ConeGeometry, weight: str = "fdk",
                      data_axis: str = "data", model_axis: str = "model",
-                     backend: Optional[str] = None):
+                     backend: Optional[str] = None, reduce: str = "psum",
+                     comm=None):
     """Build a jitted sharded BP: ``g(proj, angles) -> vol``.
 
     ``proj``/``angles`` sharded over ``data``; output volume z-sharded over
     ``model`` (each device updates its own slab from its angle subset, then
-    the partial updates are summed over ``data`` -- additive in angles).
+    the partial updates are reduced over ``data`` -- additive in angles).
     ``backend`` selects the slab kernel (the voxel-driven BP is
-    dominance-free, so the Pallas kernel drops straight in).
+    dominance-free, so the Pallas kernel drops straight in; no dominance
+    split applies here).  ``reduce`` selects the data-axis reduction
+    schedule; unlike the FP it defaults to ``"psum"`` regardless of the
+    plan (``comm`` is accepted for API symmetry) because the historical
+    reduction order is part of the bit-exactness contract the serving
+    layer's preemption/restore tests rely on.
     """
     from .backend import get_backend
     n_model = mesh.shape[model_axis]
+    n_data = mesh.shape[data_axis]
     nz = geo.n_voxel[0]
     if nz % n_model:
         raise ValueError(f"Nz={nz} not divisible by model axis {n_model}")
@@ -185,7 +302,7 @@ def dist_backproject(mesh: Mesh, geo: ConeGeometry, weight: str = "fdk",
     def body(proj_local, angles_local):
         z0 = jax.lax.axis_index(model_axis) * planes
         slab = bp(proj_local, angles_local, z0)
-        return jax.lax.psum(slab, data_axis)
+        return _reduce_partial(slab, reduce, data_axis, n_data)
 
     fn = shard_map(
         body, mesh=mesh,

@@ -78,11 +78,18 @@ class CTOperator:
         if mode == "dist" and mesh is None:
             raise ValueError("mode='dist' needs a mesh")
 
-        # one plan drives every mode: the stream executors iterate its
-        # slab/chunk schedule verbatim, plain mode is its n_slabs == 1
-        # fast path, and dist mode partitions by the mesh (the plan still
+        # one plan drives every mode: the stream executors interpret its
+        # CommSchedule step list verbatim, plain mode is its n_slabs == 1
+        # fast path, and dist mode reads its reduction / dominance-split
+        # decisions (n_devices = the mesh's model axis, so the schedule's
+        # reduction tree reflects the actual shard count; the plan still
         # carries the footprint/pass model the serving layer prices with)
-        n_dev = len(devices) if (mode == "stream" and devices) else 1
+        if mode == "dist":
+            n_dev = mesh.shape.get("model", 1)
+        elif mode == "stream" and devices:
+            n_dev = len(devices)
+        else:
+            n_dev = 1
         self.plan = plan if plan is not None else \
             plan_execution(geo, len(self.angles_np), n_dev, self.memory)
 
@@ -90,14 +97,19 @@ class CTOperator:
             from .distributed import (dist_backproject,
                                       dist_backproject_matched,
                                       dist_forward_project)
+            comm = self.plan.comm
             self._a = dist_forward_project(mesh, geo,
-                                           backend=self.backend_name)
+                                           backend=self.backend_name,
+                                           comm=comm)
             self._at_fdk = dist_backproject(mesh, geo, weight="fdk",
-                                            backend=self.backend_name)
+                                            backend=self.backend_name,
+                                            comm=comm)
             self._at_none = dist_backproject(mesh, geo, weight="none",
-                                             backend=self.backend_name)
+                                             backend=self.backend_name,
+                                             comm=comm)
             self._at_pm = dist_backproject(mesh, geo, weight="pmatched",
-                                           backend=self.backend_name)
+                                           backend=self.backend_name,
+                                           comm=comm)
             self._at_matched = dist_backproject_matched(mesh, geo)
             self._data_axis_size = mesh.shape["data"]
         elif mode == "stream":

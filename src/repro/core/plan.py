@@ -30,12 +30,216 @@ every scheduler, pod and benchmark in the process.
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import lru_cache
 from typing import List, Optional, Tuple
 
 from .geometry import ConeGeometry
 from .splitting import (F32, BackwardPlan, ForwardPlan, MemoryModel,
                         plan_backward, plan_forward)
+
+
+# --------------------------------------------------------------------------
+# communication schedule (the paper's Fig 3 / Fig 5 timelines, reified)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CommStep:
+    """One entry of a :class:`CommSchedule` step list.
+
+    ``kind`` is ``"h2d"`` (stage host data onto a device), ``"compute"``
+    (consume what is staged) or ``"d2h"`` (copy a finished result back).
+    ``prefetch`` marks staging issued *ahead* of the step that consumes
+    it — the overlap the paper's double buffers buy.  ``nbytes`` is the
+    host<->device traffic of the step (0 for compute), so the schedule
+    doubles as the transfer cost model.
+    """
+
+    kind: str              # "h2d" | "compute" | "d2h"
+    op: str                # "fp" | "bp"
+    device: int
+    slab: int
+    chunk: int = -1        # bp projection-chunk index; -1 for fp / d2h
+    nbytes: int = 0
+    prefetch: bool = False
+
+    def __str__(self):
+        tag = {"h2d": "h2d", "compute": "cmp", "d2h": "d2h"}[self.kind]
+        if self.prefetch:
+            tag += "*"
+        loc = f"d{self.device} s{self.slab}"
+        if self.chunk >= 0:
+            loc += f" c{self.chunk}"
+        return f"{tag}[{loc}]"
+
+
+def _fp_comm_steps(fwd: ForwardPlan, geo: ConeGeometry, n_angles: int,
+                   depth: int) -> Tuple[CommStep, ...]:
+    """FP step list (paper Alg 1 / Fig 3): every device streams every
+    slab; ``depth`` slabs are staged ahead of the one being computed
+    (``depth=0`` is the serial single-buffer reference)."""
+    _, ny, nx = geo.n_voxel
+    nv, nu = geo.n_detector
+    steps: List[CommStep] = []
+    staged = 0
+    for k in range(fwd.n_slabs):
+        hi = min(fwd.n_slabs, k + 1 + max(0, depth))
+        for t in range(max(staged, k), hi):
+            z0, z1 = fwd.slab_ranges[t]
+            for d in range(fwd.n_devices):
+                steps.append(CommStep("h2d", "fp", d, t,
+                                      nbytes=(z1 - z0) * ny * nx * F32,
+                                      prefetch=(t > k)))
+        staged = max(staged, hi)
+        for d in range(fwd.n_devices):
+            steps.append(CommStep("compute", "fp", d, k))
+    for d, (a0, a1) in enumerate(fwd.angle_ranges):
+        steps.append(CommStep("d2h", "fp", d, -1,
+                              nbytes=(a1 - a0) * nv * nu * F32))
+    return tuple(steps)
+
+
+def _bp_comm_steps(bwd: BackwardPlan, geo: ConeGeometry, n_angles: int,
+                   depth: int) -> Tuple[CommStep, ...]:
+    """BP step list (paper Alg 2 / Fig 5): each slab's owner consumes the
+    projection chunks through ``1 + depth`` staging buffers.  When every
+    chunk fits in the buffers at once, a device's later slabs *reuse* the
+    chunks staged for its first slab (no h2d steps are emitted)."""
+    _, ny, nx = geo.n_voxel
+    nv, nu = geo.n_detector
+    chunks = [(c, min(c + bwd.angle_chunk, n_angles))
+              for c in range(0, n_angles, bwd.angle_chunk)]
+    reuse = len(chunks) <= 1 + max(0, depth)
+    steps: List[CommStep] = []
+    chunks_on: set = set()          # devices whose chunks stay resident
+    for k, (z0, z1) in enumerate(bwd.slab_ranges):
+        d = bwd.device_of_slab[k]
+        stage = not (reuse and d in chunks_on)
+        if reuse:
+            chunks_on.add(d)
+        staged = 0
+        for ci, (c0, c1) in enumerate(chunks):
+            if stage:
+                hi = min(len(chunks), ci + 1 + max(0, depth))
+                for t in range(max(staged, ci), hi):
+                    t0, t1 = chunks[t]
+                    steps.append(CommStep(
+                        "h2d", "bp", d, k, chunk=t,
+                        nbytes=(t1 - t0) * (nv * nu + 1) * F32,
+                        prefetch=(t > ci)))
+                staged = max(staged, hi)
+            steps.append(CommStep("compute", "bp", d, k, chunk=ci))
+        steps.append(CommStep("d2h", "bp", d, k,
+                              nbytes=(z1 - z0) * ny * nx * F32))
+    return tuple(steps)
+
+
+def hier_group_size(n: int) -> int:
+    """Largest divisor of ``n`` that is <= sqrt(n): the intra-group size
+    of the hierarchical two-level reduction (1 for primes)."""
+    g = 1
+    for d in range(2, int(math.isqrt(n)) + 1):
+        if n % d == 0:
+            g = d
+    return g
+
+
+def choose_reduction(n_shards: int) -> str:
+    """Cross-shard reduction schedule for ``n_shards`` model shards.
+
+    ``"psum"`` for <= 2 shards (one hop; also the bit-exact baseline),
+    ``"hier"`` (intra-group ring then cross-group hops — Petascale XCT's
+    intra-node-before-inter-node shape) when the count factors into
+    groups, ``"ring"`` otherwise (primes)."""
+    if n_shards <= 2:
+        return "psum"
+    g = hier_group_size(n_shards)
+    if g <= 1 or g >= n_shards:
+        return "ring"
+    return "hier"
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSchedule:
+    """When the bytes move: the explicit staging/compute/reduce schedule
+    of one :class:`ExecutionPlan`.
+
+    The streaming executors *interpret* ``fp_steps`` / ``bp_steps``
+    verbatim (tests assert the interpreted result is bit-identical to the
+    serial ``prefetch_depth=0`` reference), the dist operators read
+    ``reduction`` / ``dominance_split``, and the serving layer prices
+    transfers with :meth:`transfer_seconds` under a measured-bandwidth
+    EMA.  Exactly one place decides when bytes move; everything else
+    executes or prices it.
+    """
+
+    prefetch_depth: int          # slabs/chunks staged ahead of compute
+    n_buffers: int               # staging buffers per device (1 + depth)
+    reduction: str               # "psum" | "ring" | "hier" (dist FP)
+    dominance_split: bool        # host-level single-dominance dist shards
+    bp_chunk_reuse: bool         # later slabs reuse resident chunks
+    fp_steps: Tuple[CommStep, ...]
+    bp_steps: Tuple[CommStep, ...]
+
+    def steps(self, op: str) -> Tuple[CommStep, ...]:
+        return self.fp_steps if op == "fp" else self.bp_steps
+
+    def bytes_moved(self, op: Optional[str] = None) -> int:
+        """Total host<->device bytes the schedule moves (one ``A`` plus
+        one ``At`` pass when ``op`` is None).  Reflects chunk reuse, so
+        it can undercut the raw ``transfer_bytes_*`` upper bounds."""
+        which = (self.fp_steps + self.bp_steps if op is None
+                 else self.steps(op))
+        return sum(s.nbytes for s in which)
+
+    def transfer_seconds(self, bandwidth_bytes_per_s: float,
+                         op: Optional[str] = None) -> float:
+        """Schedule-derived transfer time of one pass at a measured
+        effective bandwidth: the busiest device's staged bytes over the
+        bandwidth (devices transfer concurrently; contention is already
+        folded into the *measured* bandwidth the serving layer feeds
+        in)."""
+        if bandwidth_bytes_per_s <= 0:
+            raise ValueError("bandwidth must be positive")
+        which = (self.fp_steps + self.bp_steps if op is None
+                 else self.steps(op))
+        per_dev: dict = {}
+        for s in which:
+            per_dev[s.device] = per_dev.get(s.device, 0) + s.nbytes
+        return max(per_dev.values(), default=0) / bandwidth_bytes_per_s
+
+    def describe(self, max_steps: int = 8) -> str:
+        """Step-list summary (docs / benchmarks): totals per op plus the
+        first ``max_steps`` steps (``*`` marks prefetch)."""
+        lines = [f"CommSchedule(depth={self.prefetch_depth}, "
+                 f"buffers={self.n_buffers}, reduction={self.reduction}, "
+                 f"dominance_split={self.dominance_split}, "
+                 f"bp_chunk_reuse={self.bp_chunk_reuse})"]
+        for op in ("fp", "bp"):
+            steps = self.steps(op)
+            shown = " ".join(str(s) for s in steps[:max_steps])
+            if len(steps) > max_steps:
+                shown += f" ... +{len(steps) - max_steps}"
+            lines.append(f"  {op}: {len(steps)} steps, "
+                         f"{self.bytes_moved(op)} B: {shown}")
+        return "\n".join(lines)
+
+
+def build_comm_schedule(geo: ConeGeometry, n_angles: int,
+                        forward: ForwardPlan, backward: BackwardPlan,
+                        prefetch_depth: int = 1) -> CommSchedule:
+    """Derive the deterministic communication schedule of a plan."""
+    depth = max(0, int(prefetch_depth))
+    n_chunks = math.ceil(n_angles / backward.angle_chunk) if n_angles else 0
+    return CommSchedule(
+        prefetch_depth=depth,
+        n_buffers=1 + depth,
+        reduction=choose_reduction(max(forward.n_devices,
+                                       backward.n_devices)),
+        dominance_split=True,
+        bp_chunk_reuse=n_chunks <= 1 + depth,
+        fp_steps=_fp_comm_steps(forward, geo, n_angles, depth),
+        bp_steps=_bp_comm_steps(backward, geo, n_angles, depth))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +259,23 @@ class ExecutionPlan:
     memory: MemoryModel
     forward: ForwardPlan
     backward: BackwardPlan
+    #: the communication schedule (derived in __post_init__ when omitted,
+    #: so direct constructions stay valid)
+    comm: Optional[CommSchedule] = None
+
+    def __post_init__(self):
+        if self.comm is None:
+            object.__setattr__(self, "comm", build_comm_schedule(
+                self.geo, self.n_angles, self.forward, self.backward))
+
+    def with_prefetch(self, depth: int) -> "ExecutionPlan":
+        """Same partition, different overlap: a copy whose schedule
+        stages ``depth`` slabs/chunks ahead (``0`` = the serial
+        no-prefetch reference the parity tests and the bench's
+        overlap-off arm use)."""
+        return dataclasses.replace(self, comm=build_comm_schedule(
+            self.geo, self.n_angles, self.forward, self.backward,
+            prefetch_depth=depth))
 
     # ---- structure (what the executors iterate) ----------------------------
 
@@ -143,24 +364,29 @@ class ExecutionPlan:
                 f"fp: {f.n_slabs} slab(s) x chunk {f.angle_chunk}, "
                 f"bp: {b.n_slabs} slab(s) x chunk {b.angle_chunk}, "
                 f"passes/iter={self.step_passes:g}, "
-                f"device bytes={self.stream_bytes_on_device})")
+                f"device bytes={self.stream_bytes_on_device}, "
+                f"comm: depth={self.comm.prefetch_depth} "
+                f"reduce={self.comm.reduction})")
 
 
 @lru_cache(maxsize=1024)
 def _plan_cached(geo: ConeGeometry, n_angles: int, n_devices: int,
                  memory: MemoryModel, angle_chunk_fp: int,
-                 angle_chunk_bp: int) -> ExecutionPlan:
+                 angle_chunk_bp: int, prefetch_depth: int) -> ExecutionPlan:
+    fwd = plan_forward(geo, n_angles, n_devices, memory,
+                       angle_chunk=angle_chunk_fp)
+    bwd = plan_backward(geo, n_angles, n_devices, memory,
+                        angle_chunk=angle_chunk_bp)
     return ExecutionPlan(
         geo=geo, n_angles=n_angles, n_devices=n_devices, memory=memory,
-        forward=plan_forward(geo, n_angles, n_devices, memory,
-                             angle_chunk=angle_chunk_fp),
-        backward=plan_backward(geo, n_angles, n_devices, memory,
-                               angle_chunk=angle_chunk_bp))
+        forward=fwd, backward=bwd,
+        comm=build_comm_schedule(geo, n_angles, fwd, bwd,
+                                 prefetch_depth=prefetch_depth))
 
 
 def plan(geo: ConeGeometry, n_angles: int, n_devices: int = 1,
          memory: Optional[MemoryModel] = None, angle_chunk_fp: int = 16,
-         angle_chunk_bp: int = 32) -> ExecutionPlan:
+         angle_chunk_bp: int = 32, prefetch_depth: int = 1) -> ExecutionPlan:
     """The single planning entry point (subsumes ``plan_forward`` /
     ``plan_backward``).  Memoized: every consumer in the process —
     operators, streaming executors, schedulers, routing, stealing,
@@ -173,7 +399,8 @@ def plan(geo: ConeGeometry, n_angles: int, n_devices: int = 1,
     if not obs.enabled():
         return _plan_cached(geo, int(n_angles), int(n_devices),
                             memory or MemoryModel(),
-                            int(angle_chunk_fp), int(angle_chunk_bp))
+                            int(angle_chunk_fp), int(angle_chunk_bp),
+                            int(prefetch_depth))
     # Span only the memo *misses*: hits are sub-microsecond dict lookups
     # and the serving layer's load polling would flood the ring with them.
     # An abandoned begin() handle costs nothing (miss check is advisory
@@ -183,7 +410,8 @@ def plan(geo: ConeGeometry, n_angles: int, n_devices: int = 1,
                   n_devices=int(n_devices))
     out = _plan_cached(geo, int(n_angles), int(n_devices),
                        memory or MemoryModel(),
-                       int(angle_chunk_fp), int(angle_chunk_bp))
+                       int(angle_chunk_fp), int(angle_chunk_bp),
+                       int(prefetch_depth))
     if _plan_cached.cache_info().misses != misses0:
         obs.end(h)
     return out

@@ -38,7 +38,8 @@ import numpy as np
 from .. import obs
 from .backend import get_backend
 from .geometry import ConeGeometry, dominant_axis_mask
-from .plan import ExecutionPlan
+from .plan import (CommSchedule, ExecutionPlan, _bp_comm_steps,
+                   _fp_comm_steps)
 from .splitting import BackwardPlan, ForwardPlan
 
 
@@ -68,14 +69,16 @@ _BIN_CAT = {"staging": "h2d", "compute": "compute", "other_memory": "d2h"}
 class _Timed:
     """Times one block into a Timeline bin *and* an obs span.
 
-    The obs span (category from ``_BIN_CAT``, attrs like slab/device/op)
-    is only materialised when the process tracer is enabled, so the
-    streaming hot loop keeps its zero-overhead default path."""
+    The obs span (category from ``_BIN_CAT`` unless overridden — the
+    schedule's lookahead staging reports category ``"prefetch"`` while
+    keeping the ``"staging"`` Timeline bin; attrs like slab/device/op/
+    bytes) is only materialised when the process tracer is enabled, so
+    the streaming hot loop keeps its zero-overhead default path."""
     __slots__ = ("tl", "name", "sp", "t0")
 
-    def __init__(self, tl, name, attrs, emit_span=True):
+    def __init__(self, tl, name, attrs, emit_span=True, cat=None):
         self.tl, self.name = tl, name
-        self.sp = (obs.span(name, _BIN_CAT.get(name, name), **attrs)
+        self.sp = (obs.span(name, cat or _BIN_CAT.get(name, name), **attrs)
                    if emit_span else obs.trace._NULL)
 
     def __enter__(self):
@@ -90,8 +93,13 @@ class _Timed:
         return False
 
 
-def _timed(tl: Optional[Timeline], name: str, _span: bool = True, **attrs):
-    return _Timed(tl, name, attrs, emit_span=_span)
+def _timed(tl: Optional[Timeline], name: str, _span: bool = True,
+           _cat: Optional[str] = None, **attrs):
+    return _Timed(tl, name, attrs, emit_span=_span, cat=_cat)
+
+
+def _stage_cat(step) -> str:
+    return "prefetch" if step.prefetch else "h2d"
 
 
 # --------------------------------------------------------------------------
@@ -103,18 +111,27 @@ def stream_forward(vol: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
                    plan: Union[ExecutionPlan, ForwardPlan],
                    devices: Optional[Sequence] = None,
                    timeline: Optional[Timeline] = None,
-                   backend: Optional[str] = None) -> np.ndarray:
-    """Out-of-core forward projection.
+                   backend: Optional[str] = None,
+                   comm: Optional[CommSchedule] = None) -> np.ndarray:
+    """Out-of-core forward projection: an interpreter over the plan's
+    :class:`~repro.core.plan.CommSchedule` FP step list.
 
     ``vol`` is a host (numpy) array that may exceed device memory; only
-    slab-sized pieces are staged.  Angles are partitioned over ``devices``
-    (paper SS2.1); each device streams all slabs and accumulates its partial
-    projections on-device.  ``plan`` is the unified
-    :class:`~repro.core.plan.ExecutionPlan` (its forward schedule is
-    iterated verbatim) or a bare ``ForwardPlan``; ``backend`` selects the
-    slab kernels ("ref" | "pallas" | "auto"/None).
+    slab-sized pieces are staged, when the schedule says so (prefetch
+    ``device_put`` is queued before the current slab's compute blocks —
+    the paper's two-buffer overlap).  Angles are partitioned over
+    ``devices`` (paper SS2.1); each device streams all slabs and
+    accumulates its partial projections on-device, in slab order, so the
+    result is bit-identical for every ``prefetch_depth``.  ``plan`` is
+    the unified :class:`~repro.core.plan.ExecutionPlan` (its schedule is
+    executed verbatim; override with ``comm``, e.g.
+    ``plan.with_prefetch(0).comm`` for the serial reference) or a bare
+    ``ForwardPlan``; ``backend`` selects the slab kernels
+    ("ref" | "pallas" | "auto"/None).
     """
     if isinstance(plan, ExecutionPlan):
+        if comm is None:
+            comm = plan.comm
         plan = plan.forward
     bk = get_backend(backend)
     if devices is None:
@@ -126,6 +143,8 @@ def stream_forward(vol: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
     xmask = dominant_axis_mask(angles)
     nv, nu = geo.n_detector
     out = np.zeros((len(angles), nv, nu), np.float32)
+    steps = (comm.fp_steps if comm is not None
+             else _fp_comm_steps(plan, geo, len(angles), 1))
 
     # Per-device accumulation buffers (device-resident across slabs --
     # paper's "extra projection buffer ... accumulated on the GPU").
@@ -144,49 +163,53 @@ def stream_forward(vol: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
                         devices[d]),
                 }
 
-    # Pre-stage slab 0 on every device, then stream: prefetch k+1, compute k.
-    def put_slab(k: int, dev):
-        z0, z1 = plan.slab_ranges[k]
-        return jax.device_put(jnp.asarray(vol[z0:z1]), dev)
-
-    current = {}
-    for d in dev_acc:
-        with _timed(timeline, "staging", op="fp", slab=0, device=d):
-            current[d] = put_slab(0, devices[d])
-
-    for k in range(plan.n_slabs):
-        z0, z1 = plan.slab_ranges[k]
-        nxt = None
-        if k + 1 < plan.n_slabs:
-            nxt = {}
-            for d in dev_acc:
-                with _timed(timeline, "staging", op="fp", slab=k + 1,
-                            device=d):
-                    nxt[d] = put_slab(k + 1, devices[d])
-        # Per-device compute spans use begin/end: the work for every
-        # device is *queued* first (async dispatch = the paper's overlap),
-        # then each device's span closes when its accumulator is ready.
-        # The Timeline bin wraps the whole block; the obs spans are the
-        # per-device ones (``_span=False`` avoids double-counted compute).
-        with _timed(timeline, "compute", _span=False):
-            handles = {}
-            for d, groups in dev_acc.items():
-                handles[d] = obs.begin("fp_slab", "compute", op="fp",
-                                       slab=k, device=d)
-                for key, g in groups.items():
-                    fp = bk.fp(geo, xdom=(key == "x"))
-                    slab = current[d]
-                    g["acc"] = g["acc"] + fp(slab, g["angles"], z0)
-            for d, groups in dev_acc.items():
-                for g in groups.values():
-                    g["acc"].block_until_ready()
-                obs.end(handles[d])
-        current = nxt if nxt is not None else current
-
-    for d, groups in dev_acc.items():
-        with _timed(timeline, "other_memory", op="fp", device=d):
-            for g in groups.values():
-                out[g["idx"]] = np.asarray(g["acc"])
+    # Interpret the step list.  h2d stages a slab (a numpy view goes to
+    # device_put directly -- no intermediate host jnp copy); a run of
+    # consecutive compute steps is *queued* across all its devices first
+    # (async dispatch = the paper's overlap), then each device blocks;
+    # d2h copies a device's accumulated projections back.
+    staged: Dict[tuple, object] = {}       # (device, slab) -> slab array
+    i, n = 0, len(steps)
+    while i < n:
+        st = steps[i]
+        if st.kind == "h2d":
+            z0, z1 = plan.slab_ranges[st.slab]
+            with _timed(timeline, "staging", _cat=_stage_cat(st), op="fp",
+                        slab=st.slab, device=st.device, bytes=st.nbytes):
+                staged[(st.device, st.slab)] = jax.device_put(
+                    vol[z0:z1], devices[st.device])
+            i += 1
+        elif st.kind == "compute":
+            j = i
+            while j < n and steps[j].kind == "compute":
+                j += 1
+            run = steps[i:j]
+            # The Timeline bin wraps the whole block; the obs spans are
+            # the per-device ones (_span=False avoids double counting).
+            with _timed(timeline, "compute", _span=False):
+                handles = []
+                for st2 in run:
+                    z0, _ = plan.slab_ranges[st2.slab]
+                    handles.append(obs.begin("fp_slab", "compute", op="fp",
+                                             slab=st2.slab,
+                                             device=st2.device))
+                    for key, g in dev_acc[st2.device].items():
+                        fp = bk.fp(geo, xdom=(key == "x"))
+                        g["acc"] = g["acc"] + fp(
+                            staged[(st2.device, st2.slab)], g["angles"], z0)
+                for st2, h in zip(run, handles):
+                    for g in dev_acc[st2.device].values():
+                        g["acc"].block_until_ready()
+                    obs.end(h)
+                for st2 in run:     # slab consumed: free its buffer
+                    staged.pop((st2.device, st2.slab), None)
+            i = j
+        else:  # d2h
+            with _timed(timeline, "other_memory", op="fp",
+                        device=st.device, bytes=st.nbytes):
+                for g in dev_acc[st.device].values():
+                    out[g["idx"]] = np.asarray(g["acc"])
+            i += 1
     return out
 
 
@@ -199,16 +222,29 @@ def stream_backward(proj: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
                     weight: str = "fdk",
                     devices: Optional[Sequence] = None,
                     timeline: Optional[Timeline] = None,
-                    backend: Optional[str] = None) -> np.ndarray:
-    """Out-of-core backprojection: every device consumes the entire
-    projection set in ``angle_chunk`` double-buffered pieces while updating
-    its resident image slab (paper Fig 5).  ``plan`` is the unified
-    :class:`~repro.core.plan.ExecutionPlan` (its backward schedule is
-    iterated verbatim) or a bare ``BackwardPlan``; ``backend`` selects the
-    slab kernels.  ``weight="matched"`` streams the exact per-slab vjp
-    adjoint — always ref-built (see :mod:`repro.core.backend`) so CGLS
-    keeps its convergence guarantees out-of-core on every backend."""
+                    backend: Optional[str] = None,
+                    comm: Optional[CommSchedule] = None) -> np.ndarray:
+    """Out-of-core backprojection: an interpreter over the plan's
+    :class:`~repro.core.plan.CommSchedule` BP step list.
+
+    Every slab's owner consumes the projection set in ``angle_chunk``
+    pieces through the schedule's staging buffers while updating its
+    resident image slab (paper Fig 5); lookahead chunks are staged
+    before the current chunk's compute blocks.  When the schedule says
+    every chunk fits resident at once (``bp_chunk_reuse``), a device's
+    later slabs reuse the chunks staged for its first slab — the step
+    list simply carries no h2d steps for them.  Chunks are always
+    accumulated in increasing order per slab, so the result is
+    bit-identical for every ``prefetch_depth`` and reuse decision.
+    ``plan`` is the unified :class:`~repro.core.plan.ExecutionPlan` (its
+    schedule is executed verbatim; override with ``comm``) or a bare
+    ``BackwardPlan``.  ``weight="matched"`` streams the exact per-slab
+    vjp adjoint — always ref-built (see :mod:`repro.core.backend`) so
+    CGLS keeps its convergence guarantees out-of-core on every
+    backend."""
     if isinstance(plan, ExecutionPlan):
+        if comm is None:
+            comm = plan.comm
         plan = plan.backward
     bk = get_backend(backend)
     if devices is None:
@@ -221,49 +257,75 @@ def stream_backward(proj: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
     vol_out = np.zeros(geo.n_voxel, np.float32)
     chunks = [(c, min(c + plan.angle_chunk, n_angles))
               for c in range(0, n_angles, plan.angle_chunk)]
-
     xmask = dominant_axis_mask(angles)
+    if comm is not None:
+        steps = comm.bp_steps
+        # The memoized schedule covers the plan's full angle set; callers
+        # backprojecting a *subset* (OS-SART per-subset norm factors,
+        # SART row sweeps) get a step list rebuilt for the angles
+        # actually passed, at the same prefetch depth.
+        sched_chunks = 1 + max((s.chunk for s in steps if s.chunk >= 0),
+                               default=-1)
+        if sched_chunks != len(chunks):
+            steps = _bp_comm_steps(plan, geo, n_angles,
+                                   comm.prefetch_depth)
+    else:
+        steps = _bp_comm_steps(plan, geo, n_angles, 1)
 
-    # Slab queue per device (paper: "a queue of image pieces is added").
-    for k, (z0, z1) in enumerate(plan.slab_ranges):
-        d = plan.device_of_slab[k]
-        dev = devices[d]
-        bp = None if weight == "matched" else bk.bp(geo, planes=z1 - z0,
-                                                    weight=weight)
-        acc = jax.device_put(jnp.zeros((z1 - z0,) + tuple(geo.n_voxel[1:]),
-                                       jnp.float32), dev)
-        # prefetch chunk 0; then stream with one-chunk lookahead
-        with _timed(timeline, "staging", op="bp", slab=k, chunk=0, device=d):
-            cur = (jax.device_put(jnp.asarray(proj[chunks[0][0]:chunks[0][1]]), dev),
-                   jax.device_put(jnp.asarray(angles[chunks[0][0]:chunks[0][1]]), dev),
-                   chunks[0])
-        for ci, (c0, c1) in enumerate(chunks):
-            nxt = None
-            if ci + 1 < len(chunks):
-                n0, n1 = chunks[ci + 1]
-                with _timed(timeline, "staging", op="bp", slab=k,
-                            chunk=ci + 1, device=d):
-                    nxt = (jax.device_put(jnp.asarray(proj[n0:n1]), dev),
-                           jax.device_put(jnp.asarray(angles[n0:n1]), dev),
-                           chunks[ci + 1])
+    # A staged chunk is dropped after its *last* compute use -- derived
+    # from the step list itself, so the reuse decision needs no separate
+    # flag here (without reuse each chunk has one use; with reuse the
+    # last slab of the owning device holds it to the end).
+    last_use: Dict[tuple, int] = {}
+    for idx, st in enumerate(steps):
+        if st.kind == "compute":
+            last_use[(st.device, st.chunk)] = idx
+
+    staged: Dict[tuple, tuple] = {}   # (device, chunk) -> (proj, angles)
+    acc: Dict[int, object] = {}       # slab -> device accumulator
+    for idx, st in enumerate(steps):
+        d, dev = st.device, devices[st.device]
+        if st.kind == "h2d":
+            c0, c1 = chunks[st.chunk]
+            with _timed(timeline, "staging", _cat=_stage_cat(st), op="bp",
+                        slab=st.slab, chunk=st.chunk, device=d,
+                        bytes=st.nbytes):
+                # numpy views go to device_put directly: no per-slab
+                # host-side jnp copies of the same projection rows
+                staged[(d, st.chunk)] = (jax.device_put(proj[c0:c1], dev),
+                                         jax.device_put(angles[c0:c1], dev))
+        elif st.kind == "compute":
+            k, ci = st.slab, st.chunk
+            z0, z1 = plan.slab_ranges[k]
+            if k not in acc:
+                acc[k] = jax.device_put(
+                    jnp.zeros((z1 - z0,) + tuple(geo.n_voxel[1:]),
+                              jnp.float32), dev)
+            cur_p, cur_a = staged[(d, ci)]
+            c0, c1 = chunks[ci]
             with _timed(timeline, "compute", op="bp", slab=k, chunk=ci,
                         device=d):
                 if weight == "matched":
                     # exact adjoint: per-dominance vjp of the slab FP
                     m = xmask[c0:c1]
-                    for key, idx in (("x", np.nonzero(m)[0]),
+                    for key, sub in (("x", np.nonzero(m)[0]),
                                      ("y", np.nonzero(~m)[0])):
-                        if idx.size == 0:
+                        if sub.size == 0:
                             continue
                         fn = bk.bp_matched(geo, planes=z1 - z0,
                                            xdom=(key == "x"))
-                        acc = acc + fn(cur[0][jnp.asarray(idx)],
-                                       cur[1][jnp.asarray(idx)], z0)
+                        acc[k] = acc[k] + fn(cur_p[jnp.asarray(sub)],
+                                             cur_a[jnp.asarray(sub)], z0)
                 else:
-                    acc = acc + bp(cur[0], cur[1], z0)
-                acc.block_until_ready()
-            if nxt is not None:
-                cur = nxt
-        with _timed(timeline, "other_memory", op="bp", slab=k, device=d):
-            vol_out[z0:z1] = np.asarray(acc)
+                    bp = bk.bp(geo, planes=z1 - z0, weight=weight)
+                    acc[k] = acc[k] + bp(cur_p, cur_a, z0)
+                acc[k].block_until_ready()
+            if last_use.get((d, ci)) == idx:
+                staged.pop((d, ci), None)
+        else:  # d2h
+            k = st.slab
+            z0, z1 = plan.slab_ranges[k]
+            with _timed(timeline, "other_memory", op="bp", slab=k,
+                        device=d, bytes=st.nbytes):
+                vol_out[z0:z1] = np.asarray(acc.pop(k))
     return vol_out

@@ -49,7 +49,12 @@ __all__ = [
 # Phase categories folded into ``phase_seconds`` accounting; spans with
 # other categories are still recorded and exported, these are just the
 # ones ServeMetrics surfaces (ISSUE 6 / paper Fig 9 bins + compile).
-PHASE_CATEGORIES = ("h2d", "compute", "d2h", "compile", "plan")
+# "prefetch" is CommSchedule lookahead staging (h2d issued ahead of the
+# consuming compute; carries a bytes= attr so Perfetto shows effective
+# bandwidth per transfer) and "reduce" the cross-shard combine of the
+# dominance-split dist FP (ISSUE 7).
+PHASE_CATEGORIES = ("h2d", "compute", "d2h", "compile", "plan",
+                    "prefetch", "reduce")
 
 
 def _jsonable(v: Any) -> Any:

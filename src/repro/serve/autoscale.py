@@ -23,8 +23,9 @@ Decisions (one per :meth:`Autoscaler.step` call, made by
 :class:`AutoscalePolicy`):
 
 * **scale up** when the fleet backlog has stayed above the band's high
-  watermark for ``up_window_seconds``: instantiate the next
-  :class:`~repro.serve.pool.PodSpec` from the template pool and
+  watermark for ``up_window_seconds``: instantiate the
+  :class:`~repro.serve.pool.PodSpec` template that fits the most
+  currently-queued jobs (cycling the pool when the queue is empty) and
   :meth:`~repro.serve.pool.MultiPodScheduler.add_pod` it.  The new pod
   is cold — routing and stealing price it with the fleet's shared units
   (it borrows the warm pods' EMAs), so it is not mispriced against warm
@@ -128,10 +129,14 @@ class Autoscaler:
     ----------
     mps : the fleet to control.  The autoscaler registers itself on it
         so ``submit`` can request a pod for a job that fits nowhere.
-    templates : :class:`PodSpec` pool scale-ups instantiate from, cycled
-        in order; each spawned pod gets a unique ``<template>-as<N>``
-        name.  Heterogeneous templates express "add big-memory pods
-        first, small ones after" orderings.
+    templates : :class:`PodSpec` pool scale-ups instantiate from; each
+        spawned pod gets a unique ``<template>-as<N>`` name.  A
+        backlog-triggered scale-up picks the template that *fits the
+        most currently-queued jobs* (ties broken toward the smallest
+        pod, so a giant template is not burned on small work); with an
+        empty queue it falls back to cycling the pool in order, which
+        keeps heterogeneous "big-memory pods first, small ones after"
+        orderings meaningful.
     policy : see :class:`AutoscalePolicy`.
     clock : time source (injectable for tests; defaults to
         ``time.monotonic``).
@@ -250,6 +255,37 @@ class Autoscaler:
 
     # ---- scale up ----------------------------------------------------------
 
+    def _pick_template(self) -> Optional[int]:
+        """Index of the template whose memory budget fits the most
+        currently-queued jobs (footprints via the schedulers' shared
+        plan-backed :func:`estimate_job_footprint`); ties break toward
+        the *smallest* usable memory so a big-memory template is kept
+        for the jobs that need it.  None when nothing is queued — the
+        caller then falls back to cycling the template pool."""
+        jobs = []
+        for p in self.mps.pods_snapshot():
+            try:
+                jobs.extend(r.job
+                            for r in p.scheduler.queue.pending_records())
+            except Exception:
+                continue        # a pod mid-retire: skip its queue
+        if not jobs:
+            return None
+        best = None
+        for i, spec in enumerate(self.templates):
+            fits = 0
+            for job in jobs:
+                try:
+                    fp = estimate_job_footprint(job, spec.memory)
+                except Exception:
+                    continue    # unplannable under this budget: no fit
+                if fp.bytes_on_device <= int(spec.memory.usable):
+                    fits += 1
+            key = (-fits, int(spec.memory.usable), i)
+            if best is None or key < best[0]:
+                best = (key, i)
+        return best[1]
+
     def _next_pod(self, template_index: Optional[int] = None) -> Pod:
         """Instantiate the next template as a uniquely-named pod.
 
@@ -280,6 +316,11 @@ class Autoscaler:
     def _scale_up(self, now: float, load: float,
                   template_index: Optional[int] = None
                   ) -> Optional[ScaleEvent]:
+        # backlog-triggered scale-ups (no explicit template) pick by
+        # queued-job footprint fit; done *before* the fleet lock — the
+        # fit scan walks every pod's queue and prices footprints
+        if template_index is None:
+            template_index = self._pick_template()
         # the max_pods bound is re-checked *under the fleet lock*: the
         # control thread's step() and a submit thread's scale_up_for
         # both pass their own lock-free pre-checks, and without this one

@@ -26,6 +26,7 @@ from .. import obs
 from ..core.algorithms.stepwise import (checkpoint_state, get_algorithm,
                                         restore_state)
 from ..core.operator import CTOperator
+from ..core.plan import plan as plan_execution
 from ..core.splitting import MemoryModel
 from .job import ReconJob
 
@@ -108,6 +109,22 @@ class JobExecutor:
     def take_phase_seconds(self) -> Dict[str, float]:
         out, self._phase_delta = self._phase_delta, {}
         return out
+
+    @property
+    def step_transfer_bytes(self) -> int:
+        """Schedule-modeled host<->device bytes one outer iteration of a
+        *streamed* job moves (0 for in-core jobs — their operands stay
+        resident).  Read off the plan's CommSchedule, so chunk reuse is
+        reflected; the scheduler divides the step's observed staging
+        phase seconds into this to feed its measured-bandwidth EMA."""
+        if self.mode != "stream":
+            return 0
+        try:
+            p = plan_execution(self.job.geo, len(self.job.angles), 1,
+                               self.memory)
+        except Exception:
+            return 0
+        return p.comm.bytes_moved()
 
     @staticmethod
     def _phase_diff(after: Dict[str, float],

@@ -187,7 +187,10 @@ def modeled_job_seconds(job: ReconJob, pod: Pod,
         unit = 1.0
     if init is None:
         init = 0.0
-    return init + iters * passes * unit
+    # streamed jobs also pay the schedule-priced staging time per
+    # iteration once the pod has measured a bandwidth (0.0 before)
+    return init + iters * (passes * unit
+                           + pod.scheduler.modeled_transfer_seconds(job))
 
 
 class MultiPodScheduler:

@@ -295,6 +295,13 @@ class Scheduler:
         self._step_ema: Optional[float] = None
         self._init_ema: Optional[float] = None
         self._ema_alpha = 0.3
+        # measured host<->device bandwidth (bytes/s): the CommSchedule's
+        # modeled bytes per step divided by the staging phase seconds the
+        # tracer attributed to it.  None until a traced streamed step has
+        # been observed (phase spans only exist when tracing is on), in
+        # which case transfer pricing is inactive and the unit EMA keeps
+        # its historical all-inclusive meaning
+        self._bandwidth_ema: Optional[float] = None
         # per-job progress fingerprint at last snapshot (dedups the
         # periodic snapshot's disk writes for unchanged parked jobs)
         self._snapshotted: Dict[str, tuple] = {}
@@ -518,20 +525,41 @@ class Scheduler:
 
     # ---- deadline admission ------------------------------------------------
 
+    def modeled_transfer_seconds(self, job: ReconJob) -> float:
+        """Schedule-priced host<->device staging seconds one outer
+        iteration of ``job`` costs at the measured-bandwidth EMA: the
+        plan's :meth:`~repro.core.plan.CommSchedule.transfer_seconds`
+        evaluated at the bandwidth observed from staging phase spans.
+        0.0 for in-core jobs (operands stay resident) and until a
+        bandwidth has been measured (untraced runs never measure one, so
+        pricing degrades to the historical all-inclusive unit EMA)."""
+        bw = self._bandwidth_ema
+        if bw is None or bw <= 0.0:
+            return 0.0
+        try:
+            if not self.job_footprint(job).streams:
+                return 0.0
+            p = plan_execution(job.geo, job.n_angles, 1, self.pool.memory)
+        except Exception:
+            return 0.0
+        return p.comm.transfer_seconds(bw)
+
     def modeled_completion_seconds(self, rec: JobRecord) -> Optional[float]:
         """Modeled submit-to-completion time if ``rec`` were admitted now:
         elapsed queue wait + modeled (re)init + remaining iterations at
         the observed per-pass unit cost scaled by *this job's* slab-pass
         multiplier (:func:`modeled_step_passes` — the shared cost model),
         so a small in-core job is not priced at the cost of the streamed
-        giants the EMA was observed on.  ``None`` until a step has been
-        observed."""
+        giants the EMA was observed on, plus the per-iteration transfer
+        term for streamed jobs (:meth:`modeled_transfer_seconds`).
+        ``None`` until a step has been observed."""
         if self._step_ema is None:
             return None
         elapsed = time.monotonic() - rec.submit_time
         return (elapsed + (self._init_ema or 0.0)
-                + self._remaining_iters(rec) * self._step_ema
-                * self.job_passes(rec.job))
+                + self._remaining_iters(rec)
+                * (self._step_ema * self.job_passes(rec.job)
+                   + self.modeled_transfer_seconds(rec.job)))
 
     def _reject_for_deadline(self, rec: JobRecord) -> bool:
         """True if the record was consumed by deadline admission control."""
@@ -651,11 +679,29 @@ class Scheduler:
     def _observe_step(self, run: _Running, dt: float) -> None:
         run.slot.busy_seconds += dt
         self.metrics.record_step(dt)
-        self.metrics.record_phases(run.executor.take_phase_seconds())
+        phases = run.executor.take_phase_seconds()
+        self.metrics.record_phases(phases)
         fleet_event("step", job=run.record.job.job_id, pod=self.name,
                     device=run.slot.index, measured_s=dt,
                     modeled_s=(None if self._step_ema is None
-                               else self._step_ema * max(run.passes, 1e-9)))
+                               else self._step_ema * max(run.passes, 1e-9)
+                               + self.modeled_transfer_seconds(
+                                   run.record.job)))
+        # measured-bandwidth feedback: the staging span seconds the obs
+        # layer attributed to this step (critical-path h2d, lookahead
+        # prefetch, d2h) against the CommSchedule's modeled bytes give an
+        # effective bandwidth.  Once it exists, the staging time is
+        # carved out of the unit EMA — the transfer term prices it
+        # separately, and double-counting would overstate backlogs
+        staging = sum(phases.get(k, 0.0) for k in ("h2d", "prefetch", "d2h"))
+        nbytes = run.executor.step_transfer_bytes
+        if staging > 0.0 and nbytes > 0:
+            bw = nbytes / staging
+            self._bandwidth_ema = (bw if self._bandwidth_ema is None
+                                   else self._ema_alpha * bw
+                                   + (1 - self._ema_alpha)
+                                   * self._bandwidth_ema)
+            dt = max(dt - staging, 0.0)
         # the EMA tracks the *per-pass* unit cost: a streamed step's wall
         # time is divided by its slab-pass multiplier, so steps observed
         # on oversized jobs don't inflate the modeled cost of small ones
@@ -931,6 +977,13 @@ class Scheduler:
         """Observed executor init cost (EMA), None before any admission."""
         return self._init_ema
 
+    @property
+    def bandwidth_ema(self) -> Optional[float]:
+        """Measured host<->device bandwidth (bytes/s) from staging phase
+        spans vs the CommSchedule's modeled bytes; None until a traced
+        streamed step has been observed."""
+        return self._bandwidth_ema
+
     def modeled_backlog_seconds(self, unit: Optional[float] = None,
                                 init: Optional[float] = None) -> float:
         """Modeled seconds of work this scheduler still owes: remaining
@@ -950,18 +1003,21 @@ class Scheduler:
                 init = self._init_ema or 0.0
             total = 0.0
             for rec in self.queue.pending_records():
-                total += init + (unit * self._remaining_iters(rec)
-                                 * self.job_passes(rec.job))
+                total += init + self._remaining_iters(rec) * (
+                    unit * self.job_passes(rec.job)
+                    + self.modeled_transfer_seconds(rec.job))
             # mid-admission records (init running outside the lock) are
             # in neither set but still owed work: leaving them out would
             # make the pod look idle to fleet routing/stealing for the
             # whole compile and invite ping-pong moves
             for rec in self._admitting_recs.values():
-                total += init + (unit * self._remaining_iters(rec)
-                                 * self.job_passes(rec.job))
+                total += init + self._remaining_iters(rec) * (
+                    unit * self.job_passes(rec.job)
+                    + self.modeled_transfer_seconds(rec.job))
             for run in self.running.values():
-                total += (unit * self._remaining_iters(run.record)
-                          * run.passes)
+                total += self._remaining_iters(run.record) * (
+                    unit * run.passes
+                    + self.modeled_transfer_seconds(run.record.job))
             return total
 
     #: per-scheduler pricing-memo bound (entries are tiny; the cap only

@@ -1,0 +1,254 @@
+"""CommSchedule IR: the explicit staging/compute/reduce schedule.
+
+* the overlap executors (prefetch depth >= 1) are bit-identical to the
+  serial no-prefetch reference across backends, odd shapes, multiple
+  devices and matched weighting (the schedule changes *when* bytes move,
+  never the accumulation order);
+* ``plan()`` memoization round-trips the schedule fields (distinct cache
+  entries per prefetch depth, same-args identity);
+* the dominance-split dist FP matches the both-variants baseline exactly
+  and never materialises the unused kernel variant (dispatch-key
+  counters);
+* reduction-tree selection and the schedule-derived transfer cost model.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import backend as bk
+from repro.core.distributed import dist_forward_project
+from repro.core.geometry import ConeGeometry, circular_angles
+from repro.core.plan import choose_reduction, hier_group_size, plan
+from repro.core.splitting import MemoryModel
+from repro.core.streaming import stream_backward, stream_forward
+
+KIB = 1024
+
+# (voxel shape, n_angles, budget KiB): even, odd, prime-ish odd
+GRID = [((32, 32, 32), 12, 48),
+        ((18, 24, 24), 10, 40),
+        ((20, 25, 25), 9, 36)]
+
+
+def _case(shape, na, kib):
+    geo = ConeGeometry.nice(32).with_voxels(shape)
+    angles = circular_angles(na)
+    mem = MemoryModel(device_bytes=kib * KIB, usable_fraction=1.0)
+    rng = np.random.default_rng(hash(shape) % 1000)
+    vol = rng.standard_normal(geo.n_voxel).astype(np.float32)
+    proj = rng.standard_normal((na,) + geo.n_detector).astype(np.float32)
+    return geo, angles, mem, vol, proj
+
+
+# --------------------------------------------------------------------------
+# schedule structure + cost model
+# --------------------------------------------------------------------------
+
+def test_schedule_structure_and_describe():
+    geo, angles, mem, _, _ = _case(*GRID[0])
+    p = plan(geo, len(angles), 1, mem, angle_chunk_fp=4, angle_chunk_bp=4)
+    c = p.comm
+    assert c.prefetch_depth == 1 and c.n_buffers == 2
+    assert p.streams and not c.bp_chunk_reuse      # 3 chunks > 2 buffers
+    # every step kind appears; compute steps reference staged slabs only
+    kinds = {s.kind for s in c.fp_steps} | {s.kind for s in c.bp_steps}
+    assert kinds == {"h2d", "compute", "d2h"}
+    # FP h2d traffic = whole volume once per device; d2h = projections once
+    nz, ny, nx = geo.n_voxel
+    nv, nu = geo.n_detector
+    fp_h2d = sum(s.nbytes for s in c.fp_steps if s.kind == "h2d")
+    fp_d2h = sum(s.nbytes for s in c.fp_steps if s.kind == "d2h")
+    assert fp_h2d == nz * ny * nx * 4
+    assert fp_d2h == len(angles) * nv * nu * 4
+    # a deeper schedule marks the lookahead stages as prefetch
+    deep = p.with_prefetch(3).comm
+    assert deep.n_buffers == 4
+    assert any(s.prefetch for s in deep.fp_steps)
+    assert not any(s.prefetch for s in p.with_prefetch(0).comm.fp_steps)
+    d = c.describe()
+    assert "CommSchedule" in d and "fp:" in d and "bp:" in d
+    assert "ExecutionPlan" in p.describe() and "reduce=" in p.describe()
+
+
+def test_bp_chunk_reuse_drops_restage_traffic():
+    geo, angles, _, _, _ = _case(*GRID[0])
+    # 150 KiB: the volume still splits (3 slabs) but the whole 12-angle
+    # projection set fits one resident chunk
+    mem = MemoryModel(device_bytes=150 * KIB, usable_fraction=1.0)
+    p = plan(geo, len(angles), 1, mem, angle_chunk_fp=4, angle_chunk_bp=32)
+    c = p.comm
+    assert c.bp_chunk_reuse
+    n_slabs = p.backward.n_slabs
+    assert n_slabs > 1
+    h2d = [s for s in c.bp_steps if s.kind == "h2d"]
+    assert len(h2d) == 1        # staged once, reused by every later slab
+    # the no-reuse schedule re-stages per slab
+    p4 = plan(geo, len(angles), 1, mem, angle_chunk_fp=4, angle_chunk_bp=4)
+    assert not p4.comm.bp_chunk_reuse
+    assert len([s for s in p4.comm.bp_steps if s.kind == "h2d"]) > 1
+
+
+def test_transfer_seconds_cost_model():
+    geo, angles, mem, _, _ = _case(*GRID[0])
+    p = plan(geo, len(angles), 1, mem, angle_chunk_fp=4, angle_chunk_bp=4)
+    c = p.comm
+    assert c.bytes_moved() == c.bytes_moved("fp") + c.bytes_moved("bp")
+    # single device: all bytes on one lane
+    assert c.transfer_seconds(1e6) == pytest.approx(c.bytes_moved() / 1e6)
+    with pytest.raises(ValueError, match="positive"):
+        c.transfer_seconds(0.0)
+    # two devices split the FP d2h + BP slab traffic: busiest-lane time
+    # is strictly less than the single-device serialization
+    p2 = plan(geo, len(angles), 2, mem, angle_chunk_fp=4, angle_chunk_bp=4)
+    assert p2.comm.transfer_seconds(1e6) < c.transfer_seconds(1e6)
+
+
+def test_reduction_tree_selection():
+    assert choose_reduction(1) == "psum" and choose_reduction(2) == "psum"
+    assert choose_reduction(3) == "ring" and choose_reduction(7) == "ring"
+    assert choose_reduction(4) == "hier" and choose_reduction(6) == "hier"
+    assert hier_group_size(4) == 2 and hier_group_size(9) == 3
+    assert hier_group_size(12) == 3 and hier_group_size(5) == 1
+
+
+# --------------------------------------------------------------------------
+# plan() memoization round-trips the schedule
+# --------------------------------------------------------------------------
+
+def test_plan_memo_roundtrips_comm_fields():
+    geo, angles, mem, _, _ = _case(*GRID[1])
+    p1 = plan(geo, len(angles), 1, mem)
+    assert p1 is plan(geo, len(angles), 1, mem)        # same-args identity
+    p2 = plan(geo, len(angles), 1, mem, prefetch_depth=2)
+    assert p2 is not p1                                # distinct memo entry
+    assert p2.comm.prefetch_depth == 2 and p2.comm.n_buffers == 3
+    assert p1.comm.prefetch_depth == 1                 # default untouched
+    assert p2 is plan(geo, len(angles), 1, mem, prefetch_depth=2)
+    # with_prefetch derives the same schedule the memo would build
+    assert (p1.with_prefetch(2).comm.fp_steps == p2.comm.fp_steps)
+    assert (p1.with_prefetch(2).comm.bp_steps == p2.comm.bp_steps)
+
+
+# --------------------------------------------------------------------------
+# overlap executors == serial no-prefetch reference (bit-identical)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,na,kib", GRID)
+def test_stream_overlap_bit_identical_ref(shape, na, kib):
+    geo, angles, mem, vol, proj = _case(shape, na, kib)
+    p = plan(geo, na, 1, mem, angle_chunk_fp=4, angle_chunk_bp=4)
+    serial = p.with_prefetch(0)
+    fp0 = stream_forward(vol, geo, angles, serial)
+    bp0 = stream_backward(proj, geo, angles, serial, weight="fdk")
+    bpm0 = stream_backward(proj, geo, angles, serial, weight="matched")
+    for depth in (1, 3):
+        pd = p.with_prefetch(depth)
+        np.testing.assert_array_equal(
+            fp0, stream_forward(vol, geo, angles, pd))
+        np.testing.assert_array_equal(
+            bp0, stream_backward(proj, geo, angles, pd, weight="fdk"))
+        np.testing.assert_array_equal(
+            bpm0, stream_backward(proj, geo, angles, pd, weight="matched"))
+
+
+def test_stream_backward_angle_subset_rebuilds_steps():
+    """A caller may backproject a *subset* of the plan's angles through
+    the same memoized plan (OS-SART builds per-subset norm factors this
+    way).  The interpreter must rebuild the step list for the angles
+    actually passed instead of indexing chunks that do not exist."""
+    geo, angles, mem, vol, proj = _case(*GRID[0])
+    na = len(angles)
+    p = plan(geo, na, 1, mem, angle_chunk_fp=4, angle_chunk_bp=4)
+    sub = np.arange(0, na, 3)          # 4 of 12 angles -> fewer chunks
+    want = stream_backward(proj[sub], geo, angles[sub],
+                           p.backward, weight="fdk")
+    got = stream_backward(proj[sub], geo, angles[sub], p, weight="fdk")
+    np.testing.assert_array_equal(want, got)
+
+
+def test_stream_overlap_bit_identical_two_devices():
+    geo, angles, mem, vol, proj = _case(*GRID[2])
+    devs = jax.local_devices()[:2]
+    p = plan(geo, len(angles), 2, mem, angle_chunk_fp=4, angle_chunk_bp=4)
+    serial = p.with_prefetch(0)
+    fp0 = stream_forward(vol, geo, angles, serial, devices=devs)
+    bp0 = stream_backward(proj, geo, angles, serial, weight="fdk",
+                          devices=devs)
+    np.testing.assert_array_equal(
+        fp0, stream_forward(vol, geo, angles, p, devices=devs))
+    np.testing.assert_array_equal(
+        bp0, stream_backward(proj, geo, angles, p, weight="fdk",
+                             devices=devs))
+
+
+def test_stream_overlap_bit_identical_pallas():
+    geo, angles, mem, vol, proj = _case(*GRID[1])
+    p = plan(geo, len(angles), 1, mem, angle_chunk_fp=4, angle_chunk_bp=4)
+    serial = p.with_prefetch(0)
+    fp0 = stream_forward(vol, geo, angles, serial, backend="pallas")
+    bp0 = stream_backward(proj, geo, angles, serial, weight="fdk",
+                          backend="pallas")
+    np.testing.assert_array_equal(
+        fp0, stream_forward(vol, geo, angles, p, backend="pallas"))
+    np.testing.assert_array_equal(
+        bp0, stream_backward(proj, geo, angles, p, weight="fdk",
+                             backend="pallas"))
+
+
+# --------------------------------------------------------------------------
+# dominance split: exact vs both-variants baseline, lazy kernel build
+# --------------------------------------------------------------------------
+
+def test_dominance_split_matches_both_variants(host_mesh):
+    geo = ConeGeometry.nice(32)
+    angles = circular_angles(16)       # mixed dominance
+    rng = np.random.default_rng(7)
+    vol = jnp.asarray(rng.standard_normal(geo.n_voxel).astype(np.float32))
+    with host_mesh:
+        split = dist_forward_project(host_mesh, geo, backend="pallas")
+        both = dist_forward_project(host_mesh, geo, backend="pallas",
+                                    dominance_split=False)
+        a = np.asarray(split(vol, jnp.asarray(angles)))
+        b = np.asarray(both(vol, jnp.asarray(angles)))
+    # same kernels on the same shards — the host-level regrouping must
+    # not perturb a single bit
+    np.testing.assert_array_equal(a, b)
+
+
+def test_dominance_split_skips_unused_variant(host_mesh):
+    """The 2x-FP fix, asserted via dispatch counters: an all-x-dominant
+    workload through the non-ref dist FP must never materialise the
+    y-dominant kernel variant."""
+    geo = ConeGeometry.nice(32)
+    rng = np.random.default_rng(3)
+    vol = jnp.asarray(rng.standard_normal(geo.n_voxel).astype(np.float32))
+    xdom = np.asarray([0.0, 0.1, -0.1, 0.05, 0.2, -0.2, 0.15, -0.05],
+                      np.float32)      # all x-dominant
+    bk.clear_dispatch_cache()
+    with host_mesh:
+        fp = dist_forward_project(host_mesh, geo, backend="pallas")
+        fp(vol, jnp.asarray(xdom)).block_until_ready()
+    fp_keys = [k for k in bk.dispatch_cache_keys() if k[1] == "fp"]
+    assert fp_keys, "no FP kernel was built at all"
+    assert all(k[3] is True for k in fp_keys), \
+        f"unused y-dominant variant was built: {fp_keys}"
+
+
+def test_dist_reduction_schedules_match(mesh82):
+    """ring and hierarchical reduction orders on 4 model shards produce
+    the psum baseline's result."""
+    geo = ConeGeometry.nice(32)
+    angles = circular_angles(8)
+    rng = np.random.default_rng(5)
+    vol = jnp.asarray(rng.standard_normal(geo.n_voxel).astype(np.float32))
+    outs = {}
+    with mesh82:
+        for r in ("psum", "ring", "hier"):
+            f = dist_forward_project(mesh82, geo, reduce=r, backend="ref")
+            outs[r] = np.asarray(f(vol, jnp.asarray(angles)))
+    np.testing.assert_allclose(outs["ring"], outs["psum"],
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(outs["hier"], outs["psum"],
+                               rtol=1e-6, atol=1e-6)

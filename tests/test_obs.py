@@ -272,6 +272,41 @@ def test_validate_trace_tool_accepts_real_trace(tracer, tmp_path):
     assert "TRACE OK" in proc.stdout
 
 
+def test_validate_trace_checks_prefetch_reduce_bytes(tracer, tmp_path):
+    """The CommSchedule executors' prefetch/reduce spans are optional in
+    a trace, but any that appear must be sized (the serving layer's
+    bandwidth EMA is priced from their bytes args)."""
+    with obs.context(pod="p0", device=0):
+        for cat in ("h2d", "compute", "d2h"):
+            with obs.span(cat, cat, slab=0):
+                pass
+        with obs.span("staging", "prefetch", slab=1, bytes=4096):
+            pass
+        with obs.span("reduce", "reduce", op="dist_fp", bytes=2048):
+            pass
+    path = str(tmp_path / "t.json")
+    tracer.write_chrome_trace(path)
+    proc = subprocess.run(
+        [sys.executable, "tools/validate_trace.py", path,
+         "--require-phases"],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "prefetch" in proc.stdout and "reduce" in proc.stdout
+
+    # an unsized prefetch span is an instrumentation regression
+    bad = {"traceEvents": [
+        {"ph": "X", "name": "staging", "cat": "prefetch", "pid": 1,
+         "tid": 1, "ts": 0.0, "dur": 1.0, "args": {"slab": 1}}]}
+    bad_path = str(tmp_path / "bad.json")
+    with open(bad_path, "w") as f:
+        json.dump(bad, f)
+    proc = subprocess.run(
+        [sys.executable, "tools/validate_trace.py", bad_path],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "bytes" in proc.stdout
+
+
 # --------------------------------------------------------------------------
 # fleet events
 # --------------------------------------------------------------------------

@@ -577,6 +577,54 @@ def test_scale_up_still_retries_name_collisions(tmp_path):
     assert {p.name for p in mps.pods} == {"seed", "burst-as0", "burst-as1"}
 
 
+def test_scale_up_picks_template_by_queued_footprint_fit(tmp_path):
+    """Heterogeneous template pool: a backlog-triggered scale-up picks
+    the template by queued-job footprint fit, not by cycling order —
+    ties break toward the smaller pod, and a job only one template can
+    hold forces that template regardless of its position."""
+    # tie case: small queued jobs fit both templates, so the smaller
+    # template must win even though cycling would instantiate "big"
+    # (index 0) first
+    mps = MultiPodScheduler([_pod("seed", kib=220)],
+                            transfer_dir=str(tmp_path / "xfer"))
+    asc = Autoscaler(mps,
+                     [PodSpec("big", n_devices=1, memory=_mem(8 * KIB)),
+                      PodSpec("small", n_devices=1, memory=_mem(220))],
+                     _policy(max_pods=4), load_fn=lambda pods: 10.0)
+    assert asc._pick_template() is None    # empty queue: cycling fallback
+    mps.pods[0].scheduler.pause_admission()
+    jids = [mps.submit(_job(n_iter=1), pod="seed") for _ in range(3)]
+    ev = asc.step()
+    assert ev is not None and ev.direction == "up"
+    assert ev.pod.startswith("small-as"), \
+        "cycling order (big first) overrode the footprint fit"
+
+    # fit-dominance case: the one queued job only fits the big template,
+    # which sits *after* "small" in cycling order
+    mps2 = MultiPodScheduler([_pod("seed", kib=8 * KIB)],
+                             transfer_dir=str(tmp_path / "xfer2"))
+    asc2 = Autoscaler(mps2,
+                      [PodSpec("small", n_devices=1, memory=_mem(220)),
+                       PodSpec("big", n_devices=1, memory=_mem(8 * KIB))],
+                      _policy(max_pods=4), load_fn=lambda pods: 10.0)
+    mps2.pods[0].scheduler.pause_admission()
+    big_jid = mps2.submit(_job(n_iter=1, memory_hint_bytes=5000 * KIB),
+                          pod="seed")
+    ev2 = asc2.step()
+    assert ev2 is not None and ev2.pod.startswith("big-as"), \
+        "cycling (small first) beat the only template that fits"
+
+    # the parked jobs still complete once admission resumes
+    for m in (mps, mps2):
+        m.autoscaler = None
+        for p in m.pods:
+            p.scheduler.resume_admission()
+        m.run()
+    for j in jids:
+        assert mps.record(j).status is JobStatus.COMPLETED
+    assert mps2.record(big_jid).status is JobStatus.COMPLETED
+
+
 def test_scale_up_writes_manifest_outside_fleet_lock(tmp_path, monkeypatch):
     """Regression: the autoscaler's scale-up used to write fleet.json
     while holding the re-entrant fleet lock, serializing every submit

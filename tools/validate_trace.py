@@ -16,7 +16,12 @@ Checks (Chrome trace):
 * instant events (``ph == "i"``) carry a scope ``s``;
 * with ``--require-phases`` (the recon smoke): at least one complete
   span in each of the h2d / compute / d2h categories, and at least one
-  span carrying a ``slab`` arg on a named device track.
+  span carrying a ``slab`` arg on a named device track;
+* ``prefetch`` / ``reduce`` spans (the CommSchedule executors' lookahead
+  staging and cross-shard merge) are optional — a depth-0 schedule has
+  no prefetch, a single dominance group no reduce — but any that appear
+  must carry a numeric ``bytes`` arg, because the serving layer's
+  measured-bandwidth EMA is priced from exactly those byte counts.
 
 Checks (bench JSON, ``--bench-json``): top level carries ``bench`` and
 a non-empty ``rows`` (operators) or ``configs`` (serve) payload.
@@ -35,6 +40,8 @@ import numbers
 import sys
 
 REQUIRED_PHASES = ("h2d", "compute", "d2h")
+# optional staging-motion categories; when present, spans must be sized
+BYTES_PHASES = ("prefetch", "reduce")
 
 
 def fail(msg: str) -> None:
@@ -68,6 +75,11 @@ def validate_chrome_trace(path: str, require_phases: bool) -> int:
             if not isinstance(e.get("dur"), numbers.Real) or e["dur"] < 0:
                 fail(f"{path}: complete event needs dur >= 0: {e}")
             cats.add(e.get("cat"))
+            if e.get("cat") in BYTES_PHASES:
+                nb = e.get("args", {}).get("bytes")
+                if not isinstance(nb, numbers.Real) or nb < 0:
+                    fail(f"{path}: {e.get('cat')} span needs a numeric "
+                         f"'bytes' arg: {e}")
         elif e["ph"] == "i":
             if "s" not in e:
                 fail(f"{path}: instant event needs scope 's': {e}")
@@ -100,8 +112,14 @@ def validate_bench_json(path: str) -> None:
     if rows is not None:
         if not rows:
             fail(f"{path}: empty 'rows'")
+        # per-bench row schema: the scaling bench reports overlap-on/off
+        # arm times per (op, N, n_dev); the operators bench reports
+        # backend x mode operator times
+        required = (("op", "N", "n_dev", "overlap_s", "serial_s")
+                    if doc["bench"] == "scaling"
+                    else ("mode", "backend", "fp_s", "bp_s"))
         for r in rows:
-            for key in ("mode", "backend", "fp_s", "bp_s"):
+            for key in required:
                 if key not in r:
                     fail(f"{path}: row missing {key!r}: {r}")
     elif configs is not None:

@@ -39,6 +39,13 @@ idle gaps (the demand pattern autoscaling exists for):
   pod-seconds (<= 0.7x), and every job a scale-down drain moved is
   re-run undrained and asserted bit-identical.
 
+Zero-loss section — the kill -9 drill: a snapshotting scheduler is
+killed repeatedly mid-run (each death lands after a copy-on-checkpoint
+snapshot of its *running* jobs plus further doomed progress) and rebuilt
+purely from disk; the section reports ``iterations_lost`` — committed
+iterations that regressed across any death — which must be exactly 0,
+with every job's final volume bit-identical to an uninterrupted run.
+
 Every step blocks on its compute (no async-dispatch mis-timing), so
 both the wall numbers and the per-device busy clocks are honest.  The
 modeled makespan (max over device busy clocks) remains the stand-in for
@@ -292,6 +299,85 @@ def bursty_section(args, smoke: bool = False) -> Dict[str, Dict]:
     return results
 
 
+def run_zero_loss(name: str, n_jobs: int, n_kills: int,
+                  budget_kib: int = 220, n_iter: int = 3) -> Dict:
+    """Kill -9 drill: a snapshotting scheduler is killed ``n_kills``
+    times mid-run — each kill lands *after* a copy-on-checkpoint
+    snapshot of the running jobs and after further (doomed) progress,
+    simulated by discarding the live scheduler and rebuilding purely
+    from disk.  Accounts committed iterations across every death:
+    ``iterations_lost`` must be exactly 0 (nothing a snapshot committed
+    ever regresses), and every job's final volume must be bit-identical
+    to an uninterrupted single-shot reconstruction."""
+    geo = ConeGeometry.nice(16)
+    ang = circular_angles(12)
+    proj = phantoms.sphere_projection_analytic(geo, ang)
+    mem = MemoryModel(device_bytes=budget_kib * KIB, usable_fraction=1.0)
+    snap = tempfile.mkdtemp(prefix="bench-zero-loss-")
+
+    sched = Scheduler(n_devices=2, memory=mem, snapshot_dir=snap)
+    ids = [sched.submit(ReconJob("cgls", geo, ang, proj, n_iter=n_iter))
+           for _ in range(n_jobs)]
+    results: Dict[str, np.ndarray] = {}
+
+    def harvest():
+        for j in ids:
+            rec = sched.records.get(j)
+            if j not in results and rec is not None and rec.done:
+                results[j] = np.asarray(sched.result(j))
+
+    t0 = time.monotonic()
+    kills = lost = quanta = 0
+    while not sched.idle:
+        sched.step_quantum()
+        quanta += 1
+        assert quanta < 500, "zero-loss drill failed to converge"
+        harvest()
+        if kills < n_kills and not sched.idle:
+            sched.snapshot(snap)               # running jobs included
+            committed = {j: sched.records[j].iterations_done
+                         for j in ids
+                         if j in sched.records and not sched.records[j].done}
+            sched.step_quantum()               # doomed progress, then die
+            quanta += 1
+            sched = Scheduler(n_devices=2, memory=mem, snapshot_dir=snap)
+            sched.restore(snap)
+            for j, it in committed.items():
+                lost += max(0, it - sched.records[j].iterations_done)
+            kills += 1
+    harvest()
+    wall = time.monotonic() - t0
+
+    ref = np.asarray(cgls_reference(geo, ang, proj, n_iter))
+    verified = 0
+    for j in ids:
+        np.testing.assert_array_equal(results[j], ref)
+        verified += 1
+    assert lost == 0, f"{name}: {lost} committed iterations lost"
+    return {"jobs": n_jobs, "kills": kills, "iterations_lost": lost,
+            "verified_bit_identical": verified, "wall_seconds": wall}
+
+
+def cgls_reference(geo, ang, proj, n_iter):
+    """Uninterrupted reference for the zero-loss drill."""
+    from repro.core.algorithms import cgls
+    return cgls(proj, geo, ang, n_iter=n_iter)
+
+
+def zero_loss_section(smoke: bool = False) -> Dict[str, Dict]:
+    print("\nconfig,jobs,injected_kills,iterations_lost,"
+          "verified_bit_identical,wall_s")
+    n_jobs, n_kills = (3, 1) if smoke else (6, 3)
+    s = run_zero_loss("zero-loss", n_jobs, n_kills)
+    print(f"zero-loss,{s['jobs']},{s['kills']},{s['iterations_lost']},"
+          f"{s['verified_bit_identical']},{s['wall_seconds']:.2f}")
+    print(f"# zero-loss drill: {s['kills']} mid-run kills, "
+          f"{s['iterations_lost']} committed iterations lost (target: 0); "
+          f"{s['verified_bit_identical']}/{s['jobs']} jobs bit-identical "
+          f"to uninterrupted runs")
+    return {"zero-loss": s}
+
+
 def smoke_main() -> Dict[str, Dict]:
     """Tiny end-to-end gate for CI: one threaded single-pod config and
     one 2-burst autoscaled trace must run to completion (the asserts
@@ -303,8 +389,10 @@ def smoke_main() -> Dict[str, Dict]:
                           threaded=True)
     run_config("mp-warmup", make_multipod_workload(2), 1, 800)
     bursty = bursty_section(ns, smoke=True)
+    zero_loss = zero_loss_section(smoke=True)
     print("SMOKE OK")
-    return {"configs": {"threaded": threaded}, "bursty": bursty}
+    return {"configs": {"threaded": threaded}, "bursty": bursty,
+            "zero_loss": zero_loss}
 
 
 def _write_json(doc: Dict, path: str) -> None:
@@ -439,6 +527,8 @@ def main():
 
     if args.bursts >= 1 and args.max_pods >= 2:
         doc["bursty"] = bursty_section(args)
+
+    doc["zero_loss"] = zero_loss_section()
 
     if args.json_out:
         _write_json(doc, args.json_out)

@@ -94,13 +94,29 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, keep: int = 3) -> str:
         }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
+    _write_commit(tmp)
+    _publish(tmp, out)
+    _gc(ckpt_dir, keep)
+    return out
+
+
+def _write_commit(tmp: str) -> None:
+    """Write the COMMIT marker into a fully-written ``.tmp`` step
+    directory.  A separate function so crash-injection tests can kill
+    exactly here: leaves + manifest on disk, marker absent — the
+    directory must stay invisible to :func:`latest_step`."""
     with open(os.path.join(tmp, "COMMIT"), "w") as f:
         f.write(str(time.time()))
+
+
+def _publish(tmp: str, out: str) -> None:
+    """Atomically publish a committed ``.tmp`` step directory under its
+    final name.  A separate function so crash-injection tests can kill
+    exactly here: the commit marker exists but only inside ``.tmp``,
+    which readers ignore — the previous published step stays intact."""
     if os.path.exists(out):
         shutil.rmtree(out)
     os.replace(tmp, out)
-    _gc(ckpt_dir, keep)
-    return out
 
 
 def _gc(ckpt_dir: str, keep: int):

@@ -28,6 +28,25 @@ def make_host_mesh(model_axis: int = 1):
     return make_mesh((n // model_axis, model_axis), ("data", "model"))
 
 
+def make_pod_mesh(pods: int, model_axis: int = 1):
+    """Mesh over the local devices with a leading "pod" axis: ``pods``
+    equal groups, each a (data, model) grid.  This is how a single-host
+    rig (tests, CPU with ``--xla_force_host_platform_device_count``)
+    expresses a multi-pod fleet on *real* device handles — the serving
+    layer's ``restore_fleet(mesh=...)`` and ``pods_from_mesh`` split it
+    back into per-pod groups via :func:`pod_device_groups`."""
+    n = jax.local_device_count()
+    if pods < 1 or n % pods != 0:
+        raise ValueError(f"make_pod_mesh: {n} local devices do not split "
+                         f"into {pods} equal pods")
+    per = n // pods
+    if per % model_axis != 0:
+        raise ValueError(f"make_pod_mesh: per-pod device count {per} is "
+                         f"not divisible by model_axis={model_axis}")
+    return make_mesh((pods, per // model_axis, model_axis),
+                     ("pod", "data", "model"))
+
+
 def pod_device_groups(mesh, pod_axis: str = "pod"):
     """Split a mesh's devices into per-pod groups (one group per index
     along ``pod_axis``).

@@ -16,6 +16,9 @@ through a simulated multi-pod fleet instead of a single scheduler
 own subdirectory, a ``fleet.json`` manifest records the membership, and
 a re-run rebuilds the whole fleet with
 ``MultiPodScheduler.restore_fleet`` and resumes bit-identically.
+``--pin-devices`` pins each pod to real local JAX devices through a
+pod-axis mesh; the manifest records budgets only, so the restore path
+hands the same mesh back to ``restore_fleet`` to re-derive the pins.
 
 ``--trace out.json`` enables the process tracer
 (:mod:`repro.obs`) for the run and writes a Chrome-trace JSON —
@@ -59,14 +62,14 @@ def reconstruct(algname: str = "cgls", n: int = 64, n_angles: int = 96,
                 device_bytes: int = 0, verbose: bool = True,
                 snapshot_dir: str = "", pods: int = 1,
                 backend: str = "auto", trace: str = "",
-                prometheus: str = ""):
+                prometheus: str = "", pin_devices: bool = False):
     if trace or prometheus:
         from repro import obs
         obs.get_tracer().enable()
         try:
             return _reconstruct(algname, n, n_angles, iters, mode,
                                 device_bytes, verbose, snapshot_dir,
-                                pods, backend)
+                                pods, backend, pin_devices)
         finally:
             # written even on a preempted exit: the partial timeline is
             # exactly what you want to look at after a preemption
@@ -81,11 +84,11 @@ def reconstruct(algname: str = "cgls", n: int = 64, n_angles: int = 96,
                 if verbose:
                     print(f"[recon] prometheus snapshot -> {prometheus}")
     return _reconstruct(algname, n, n_angles, iters, mode, device_bytes,
-                        verbose, snapshot_dir, pods, backend)
+                        verbose, snapshot_dir, pods, backend, pin_devices)
 
 
 def _reconstruct(algname, n, n_angles, iters, mode, device_bytes,
-                 verbose, snapshot_dir, pods, backend):
+                 verbose, snapshot_dir, pods, backend, pin_devices=False):
     geo = ConeGeometry.nice(n)
     job_backend = None if backend == "auto" else backend
     vol, angles, proj = make_ct_dataset(geo, n_angles)
@@ -106,10 +109,25 @@ def _reconstruct(algname, n, n_angles, iters, mode, device_bytes,
         from repro.serve.pool import FLEET_MANIFEST
         guard = PreemptionGuard()
         root = snapshot_dir or None
+        mesh = None
+        if pin_devices:
+            # real device handles: split the local devices into `pods`
+            # groups along a leading "pod" mesh axis.  On restore the
+            # same mesh re-derives the pins the manifest cannot record.
+            from repro.launch.mesh import make_pod_mesh, pod_device_groups
+            mesh = make_pod_mesh(pods)
         if root and os.path.isfile(os.path.join(root, FLEET_MANIFEST)):
             # a previous run left a fleet snapshot: rebuild membership +
             # parked jobs and resume them instead of starting over
-            mps = MultiPodScheduler.restore_fleet(root, guard=guard)
+            mps = MultiPodScheduler.restore_fleet(root, guard=guard,
+                                                  mesh=mesh)
+        elif mesh is not None:
+            groups = pod_device_groups(mesh)
+            mps = MultiPodScheduler(
+                [Pod(PodSpec(f"pod{i}", n_devices=len(g), memory=mem,
+                             jax_devices=tuple(g)), guard=guard)
+                 for i, g in enumerate(groups)],
+                snapshot_root=root)
         else:
             mps = MultiPodScheduler(
                 [Pod(PodSpec(f"pod{i}", n_devices=1, memory=mem),
@@ -234,6 +252,12 @@ def main():
                          "pods (multi-pod routing + work stealing; see "
                          "docs/serve.md); works with --snapshot-dir for "
                          "fleet-level durable resume")
+    ap.add_argument("--pin-devices", action="store_true",
+                    help="pin each pod to real local JAX devices via a "
+                         "pod-axis mesh (local device count must divide "
+                         "into --pods); on restore the same mesh "
+                         "re-derives the pins the fleet manifest cannot "
+                         "record")
     ap.add_argument("--trace", default="",
                     help="enable tracing and write a Chrome-trace JSON "
                          "here (open at https://ui.perfetto.dev; see "
@@ -245,7 +269,7 @@ def main():
     reconstruct(args.alg, args.n, args.angles, args.iters, args.mode,
                 args.device_bytes, snapshot_dir=args.snapshot_dir,
                 pods=args.pods, backend=args.backend, trace=args.trace,
-                prometheus=args.prometheus)
+                prometheus=args.prometheus, pin_devices=args.pin_devices)
 
 
 if __name__ == "__main__":

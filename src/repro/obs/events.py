@@ -29,6 +29,10 @@ Kinds
 ``scale-up``    autoscaler grew the fleet  (``load`` = backlog seconds)
 ``scale-down``  autoscaler shrank the fleet
 ``snapshot``    durable scheduler snapshot written
+``live-snapshot`` a *running* job's committed step state persisted
+                without parking it (``it`` = the committed iteration)
+``migrate``     a running job preempted at its step boundary and moved
+                live to another pod (``src``/``dst`` pods)
 """
 
 from __future__ import annotations
@@ -42,7 +46,7 @@ __all__ = ["FLEET_EVENT_KINDS", "fleet_event", "fleet_event_log"]
 FLEET_EVENT_KINDS = (
     "submit", "place", "admit", "step", "park", "complete", "fail",
     "reject", "export", "import", "drain", "pod-add", "pod-remove",
-    "scale-up", "scale-down", "snapshot",
+    "scale-up", "scale-down", "snapshot", "live-snapshot", "migrate",
 )
 
 

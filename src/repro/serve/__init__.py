@@ -67,7 +67,8 @@ from .scheduler import (DevicePool, DeviceSlot, JobFootprint, Scheduler,
 from .driver import AsyncDriver, MultiPodDriver
 from .pool import (MultiPodScheduler, Pod, PodSpec, RetiredPodSummary,
                    modeled_job_seconds, pods_from_mesh)
-from .steal import StealPolicy, drain_pod, steal_once, steal_pass
+from .steal import (StealPolicy, drain_pod, migrate_once, steal_once,
+                    steal_pass)
 from .autoscale import Autoscaler, AutoscalePolicy, ScaleEvent
 
 __all__ = ["ReconJob", "JobRecord", "JobStatus", "PriorityJobQueue",
@@ -77,5 +78,6 @@ __all__ = ["ReconJob", "JobRecord", "JobStatus", "PriorityJobQueue",
            "fair_share_weight", "AsyncDriver", "MultiPodDriver",
            "MultiPodScheduler", "Pod", "PodSpec", "RetiredPodSummary",
            "modeled_job_seconds",
-           "pods_from_mesh", "StealPolicy", "drain_pod", "steal_once",
-           "steal_pass", "Autoscaler", "AutoscalePolicy", "ScaleEvent"]
+           "pods_from_mesh", "StealPolicy", "drain_pod", "migrate_once",
+           "steal_once", "steal_pass", "Autoscaler", "AutoscalePolicy",
+           "ScaleEvent"]

@@ -100,6 +100,14 @@ class AutoscalePolicy:
     scale_up_queue_depth: Optional[int] = None
     #: how long a scale-down drain may take before it is aborted
     drain_timeout_seconds: float = 60.0
+    #: predictive scale-up: trigger while the backlog is still *below*
+    #: the high watermark when its observed growth rate projects it
+    #: across within the fleet's init-EMA lead time — a new pod pays
+    #: roughly one executor init before it does useful work, so by
+    #: starting that early the pod is live as the band is crossed
+    #: instead of an init after it.  Inactive until the fleet has
+    #: observed an init (cold fleets have no lead time to hide).
+    predictive_scale_up: bool = False
 
     def __post_init__(self):
         if self.scale_down_backlog_seconds >= self.scale_up_backlog_seconds:
@@ -120,6 +128,7 @@ class ScaleEvent:
     pod: str              # pod added or retired
     load: float           # fleet per-device backlog that triggered it
     n_pods: int           # live pods *after* the event
+    predicted: bool = False   # fired by the predictive (lead-time) path
 
 
 class Autoscaler:
@@ -180,6 +189,9 @@ class Autoscaler:
         self._above_since: Optional[float] = None
         self._below_since: Optional[float] = None
         self._last_event: Optional[float] = None
+        # previous (clock, load) observation: the predictive scale-up's
+        # slope estimate (None until step() has observed once)
+        self._last_obs: Optional[Tuple[float, float]] = None
         self.events: List[ScaleEvent] = []
         #: every job moved off a pod by a scale-down drain (the bench
         #: re-runs each one undrained and asserts bit-identity)
@@ -222,6 +234,21 @@ class Autoscaler:
         if p.scale_up_queue_depth is not None:
             want_up = want_up or (self._queue_depth_per_pod(pods)
                                   > p.scale_up_queue_depth)
+        # predictive trigger: the load is still inside the band, but its
+        # observed growth rate crosses the high watermark within the
+        # fleet's init-EMA lead time — exactly the time a new pod needs
+        # before it does useful work, so start it now and it is live as
+        # the band is crossed.  Windows and cooldown still apply.
+        predicted = False
+        prev, self._last_obs = self._last_obs, (now, load)
+        if not want_up and p.predictive_scale_up and prev is not None:
+            lead = fleet_units(pods)[1]
+            if lead > 0 and now > prev[0]:
+                slope = (load - prev[1]) / (now - prev[0])
+                if (slope > 0
+                        and load + slope * lead
+                        > p.scale_up_backlog_seconds):
+                    want_up = predicted = True
         want_down = load < p.scale_down_backlog_seconds and not want_up
 
         # window state is read into locals once updated: a submit-thread
@@ -247,7 +274,7 @@ class Autoscaler:
             return None
         if (want_up and len(pods) < p.max_pods
                 and now - above >= p.up_window_seconds):
-            return self._scale_up(now, load)
+            return self._scale_up(now, load, predicted=predicted)
         if (want_down and len(pods) > p.min_pods
                 and now - below >= p.down_window_seconds):
             return self._scale_down(now, load, pods)
@@ -314,8 +341,8 @@ class Autoscaler:
                 continue    # name collision (e.g. after restore): next k
 
     def _scale_up(self, now: float, load: float,
-                  template_index: Optional[int] = None
-                  ) -> Optional[ScaleEvent]:
+                  template_index: Optional[int] = None,
+                  predicted: bool = False) -> Optional[ScaleEvent]:
         # backlog-triggered scale-ups (no explicit template) pick by
         # queued-job footprint fit; done *before* the fleet lock — the
         # fit scan walks every pod's queue and prices footprints
@@ -340,8 +367,9 @@ class Autoscaler:
         self._last_event = now
         self._above_since = None
         ev = ScaleEvent(now, "up", pod.name, load,
-                        len(self.mps.pods_snapshot()))
-        fleet_event("scale-up", pod=pod.name, load=load, n_pods=ev.n_pods)
+                        len(self.mps.pods_snapshot()), predicted=predicted)
+        fleet_event("scale-up", pod=pod.name, load=load, n_pods=ev.n_pods,
+                    predicted=predicted)
         self.events.append(ev)
         return ev
 

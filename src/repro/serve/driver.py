@@ -60,16 +60,24 @@ class AsyncDriver:
     snapshot_dir : where periodic + drain snapshots go; defaults to
         ``scheduler.snapshot_dir`` (None disables persistence).
     snapshot_every_seconds : period of the background durable snapshots
-        of parked jobs (0 disables; drain still persists).
+        (0 disables; drain still persists).
+    snapshot_running : include *running* jobs in the periodic snapshot
+        (copy-on-checkpoint at step boundaries, see
+        :meth:`Scheduler.snapshot`) so a kill -9 mid-run resumes each
+        job from its last persisted completed step instead of its last
+        parked state.  On by default; False restores the parked-only
+        behaviour.
     """
 
     def __init__(self, scheduler: Scheduler, poll_seconds: float = 0.001,
                  snapshot_dir: Optional[str] = None,
-                 snapshot_every_seconds: float = 0.0):
+                 snapshot_every_seconds: float = 0.0,
+                 snapshot_running: bool = True):
         self.scheduler = scheduler
         self.poll_seconds = poll_seconds
         self.snapshot_dir = snapshot_dir or scheduler.snapshot_dir
         self.snapshot_every_seconds = snapshot_every_seconds
+        self.snapshot_running = snapshot_running
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
         # first *internal* error (scheduler/snapshot machinery, not tenant
@@ -166,7 +174,8 @@ class AsyncDriver:
                         and self.snapshot_every_seconds > 0
                         and time.monotonic() - last_snap
                         >= self.snapshot_every_seconds):
-                    sched.snapshot(self.snapshot_dir)
+                    sched.snapshot(self.snapshot_dir,
+                                   include_running=self.snapshot_running)
                     last_snap = time.monotonic()
                 time.sleep(self.poll_seconds)
         except BaseException as e:      # a dead loop would hang run()

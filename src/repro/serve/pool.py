@@ -55,7 +55,8 @@ from ..core.splitting import MemoryModel
 from ..obs import fleet_event
 from .job import JobRecord, ReconJob
 from .metrics import ServeMetrics, merge_metrics
-from .scheduler import DevicePool, Scheduler, _atomic_write_json
+from .scheduler import (DevicePool, Scheduler, _TERMINAL,
+                        _atomic_write_json, _consume_transfer_copy)
 from .steal import (StealPolicy, effective_units, fleet_units, pod_load,
                     steal_pass)
 
@@ -249,6 +250,7 @@ class MultiPodScheduler:
         self.data_refs = dict(data_refs or {})
         self.stolen_jobs: List[str] = []      # every job a pass moved
         self.restored_jobs: List[str] = []    # filled by restore_fleet
+        self.recovered_jobs: List[str] = []   # filled by recover_transfers
         self._home: Dict[str, str] = {}       # job_id -> submit-time pod
         # fleet lock: guards pod membership (add/remove), the retired
         # list, and the pod-seconds ledger.  Every reader takes a
@@ -659,10 +661,11 @@ class MultiPodScheduler:
     # The manifest is rewritten on every membership change (ctor,
     # add_pod, remove_pod), so a kill -9 at any moment leaves a manifest
     # that matches the per-pod job directories next to it.  `jax_devices`
-    # pins cannot be persisted (device handles are process-local);
-    # restored pods are rebuilt as simulated pods with the recorded
-    # device count and budget — on a real cluster, re-derive the mesh and
-    # pass fresh pods instead if device pinning matters.
+    # pins cannot be persisted (device handles are process-local): the
+    # manifest records *budgets* only, and restore_fleet re-derives the
+    # pins from a mesh passed at restore time (``mesh=`` / ``pod_axis=``,
+    # validated group-by-group against the recorded device counts);
+    # without a mesh, restored pods come back simulated.
 
     def _mark_manifest_dirty(self) -> None:
         """Capture the current membership as the pending manifest.
@@ -719,8 +722,9 @@ class MultiPodScheduler:
 
     def snapshot_fleet(self, root: Optional[str] = None) -> int:
         """Persist the fleet durably: membership manifest + every pod's
-        parked jobs under its own snapshot subdirectory.  Returns the
-        number of jobs persisted across pods."""
+        parked *and running* jobs (copy-on-checkpoint, see
+        :meth:`Scheduler.snapshot`) under its own snapshot subdirectory.
+        Returns the number of jobs persisted across pods."""
         root = root or self.snapshot_root
         if root is None:
             raise ValueError("snapshot_fleet: no snapshot_root configured")
@@ -755,13 +759,31 @@ class MultiPodScheduler:
                       steal: bool = True,
                       transfer_dir: Optional[str] = None,
                       steal_policy: StealPolicy = StealPolicy(),
-                      guard=None) -> "MultiPodScheduler":
+                      guard=None, mesh=None,
+                      pod_axis: str = "pod") -> "MultiPodScheduler":
         """Rebuild a whole fleet — membership *and* parked jobs — from a
         fleet snapshot directory after process death.  Every pod named in
         ``fleet.json`` is reconstructed (device count, budget, placement
         policy) and its scheduler restored from its snapshot
         subdirectory; jobs resume bit-identically to an uninterrupted
         run.  The restored job ids are exposed as ``restored_jobs``.
+
+        The manifest records *budgets* only — device handles are
+        process-local and cannot be persisted.  Pass ``mesh`` (with the
+        pod axis named by ``pod_axis``) to restore onto **real
+        devices**: the mesh's pod groups are re-derived exactly as
+        :func:`pods_from_mesh` does and matched, in manifest order,
+        against the recorded pods — group count and per-group device
+        count must agree with the manifest, or the restore refuses
+        loudly rather than silently re-pinning jobs onto a different
+        topology.  Without a mesh, pods come back simulated (budget-only
+        slots), the historical behaviour.
+
+        If ``transfer_dir`` names the fleet's shared hand-off directory,
+        :meth:`recover_transfers` runs after the per-pod restores: a
+        crash between a steal's export and import leaves the job only in
+        the transfer directory, and recovery re-adopts it (the ids land
+        in ``recovered_jobs``).
 
         ``data_refs`` supplies projection callables for lazy-data jobs
         (refs cannot be persisted); ``guard`` is attached to every
@@ -776,15 +798,33 @@ class MultiPodScheduler:
             manifest = json.load(f)
         if not manifest.get("pods"):
             raise ValueError(f"restore_fleet: {manifest_path} lists no pods")
+        groups = None
+        if mesh is not None:
+            from ..launch.mesh import pod_device_groups
+            groups = pod_device_groups(mesh, pod_axis)
+            if len(groups) != len(manifest["pods"]):
+                raise ValueError(
+                    f"restore_fleet: mesh yields {len(groups)} pod "
+                    f"groups but {FLEET_MANIFEST} records "
+                    f"{len(manifest['pods'])} pods — the restore mesh "
+                    f"must match the snapshotted fleet shape")
+            for group, p in zip(groups, manifest["pods"]):
+                if len(group) != p["n_devices"]:
+                    raise ValueError(
+                        f"restore_fleet: mesh group for pod "
+                        f"{p['name']!r} has {len(group)} devices but "
+                        f"the manifest records {p['n_devices']}")
         pods = [Pod(PodSpec(
                     name=p["name"], n_devices=p["n_devices"],
                     memory=MemoryModel(
                         device_bytes=p["device_bytes"],
                         usable_fraction=p["usable_fraction"]),
+                    jax_devices=(tuple(groups[i]) if groups is not None
+                                 else None),
                     max_jobs_per_device=p["max_jobs_per_device"],
                     placement=p["placement"]),
                     guard=guard)
-                for p in manifest["pods"]]
+                for i, p in enumerate(manifest["pods"])]
         mps = cls(pods, steal=steal, transfer_dir=transfer_dir,
                   steal_policy=steal_policy, data_refs=data_refs,
                   snapshot_root=snapshot_root)
@@ -811,4 +851,81 @@ class MultiPodScheduler:
                     mps._home[jid] = pod.name
         mps.restored_jobs = sorted(restored)
         mps._write_fleet_manifest()   # persist any fallback homes
+        if transfer_dir is not None:
+            mps.recover_transfers()
         return mps
+
+    def recover_transfers(self, transfer_dir: Optional[str] = None
+                          ) -> Dict[str, List[str]]:
+        """Re-adopt jobs stranded mid-hand-off by a crash.
+
+        A steal / drain / migration moves a job through the shared
+        transfer directory in two acts: the victim exports (job on disk,
+        forgotten locally) and the thief imports (job adopted, copy
+        consumed).  A kill between the two leaves the job owned by *no*
+        scheduler — only the transfer copy survives.  This pass scans
+        ``transfer_dir/jobs/*`` and sorts each copy into one of:
+
+        * **torn export** (no ``spec.json``): the victim crashed before
+          the spec landed, so it never forgot the job — its own snapshot
+          still owns it.  Left alone.
+        * **half-consumed import** (spec status terminal): the thief
+          adopted it and crashed between the ``stolen`` spec flip and
+          the directory delete.  Finished consuming, reported in
+          ``dropped``.
+        * **already owned** (job id present in some pod's records): a
+          restore resurrected the victim's copy, or the import completed
+          before persisting the tombstone.  The transfer copy is the
+          duplicate — consumed, reported in ``dropped``.
+        * **orphan** (live spec, committed step, owned by nobody): the
+          crash hit the export/import gap.  Imported onto the first live
+          pod that accepts it (resumes bit-identically from the
+          travelling checkpoint); a fleet where *no* pod can adopt it
+          raises rather than silently stranding the job.
+
+        Returns ``{"imported": [...], "dropped": [...]}`` and appends
+        the imported ids to ``recovered_jobs``.  Called automatically by
+        :meth:`restore_fleet` when it was given a ``transfer_dir``."""
+        tdir = transfer_dir or self.transfer_dir
+        jobs_root = os.path.join(tdir, "jobs")
+        imported: List[str] = []
+        dropped: List[str] = []
+        if not os.path.isdir(jobs_root):
+            return {"imported": imported, "dropped": dropped}
+        known = set()
+        for pod in self.pods_snapshot(live_only=False):
+            known.update(pod.scheduler.records)
+        for jid in sorted(os.listdir(jobs_root)):
+            job_dir = os.path.join(jobs_root, jid)
+            spec_path = os.path.join(job_dir, "spec.json")
+            if not os.path.isfile(spec_path):
+                continue                      # torn export: victim owns it
+            with open(spec_path) as f:
+                status = json.load(f)["status"]
+            if status in _TERMINAL or jid in known:
+                _consume_transfer_copy(job_dir)
+                dropped.append(jid)
+                continue
+            errors = []
+            for pod in self.pods_snapshot():
+                try:
+                    pod.scheduler.import_job(tdir, jid,
+                                             data_refs=self.data_refs)
+                except Exception as exc:
+                    errors.append(f"{pod.name}: {exc}")
+                    continue
+                with self._fleet_lock:
+                    self._home.setdefault(jid, pod.name)
+                imported.append(jid)
+                break
+            else:
+                raise RuntimeError(
+                    f"recover_transfers: job {jid} is stranded in "
+                    f"{tdir!r} (exported by a crashed pod, imported by "
+                    f"none) and no live pod could adopt it: "
+                    f"{'; '.join(errors) or 'no live pods'}")
+        if imported:
+            self.recovered_jobs = sorted(set(self.recovered_jobs)
+                                         | set(imported))
+            self._write_fleet_manifest()      # persist the new homes
+        return {"imported": imported, "dropped": dropped}

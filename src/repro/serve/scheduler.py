@@ -250,6 +250,13 @@ class _Running:
     preempt_requested: bool = False   # park at the next step boundary
     vtime: float = 0.0                # stride-scheduling virtual time
     passes: float = 1.0               # slab-pass multiplier of one step
+    # -- copy-on-checkpoint live snapshots (see Scheduler.snapshot): a
+    # periodic snapshot that finds this job mid-step asks the worker to
+    # capture the committed state at its next boundary instead of
+    # waiting the step out under the lock
+    snapshot_requested: bool = False
+    boundary_checkpoint: Optional[Dict[str, Any]] = None
+    boundary_iterations: int = -1     # iterations_done of that capture
 
 
 class Scheduler:
@@ -801,6 +808,15 @@ class Scheduler:
                 elif run.preempt_requested:
                     run.preempt_requested = False
                     self._preempt(run)
+                elif run.snapshot_requested:
+                    # copy-on-checkpoint: a periodic snapshot found this
+                    # job mid-step and deferred to this boundary.  The
+                    # state objects are replaced (never mutated) by
+                    # step(), so the host copy taken here is exactly the
+                    # committed iteration the job would resume from.
+                    run.snapshot_requested = False
+                    run.boundary_checkpoint = run.executor.checkpoint()
+                    run.boundary_iterations = rec.iterations_done
             except Exception as e:
                 # a tenant's finalize()/checkpoint() must fail that job
                 # alone, never kill the worker thread servicing the slot
@@ -827,6 +843,37 @@ class Scheduler:
             quanta += 1
         self.metrics.wall_end = time.monotonic()
         return self.metrics
+
+    def park_job(self, job_id: str, timeout: float = 30.0) -> bool:
+        """Preempt one *running* job at its next step boundary and leave
+        it parked in the queue (checkpoint captured, status PREEMPTED) —
+        the single-job analogue of :meth:`drain`, and the building block
+        of live migration (:func:`repro.serve.steal.migrate_once`).
+        Every other job on the pod keeps running.
+
+        Under the async driver a mid-step job is flagged and parks when
+        its in-flight step completes; this call waits up to ``timeout``
+        for that.  Returns True once the job is parked, False when it is
+        not running here (already parked, terminal, or unknown — the
+        caller re-checks what it actually wants) or the timeout expired
+        with the step still in flight.  Callers that must keep the job
+        parked (export it) pause admission first, or the admission loop
+        may re-place it immediately."""
+        deadline = time.monotonic() + timeout
+        while True:
+            with self._lock:
+                run = self.running.get(job_id)
+                if run is None:
+                    rec = self.records.get(job_id)
+                    return (rec is not None
+                            and rec.status is JobStatus.PREEMPTED)
+                if not run.claimed:
+                    self._preempt(run)
+                    return True
+                run.preempt_requested = True
+            if time.monotonic() > deadline:
+                return False
+            time.sleep(0.001)
 
     def drain(self, ckpt_dir: Optional[str] = None,
               timeout: float = 60.0) -> int:
@@ -870,12 +917,26 @@ class Scheduler:
 
     # ---- durable snapshots / restore --------------------------------------
 
-    def snapshot(self, ckpt_dir: str) -> int:
+    def snapshot(self, ckpt_dir: str, include_running: bool = True) -> int:
         """Persist every *parked* job (queued, with or without a step-wise
-        checkpoint) under ``ckpt_dir`` — one directory per job, each write
-        going through :func:`repro.checkpoint.sharded.save_checkpoint`
-        (manifest + COMMIT marker, atomic rename), so a crash mid-snapshot
-        can never corrupt an earlier snapshot of the same job.
+        checkpoint) — and, by default, every *running* job's last
+        committed step — under ``ckpt_dir``: one directory per job, each
+        write going through :func:`repro.checkpoint.sharded.
+        save_checkpoint` (manifest + COMMIT marker, atomic rename), so a
+        crash mid-snapshot can never corrupt an earlier snapshot of the
+        same job.
+
+        Running jobs are snapshotted **without parking them**
+        (copy-on-checkpoint): a job at its step boundary (not claimed by
+        a worker) has its state copied to host on the spot; a job
+        mid-step is flagged and the worker captures the copy at its next
+        boundary (``finish_step``), which the next periodic snapshot
+        persists.  Algorithm states are replaced — never mutated — by
+        ``step()``, so the copy is exactly the committed iteration the
+        job would resume from; a kill -9 then replays nothing the last
+        snapshot already saw.  The spec keeps its live ``running``
+        status (non-terminal), which :func:`_load_job` restores as
+        resumable preempted work.
 
         Only the payload *capture* holds the scheduler lock; the disk
         writes happen outside it, so worker threads keep stepping while a
@@ -891,8 +952,37 @@ class Scheduler:
                                rec.preemptions)
                 if self._snapshotted.get(rec.job.job_id) == fingerprint:
                     continue
-                payloads.append(_job_payload(rec) + (fingerprint,))
-        for job_id, spec, tree, step, fingerprint in payloads:
+                payloads.append(_job_payload(rec) + (fingerprint, False))
+            if include_running:
+                for run in self.running.values():
+                    rec = run.record
+                    if not run.claimed and run.executor.started:
+                        ckpt = run.executor.checkpoint()
+                        iters = run.executor.iterations_done
+                    elif run.boundary_checkpoint is not None:
+                        ckpt = run.boundary_checkpoint
+                        iters = run.boundary_iterations
+                        # one-shot: drop the capture and re-request, so
+                        # the next period persists fresh progress
+                        # instead of re-offering this copy forever
+                        run.boundary_checkpoint = None
+                        run.boundary_iterations = -1
+                        run.snapshot_requested = True
+                    else:
+                        # mid-step: ask the worker to capture at its
+                        # boundary; the next periodic pass persists it
+                        run.snapshot_requested = True
+                        continue
+                    fingerprint = (iters, rec.status.value,
+                                   rec.preemptions)
+                    if self._snapshotted.get(rec.job.job_id) \
+                            == fingerprint:
+                        continue
+                    payloads.append(
+                        _job_payload(rec, checkpoint=ckpt,
+                                     iterations=iters)
+                        + (fingerprint, True))
+        for job_id, spec, tree, step, fingerprint, was_running in payloads:
             _write_job(ckpt_dir, job_id, spec, tree, step)
             with self._lock:
                 self._snapshotted[job_id] = fingerprint
@@ -910,6 +1000,9 @@ class Scheduler:
             if stale_status is not None:
                 _stale_job_dir(os.path.join(ckpt_dir, "jobs", job_id),
                                stale_status)
+            elif was_running:
+                fleet_event("live-snapshot", job=job_id, pod=self.name,
+                            it=step)
         if payloads:
             fleet_event("snapshot", pod=self.name, jobs=len(payloads))
         return len(payloads)
@@ -1241,19 +1334,29 @@ def _scalar_tag(v) -> str:
     return "array"
 
 
-def _job_payload(rec: JobRecord) -> Tuple[str, Dict, Dict[str, Any], int]:
+def _job_payload(rec: JobRecord,
+                 checkpoint: Optional[Dict[str, Any]] = None,
+                 iterations: Optional[int] = None
+                 ) -> Tuple[str, Dict, Dict[str, Any], int]:
     """Capture everything :func:`_write_job` needs, under the scheduler
     lock: a shallow copy of the checkpoint dict (the arrays themselves are
     never mutated, only replaced) so a concurrent re-admission clearing
-    ``rec.checkpoint`` cannot race the disk write."""
+    ``rec.checkpoint`` cannot race the disk write.
+
+    ``checkpoint`` / ``iterations`` override the record's own parked
+    state: a *running* job has ``rec.checkpoint is None`` (cleared at
+    admission), so live snapshots pass the executor's step-boundary copy
+    and its committed iteration count explicitly."""
     job = rec.job
+    ckpt = rec.checkpoint if checkpoint is None else checkpoint
+    iters = rec.iterations_done if iterations is None else iterations
     tree: Dict[str, Any] = {"angles": np.asarray(job.angles, np.float32)}
     projections_persisted = not callable(job.projections)
     if projections_persisted:
         tree["projections"] = np.asarray(job.projections)
     scalar_types: Dict[str, str] = {}
-    if rec.checkpoint is not None:
-        for k, v in rec.checkpoint.items():
+    if ckpt is not None:
+        for k, v in ckpt.items():
             tag = _scalar_tag(v)
             scalar_types[k] = tag
             if tag != "none":      # None fields rebuilt from the tag alone
@@ -1271,13 +1374,13 @@ def _job_payload(rec: JobRecord) -> Tuple[str, Dict, Dict[str, Any], int]:
         "deadline_seconds": job.deadline_seconds,
         "seq": rec.seq,
         "status": rec.status.value,
-        "iterations_done": rec.iterations_done,
+        "iterations_done": iters,
         "preemptions": rec.preemptions,
-        "has_state": rec.checkpoint is not None,
+        "has_state": ckpt is not None,
         "scalar_types": scalar_types,
         "projections_persisted": projections_persisted,
     }
-    return job.job_id, spec, tree, rec.iterations_done
+    return job.job_id, spec, tree, iters
 
 
 def _write_job(ckpt_dir: str, job_id: str, spec: Dict,

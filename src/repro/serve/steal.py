@@ -43,6 +43,15 @@ The same transfer machinery also empties a whole pod:
 pod's admission, preempt its running jobs at their step boundaries,
 then export *everything* to the surviving pods (see
 :mod:`repro.serve.autoscale`).
+
+For *extreme* imbalance the parked-only discipline is not enough: a
+victim whose surplus is entirely running work has nothing parked to
+steal.  :func:`migrate_once` generalizes the drain machinery to a
+single job — preempt it at its step boundary, export, import on the
+thief — gated by ``StealPolicy.migrate_min_imbalance_seconds`` and a
+benefit check that also prices the one-off copy against the measured
+bandwidth EMA.  The checkpoint travels, so a migrated job, too,
+finishes bit-identically to never having moved.
 """
 
 from __future__ import annotations
@@ -51,6 +60,7 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from ..obs import fleet_event
 from .scheduler import Scheduler
 
 
@@ -75,6 +85,12 @@ class StealPolicy:
     #: the stealing thread may get scheduled rarely, and the first pass
     #: must be allowed to balance the fleet in one go.
     max_jobs_per_pass: int = 16
+    #: live-migration trigger (:func:`migrate_once`): when the pass's
+    #: pinned (victim, thief) imbalance exceeds this many modeled
+    #: seconds and no parked job moved, one *running* victim job is
+    #: preempted at its step boundary and moved live.  None disables
+    #: live migration — parked-only stealing, the historical behaviour.
+    migrate_min_imbalance_seconds: Optional[float] = None
 
 
 def fleet_units(pods: Sequence) -> Tuple[float, float]:
@@ -191,6 +207,93 @@ def steal_once(victim, thief, transfer_dir: str,
             victim.scheduler.reclaim_export(transfer_dir, jid,
                                             data_refs=data_refs)
             return None
+    return None
+
+
+def migrate_once(victim, thief, transfer_dir: str,
+                 data_refs: Optional[Dict[str, Callable]] = None,
+                 policy: StealPolicy = StealPolicy(),
+                 units: Optional[Tuple[float, float]] = None,
+                 timeout: float = 30.0) -> Optional[str]:
+    """Live migration: preempt one *running* job on the ``victim`` pod at
+    its step boundary (:meth:`Scheduler.park_job` — the same machinery
+    :func:`drain_pod` uses to empty a pod, applied to a single job while
+    everything else keeps running) and move it to the ``thief`` through
+    ``transfer_dir``.  Returns the migrated job id, or None.
+
+    This is the extreme-imbalance escape hatch: ordinary stealing only
+    moves *parked* work, so a victim whose whole backlog is already
+    running (long jobs, deep queues drained) can never shed load even
+    when the thief sits idle.  Candidates are tried lowest priority /
+    latest arrival first, mirroring the queue-tail steal discipline.
+
+    The anti-ping-pong benefit check prices the job on the thief via
+    :func:`~repro.serve.scheduler.modeled_step_passes` (remaining
+    iterations x slab-pass multiplier under the *thief's* budget, plus
+    the schedule-priced per-step staging time) **plus** the one-off
+    migration copy itself — the job's device footprint over the
+    measured bandwidth EMA (0 while no bandwidth has been observed): a
+    move that would invert the imbalance, or whose copy costs more than
+    it saves, is skipped.
+
+    The victim's admission is paused for the park->export window (or the
+    admission loop would immediately re-place the job it just parked);
+    every other job on the victim keeps stepping throughout.  A failed
+    import is reclaimed by the victim, exactly as in
+    :func:`steal_once`."""
+    data_refs = data_refs or {}
+    vsched = victim.scheduler
+    with vsched._lock:
+        candidates = sorted((r.record for r in vsched.running.values()),
+                            key=lambda r: (r.job.priority, -r.seq))
+    if not candidates:
+        return None
+    default_unit, default_init = units or fleet_units((victim, thief))
+    victim_load = pod_load(vsched, victim.n_devices,
+                           unit=default_unit, init=default_init)
+    thief_load = pod_load(thief.scheduler, thief.n_devices,
+                          unit=default_unit, init=default_init)
+    unit, init = effective_units(thief.scheduler, default_unit,
+                                 default_init)
+    bw = thief.scheduler.bandwidth_ema or vsched.bandwidth_ema
+    for rec in candidates:
+        jid = rec.job.job_id
+        if not _stealable(rec, thief, data_refs):
+            continue
+        passes = thief.scheduler.job_passes(rec.job)
+        cost = init + Scheduler._remaining_iters(rec) * (
+            passes * unit
+            + thief.scheduler.modeled_transfer_seconds(rec.job))
+        move_cost = 0.0
+        if bw is not None and bw > 0:
+            try:
+                move_cost = (vsched.job_footprint(rec.job).bytes_on_device
+                             / bw)
+            except Exception:
+                move_cost = 0.0
+        if (thief_load + (cost + move_cost) / max(1, thief.n_devices)
+                > victim_load):
+            continue                       # would invert the imbalance
+        vsched.pause_admission()
+        try:
+            if not vsched.park_job(jid, timeout=timeout):
+                continue   # finished (or failed) before it could park
+            # park_job left the job queued; export can still race a
+            # terminal transition, in which case there is nothing to move
+            if not vsched.export_job(jid, transfer_dir):
+                continue
+            try:
+                out = thief.scheduler.import_job(transfer_dir, jid,
+                                                 data_refs=data_refs)
+            except Exception:
+                vsched.reclaim_export(transfer_dir, jid,
+                                      data_refs=data_refs)
+                return None
+            fleet_event("migrate", job=jid, src=victim.name,
+                        dst=thief.name, it=rec.iterations_done)
+            return out
+        finally:
+            vsched.resume_admission()
     return None
 
 
@@ -338,6 +441,18 @@ def steal_pass(pods: Sequence, transfer_dir: str,
                          data_refs=data_refs, policy=policy,
                          exclude=moved, units=units)
         if jid is None:
-            return moved
+            break
         moved.append(jid)
+    # extreme imbalance with nothing parked left to move: the victim's
+    # surplus is all *running* — migrate one job live.  Gated on "no
+    # parked job moved this pass" so cheap steals always win over a
+    # preempt-and-copy, and on the (stricter) migrate threshold so
+    # ordinary imbalance never pays a preemption
+    if (not moved and policy.migrate_min_imbalance_seconds is not None
+            and hi - lo > policy.migrate_min_imbalance_seconds):
+        jid = migrate_once(victim, thief, transfer_dir,
+                           data_refs=data_refs, policy=policy,
+                           units=units)
+        if jid is not None:
+            moved.append(jid)
     return moved

@@ -1,0 +1,139 @@
+"""Crash-point injection registry for the durable serving layer.
+
+The zero-loss guarantees (snapshot / steal / drain / restore) all reduce
+to a handful of *write seams* — the functions that put job state on
+disk.  Each seam is a module-level attribute precisely so a test can
+replace it; :func:`kill_at` arms one seam to raise :class:`SimulatedKill`
+either *before* its first invocation (the write never starts) or *after*
+it (the write landed, everything downstream of it did not).  A
+``kill -9`` can land at any instruction, but every observable on-disk
+state it can produce is one of these seam states — the write sequences
+are linear and each seam is atomic (tmp + rename) on its own.
+
+:class:`SimulatedKill` derives from ``BaseException`` on purpose: the
+serving layer's ``except Exception`` error handling must not absorb it,
+exactly as a real kill signal is not absorbable.  (``export_job``'s
+``except BaseException`` re-push is memory-only and irrelevant here —
+the crash matrix discards the live objects and restores from disk.)
+
+Registered seams:
+
+``save-checkpoint``
+    ``repro.serve.scheduler.save_checkpoint`` — the whole step-directory
+    write (leaves + manifest + COMMIT + publish) as ``_write_job`` calls
+    it.  *before* = job dir exists but no new step; *after* = step
+    committed, spec not yet (re)written.
+``step-commit``
+    ``repro.checkpoint.sharded._write_commit`` — the COMMIT marker
+    inside the still-unpublished ``.tmp`` step directory.  *before* =
+    leaves + manifest on disk, no marker: the step must stay invisible.
+``step-publish``
+    ``repro.checkpoint.sharded._publish`` — the atomic rename of the
+    committed ``.tmp`` directory to its final name.  *before* = a fully
+    committed step that readers must still ignore (it is ``.tmp``).
+``spec-write``
+    ``repro.serve.scheduler._atomic_write_json`` — every spec.json
+    write (snapshot, import persistence, stale-out rewrite).
+``spec-stale``
+    ``repro.serve.scheduler._set_spec_status`` — the terminal flip that
+    retires a disk copy (export tombstone, transfer consumption).
+
+Use::
+
+    point = FaultPoint("step-commit", "before")
+    with kill_at(point) as armed:
+        with pytest.raises(SimulatedKill):
+            sched.snapshot(snap)
+    assert armed.fired
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import importlib
+from typing import Iterator, List
+
+#: seam name -> (module holding the attribute, attribute name).  The
+#: module matters: ``scheduler.py`` binds ``save_checkpoint`` into its
+#: own namespace at import, so the scheduler-visible name is the one to
+#: patch, while ``_write_commit`` / ``_publish`` are resolved as
+#: ``sharded`` module globals at call time.
+SEAMS = {
+    "save-checkpoint": ("repro.serve.scheduler", "save_checkpoint"),
+    "step-commit": ("repro.checkpoint.sharded", "_write_commit"),
+    "step-publish": ("repro.checkpoint.sharded", "_publish"),
+    "spec-write": ("repro.serve.scheduler", "_atomic_write_json"),
+    "spec-stale": ("repro.serve.scheduler", "_set_spec_status"),
+}
+
+WHENS = ("before", "after")
+
+
+class SimulatedKill(BaseException):
+    """A crash injected at a registered fault point.
+
+    ``BaseException`` so no ``except Exception`` recovery path in the
+    code under test can swallow it — the process is "dead"."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPoint:
+    """One (seam, when) crash site."""
+    seam: str
+    when: str          # "before" | "after" the seam's first invocation
+
+    def __post_init__(self):
+        if self.seam not in SEAMS:
+            raise KeyError(f"unknown seam {self.seam!r}; registered: "
+                           f"{sorted(SEAMS)}")
+        if self.when not in WHENS:
+            raise ValueError(f"when must be one of {WHENS}")
+
+    @property
+    def name(self) -> str:
+        return f"{self.seam}:{self.when}"
+
+
+def all_points() -> List[FaultPoint]:
+    """Every registered crash site — the matrix axis."""
+    return [FaultPoint(seam, when) for seam in SEAMS for when in WHENS]
+
+
+class _Armed:
+    """Handle yielded by :func:`kill_at`: records whether the point
+    actually fired during the armed region (a seam an operation never
+    reaches cannot kill it — the operation then completed, which is the
+    crash-free row of the same matrix)."""
+
+    def __init__(self, point: FaultPoint):
+        self.point = point
+        self.fired = False
+
+
+@contextlib.contextmanager
+def kill_at(point: FaultPoint) -> Iterator[_Armed]:
+    """Arm ``point``: the seam's first invocation inside the context
+    raises :class:`SimulatedKill` (before the write, or after it
+    completed).  Later invocations pass through untouched — the "crash"
+    happened, anything after it in the same armed region is the next
+    process's life.  Always restores the original attribute."""
+    module, attr = SEAMS[point.seam]
+    mod = importlib.import_module(module)
+    orig = getattr(mod, attr)
+    armed = _Armed(point)
+
+    def crash_site(*args, **kwargs):
+        if armed.fired:
+            return orig(*args, **kwargs)
+        armed.fired = True
+        if point.when == "before":
+            raise SimulatedKill(point.name)
+        result = orig(*args, **kwargs)
+        raise SimulatedKill(point.name)
+
+    setattr(mod, attr, crash_site)
+    try:
+        yield armed
+    finally:
+        setattr(mod, attr, orig)

@@ -168,6 +168,73 @@ def test_stream_backward_angle_subset_rebuilds_steps():
     np.testing.assert_array_equal(want, got)
 
 
+def test_bp_subset_rebuild_counted_full_set_reuses_schedule(monkeypatch):
+    """The rebuild is surgical: a full-set backprojection through the
+    memoized plan executes the stored schedule verbatim (zero
+    ``_bp_comm_steps`` calls), a subset rebuilds exactly once per call —
+    for the angle count actually passed, at the plan's prefetch depth."""
+    import repro.core.streaming as streaming
+
+    geo, angles, mem, vol, proj = _case(*GRID[0])
+    na = len(angles)
+    p = plan(geo, na, 1, mem, angle_chunk_fp=4, angle_chunk_bp=4)
+    sub = np.arange(0, na, 3)
+    want = stream_backward(proj[sub], geo, angles[sub],
+                           p.backward, weight="fdk")   # before counting
+    calls = []
+    orig = streaming._bp_comm_steps
+
+    def counted(bp, g, n_ang, depth):
+        calls.append((n_ang, depth))
+        return orig(bp, g, n_ang, depth)
+
+    monkeypatch.setattr(streaming, "_bp_comm_steps", counted)
+    stream_backward(proj, geo, angles, p, weight="fdk")
+    assert calls == []                  # memoized schedule reused as-is
+    got = stream_backward(proj[sub], geo, angles[sub], p, weight="fdk")
+    assert calls == [(len(sub), p.comm.prefetch_depth)]
+    np.testing.assert_array_equal(want, got)
+    stream_backward(proj[sub], geo, angles[sub], p, weight="fdk")
+    assert len(calls) == 2              # per call; nothing mutates the plan
+
+
+def test_ossart_norm_factors_through_memoized_plan(monkeypatch):
+    """OS-SART's per-subset normalisation factors flow angle *subsets*
+    through the operator's single memoized ExecutionPlan: the FP side
+    streams volume slabs (angle-count agnostic, no rebuild), the BP side
+    rebuilds its step list once per subset ``At`` — and the factors are
+    bit-identical to the serial no-prefetch schedule, including the
+    uneven tail subset."""
+    import repro.core.streaming as streaming
+    from repro.core.algorithms.sart import _norm_factors
+    from repro.core.operator import CTOperator
+
+    geo, angles, mem, _, _ = _case(*GRID[0])
+    na = len(angles)
+    p = plan(geo, na, 1, mem, angle_chunk_fp=4, angle_chunk_bp=4)
+    op = CTOperator(geo, angles, mode="stream", memory=mem, plan=p)
+    serial = CTOperator(geo, angles, mode="stream", memory=mem,
+                        plan=p.with_prefetch(0))
+    subs = op.subset_indices(5)
+    assert [len(s) for s in subs] == [5, 5, 2]
+
+    calls = []
+    orig = streaming._bp_comm_steps
+
+    def counted(bp, g, n_ang, depth):
+        calls.append((n_ang, depth))
+        return orig(bp, g, n_ang, depth)
+
+    monkeypatch.setattr(streaming, "_bp_comm_steps", counted)
+    for idx in subs:
+        W, V = _norm_factors(op, idx)
+        W0, V0 = _norm_factors(serial, idx)
+        np.testing.assert_array_equal(np.asarray(W), np.asarray(W0))
+        np.testing.assert_array_equal(np.asarray(V), np.asarray(V0))
+    # one BP rebuild per streamed At, alternating overlap/serial depth
+    assert calls == [(5, 1), (5, 0), (5, 1), (5, 0), (2, 1), (2, 0)]
+
+
 def test_stream_overlap_bit_identical_two_devices():
     geo, angles, mem, vol, proj = _case(*GRID[2])
     devs = jax.local_devices()[:2]

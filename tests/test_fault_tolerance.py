@@ -1,13 +1,47 @@
 """Fault-tolerance: straggler watchdog, heartbeat failure detection,
-preemption -> checkpoint -> exact resume (end-to-end)."""
+preemption -> checkpoint -> exact resume (end-to-end), and the serving
+layer's crash-point injection matrix: a simulated kill -9 at EVERY
+registered write seam (tests/faultpoints.py) across the snapshot /
+export / import / drain sequences, after which a disk-only restore must
+hold zero-loss — every job present exactly once, no completed iteration
+lost, no work double-executed, results bit-identical to an
+uninterrupted run."""
 
+import functools
 import time
 
 import numpy as np
 import pytest
 
+from faultpoints import SimulatedKill, all_points, kill_at
 from repro.checkpoint import PreemptionGuard
+from repro.core import phantoms
+from repro.core.algorithms import cgls
+from repro.core.geometry import ConeGeometry, circular_angles
+from repro.core.splitting import MemoryModel
 from repro.distributed import Heartbeat, StepWatchdog
+from repro.serve import (MultiPodScheduler, Pod, PodSpec, ReconJob,
+                         Scheduler, drain_pod)
+
+GEO = ConeGeometry.nice(16)
+ANGLES = circular_angles(12)
+PROJ = phantoms.sphere_projection_analytic(GEO, ANGLES)
+KIB = 1024
+
+
+def _mem(kib=100):
+    return MemoryModel(device_bytes=kib * KIB, usable_fraction=1.0)
+
+
+def _job(n_iter=4):
+    return ReconJob("cgls", GEO, ANGLES, PROJ, n_iter=n_iter)
+
+
+@functools.lru_cache(maxsize=None)
+def _ref(n_iter):
+    """Uninterrupted single-shot reference the restored runs must match
+    bit-for-bit."""
+    return np.asarray(cgls(PROJ, GEO, ANGLES, n_iter=n_iter))
 
 
 def test_watchdog_flags_stragglers():
@@ -85,3 +119,133 @@ def test_preempt_checkpoint_resume_exact(tmp_path):
     # the resumed tail must match the uninterrupted run's tail exactly-ish
     np.testing.assert_allclose(combined[-len(losses2):],
                                ref_losses[-len(losses2):], rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# crash-point injection matrix (tests/faultpoints.py)
+#
+# Each phase test arms one registered (seam, when) crash site, runs the
+# phase's durable operation until the simulated kill lands (or the
+# operation completes — a seam the sequence never reaches is the
+# crash-free row of the same matrix), then THROWS AWAY every live object
+# and rebuilds purely from disk.  The invariants are identical across
+# the whole matrix:
+#
+#   * every submitted job is restored exactly once (none lost, none
+#     duplicated onto two pods),
+#   * no completed iteration is lost: restored progress >= the progress
+#     the last clean snapshot had durably committed,
+#   * no work is double-executed: progress never exceeds what had
+#     actually run,
+#   * the restored fleet finishes every job bit-identically to an
+#     uninterrupted single-shot run.
+# --------------------------------------------------------------------------
+
+_IDS = [p.name for p in all_points()]
+
+
+def _run_killed(point, op):
+    """Run ``op`` with ``point`` armed; the simulated kill (if the seam
+    is reached) is the process dying mid-write."""
+    with kill_at(point):
+        try:
+            op()
+        except SimulatedKill:
+            pass
+
+
+@pytest.mark.parametrize("point", all_points(), ids=_IDS)
+def test_crash_matrix_snapshot(tmp_path, point):
+    """Kill inside a periodic snapshot (running jobs included): the
+    previous committed snapshot must survive intact."""
+    snap = str(tmp_path / "snap")
+    sched = Scheduler(n_devices=1, memory=_mem(220), snapshot_dir=snap)
+    jobs = [sched.submit(_job(n_iter=4)) for _ in range(2)]
+    sched.step_quantum()                      # admit + first iterations
+    baseline = {j: sched.records[j].iterations_done for j in jobs}
+    assert sched.snapshot(snap) >= 1          # clean durable baseline
+    sched.step_quantum()                      # progress past the baseline
+    _run_killed(point, lambda: sched.snapshot(snap))
+    ran = {j: sched.records[j].iterations_done for j in jobs}
+
+    fresh = Scheduler(n_devices=1, memory=_mem(220))
+    assert fresh.restore(snap) == len(jobs)
+    for j in jobs:
+        got = fresh.records[j].iterations_done
+        assert baseline[j] <= got <= ran[j]   # zero loss, zero replay
+    fresh.run()
+    for j in jobs:
+        np.testing.assert_array_equal(fresh.result(j), _ref(4))
+
+
+def _fleet(tmp_path, n_iter=4):
+    """Two-pod fleet with durable snapshots: job 0 running on the victim
+    (one quantum of progress), job 1 parked there, both committed to
+    disk by a clean fleet snapshot."""
+    root = str(tmp_path / "fleet")
+    transfer = str(tmp_path / "transfer")
+    mps = MultiPodScheduler(
+        [Pod(PodSpec("v", n_devices=1, memory=_mem())),
+         Pod(PodSpec("t", n_devices=1, memory=_mem()))],
+        steal=False, transfer_dir=transfer, snapshot_root=root)
+    jobs = [mps.submit(_job(n_iter), pod="v") for _ in range(2)]
+    vict = next(p for p in mps.pods if p.name == "v")
+    thief = next(p for p in mps.pods if p.name == "t")
+    vict.scheduler.step_quantum()
+    assert mps.snapshot_fleet() == len(jobs)
+    return mps, root, transfer, vict, thief, jobs
+
+
+def _check_fleet_recovery(tmp_path, root, transfer, jobs, baseline, ran,
+                          n_iter=4):
+    """Disk-only rebuild + the matrix invariants."""
+    mps2 = MultiPodScheduler.restore_fleet(root, transfer_dir=transfer)
+    for j in jobs:
+        owners = [p.name for p in mps2.pods if j in p.scheduler.records]
+        assert len(owners) == 1, \
+            f"job {j} restored on {owners or 'no pod'}"
+        got = mps2.record(j).iterations_done
+        assert baseline[j] <= got <= ran[j]
+    mps2.run()
+    for j in jobs:
+        np.testing.assert_array_equal(mps2.result(j), _ref(n_iter))
+
+
+@pytest.mark.parametrize("point", all_points(), ids=_IDS)
+def test_crash_matrix_export(tmp_path, point):
+    """Kill inside the victim's export half of a steal: the job must
+    come back exactly once — from the victim's snapshot (hand-off never
+    durably left) or from the transfer copy (it did)."""
+    mps, root, transfer, vict, thief, jobs = _fleet(tmp_path)
+    baseline = {j: mps.record(j).iterations_done for j in jobs}
+    ran = dict(baseline)
+    _run_killed(point,
+                lambda: vict.scheduler.export_job(jobs[1], transfer))
+    _check_fleet_recovery(tmp_path, root, transfer, jobs, baseline, ran)
+
+
+@pytest.mark.parametrize("point", all_points(), ids=_IDS)
+def test_crash_matrix_import(tmp_path, point):
+    """Kill inside the thief's import half (after a clean export): the
+    orphaned transfer copy must be re-adopted, a half-consumed one must
+    not resurrect a duplicate."""
+    mps, root, transfer, vict, thief, jobs = _fleet(tmp_path)
+    baseline = {j: mps.record(j).iterations_done for j in jobs}
+    ran = dict(baseline)
+    assert vict.scheduler.export_job(jobs[1], transfer)
+    _run_killed(point,
+                lambda: thief.scheduler.import_job(transfer, jobs[1]))
+    _check_fleet_recovery(tmp_path, root, transfer, jobs, baseline, ran)
+
+
+@pytest.mark.parametrize("point", all_points(), ids=_IDS)
+def test_crash_matrix_drain(tmp_path, point):
+    """Kill inside a scale-down drain (preempt -> export -> import per
+    job): every job lands exactly once whether it had moved, was on the
+    wire, or never left."""
+    mps, root, transfer, vict, thief, jobs = _fleet(tmp_path)
+    baseline = {j: mps.record(j).iterations_done for j in jobs}
+    ran = dict(baseline)
+    _run_killed(point, lambda: drain_pod(vict, [thief], transfer,
+                                         timeout=30.0))
+    _check_fleet_recovery(tmp_path, root, transfer, jobs, baseline, ran)

@@ -632,7 +632,8 @@ def test_cancel_stales_out_persisted_snapshot(tmp_path):
     victim = sched.submit(_job("cgls", n_iter=2))
     sched.step_quantum()
     assert sched.records[victim].status is JobStatus.PENDING
-    assert sched.snapshot(ckpt_dir) == 1             # persists the victim
+    # parked jobs only: the property under test is the cancel stale-out
+    assert sched.snapshot(ckpt_dir, include_running=False) == 1
     assert sched.cancel(victim)
     sched.run()
     assert sched.records[busy].status is JobStatus.COMPLETED
@@ -646,7 +647,7 @@ def test_async_driver_surfaces_internal_errors(monkeypatch, tmp_path):
     sched = Scheduler(n_devices=1, memory=_mem(1024))
     sched.submit(_job("cgls", n_iter=50))
 
-    def broken_snapshot(ckpt_dir):
+    def broken_snapshot(ckpt_dir, **kw):
         raise OSError("disk full")
 
     monkeypatch.setattr(sched, "snapshot", broken_snapshot)

@@ -85,13 +85,38 @@ def test_policy_validation():
 def test_autoscaler_grows_and_shrinks_fleet_bit_identically(tmp_path):
     """Backlog on one seed pod grows the fleet from the template pool;
     once the work clears the surplus pods are drained + retired; every
-    result matches the monolithic run."""
+    result matches the monolithic run.
+
+    Deterministic by construction (no wall-clock coupling): the
+    autoscaler runs on an injected FakeClock and is stepped explicitly
+    between cooperative quanta, so the scale decisions depend only on
+    the modeled backlog — a cold fleet prices 6 jobs x 4 iterations at
+    the 1.0 s/unit fallback, far above the 0.5 s high watermark, so the
+    first control step MUST scale up; an idle fleet models 0.0 backlog,
+    below the 0.05 s low watermark, so the drain-and-retire steps MUST
+    fire once the work clears."""
+    clock = FakeClock()
     mps = MultiPodScheduler([_pod("seed")],
                             transfer_dir=str(tmp_path / "xfer"))
     asc = Autoscaler(mps, [PodSpec("burst", n_devices=1, memory=_mem())],
-                     _policy())
+                     _policy(), clock=clock)
     jids = [mps.submit(_job(n_iter=4)) for _ in range(6)]
-    mps.run(autoscaler=asc)
+    ev = asc.step()
+    assert ev is not None and ev.direction == "up", \
+        "cold 24-unit modeled backlog did not cross the 0.5s watermark"
+    rounds = 0
+    while not mps.idle:
+        for pod in mps.pods_snapshot():
+            pod.scheduler.step_quantum()
+        mps.steal_pass()           # the burst pod takes parked work
+        clock.t += 1.0
+        asc.step()
+        rounds += 1
+        assert rounds < 200, "fleet never finished the backlog"
+    while len(mps.pods) > 1:       # idle: load 0.0 < 0.05 -> shrink
+        clock.t += 1.0
+        assert asc.step() is not None, \
+            "idle fleet above min_pods refused to scale down"
     ups = [e for e in asc.events if e.direction == "up"]
     downs = [e for e in asc.events if e.direction == "down"]
     assert ups, "backlog never grew the fleet"
@@ -195,6 +220,52 @@ def test_persistence_windows_suppress_flapping_signal(tmp_path):
     clock.t += 1.0
     ev = asc2.step()
     assert ev is not None and ev.direction == "up"
+
+
+def test_hysteresis_window_resets_and_fires_at_exact_boundary(tmp_path):
+    """Regression pinning the two window semantics the deflaked tests
+    rely on: (a) a single dead-band sample RESETS the persistence
+    window — a high signal interrupted every third second never fires,
+    even though its cumulative high time is unbounded; (b) an
+    uninterrupted signal fires at the first control step where
+    ``now - window_start >= window`` (closed boundary), not one step
+    later."""
+    clock = FakeClock()
+    mps = MultiPodScheduler([_pod("seed")],
+                            transfer_dir=str(tmp_path / "xfer"))
+    load = {"v": 10.0}
+    asc = Autoscaler(mps, [PodSpec("burst", n_devices=1, memory=_mem())],
+                     _policy(up_window_seconds=2.0, down_window_seconds=2.0,
+                             cooldown_seconds=0.0, max_pods=2),
+                     clock=clock, load_fn=lambda pods: load["v"])
+    # (a) high-high-dip at 1s steps: without the reset, the window armed
+    # at t=0 would fire at t=2; with it, nothing ever fires because the
+    # signal never persists 2 consecutive seconds
+    for i in range(12):
+        load["v"] = 0.3 if i % 3 == 2 else 10.0   # 0.3 = inside the band
+        assert asc.step() is None, f"dipping signal scaled at sample {i}"
+        clock.t += 1.0
+    # (b) sustained high: armed at t0, still pending at t0+1, fires at
+    # exactly t0+2
+    load["v"] = 10.0
+    t0 = clock.t
+    assert asc.step() is None
+    clock.t = t0 + 1.0
+    assert asc.step() is None
+    clock.t = t0 + 2.0
+    ev = asc.step()
+    assert ev is not None and ev.direction == "up" and ev.t == t0 + 2.0
+    # same closed boundary on the way down
+    load["v"] = 0.0
+    t1 = clock.t + 1.0
+    clock.t = t1
+    assert asc.step() is None
+    clock.t = t1 + 1.0
+    assert asc.step() is None
+    clock.t = t1 + 2.0
+    ev = asc.step()
+    assert ev is not None and ev.direction == "down" and ev.t == t1 + 2.0
+    assert [p.name for p in mps.pods] == ["seed"]
 
 
 # --------------------------------------------------------------------------

@@ -368,7 +368,10 @@ def test_export_stales_out_own_snapshot(tmp_path):
     busy = sched.submit(_job(n_iter=2))
     parked = sched.submit(_job(n_iter=2))
     sched.admit()
-    assert sched.snapshot(snap) == 1             # parked job persisted
+    # parked jobs only: this test is about the *export* stale-out, so
+    # keep the running job off disk (live snapshots are covered by
+    # tests/test_serve_zero_loss.py)
+    assert sched.snapshot(snap, include_running=False) == 1
     assert sched.export_job(parked, transfer)
     assert Scheduler(n_devices=1).restore(snap) == 0
     thief = Scheduler(n_devices=1, memory=_mem(100))
@@ -542,7 +545,9 @@ def test_snapshot_racing_terminal_transition_cannot_resurrect(
         orig_write(ckpt_dir, job_id, spec, tree, step)
 
     monkeypatch.setattr(sched_mod, "_write_job", racing_write)
-    assert sched.snapshot(ckpt) == 1
+    # parked jobs only: the race under test is the victim's unlocked
+    # write window, not the running job's live snapshot
+    assert sched.snapshot(ckpt, include_running=False) == 1
     assert Scheduler(n_devices=1).restore(ckpt) == 0
     sched.run()
     assert sched.records[busy].status is JobStatus.COMPLETED

@@ -1,0 +1,75 @@
+"""Bandwidth-EMA pricing: ``Scheduler.modeled_transfer_seconds`` prices
+one outer iteration's host<->device staging off the CommSchedule at the
+*measured* bandwidth EMA, degrades to 0.0 whenever it cannot know better
+(in-core job, no bandwidth observed yet), and is folded into the backlog
+signal that fleet routing / stealing / autoscaling balance against."""
+
+import numpy as np
+import pytest
+
+from repro.core import phantoms
+from repro.core.geometry import ConeGeometry, circular_angles
+from repro.core.plan import plan as plan_execution
+from repro.core.splitting import MemoryModel
+from repro.serve import ReconJob, Scheduler
+
+GEO = ConeGeometry.nice(16)
+ANGLES = circular_angles(12)
+PROJ = phantoms.sphere_projection_analytic(GEO, ANGLES)
+KIB = 1024
+BW = 64 * KIB * 1024.0          # 64 MiB/s, bytes per second
+
+
+def _mem(kib=220):
+    return MemoryModel(device_bytes=kib * KIB, usable_fraction=1.0)
+
+
+def _job(n_iter=4, **kw):
+    return ReconJob("cgls", GEO, ANGLES, PROJ, n_iter=n_iter, **kw)
+
+
+def test_transfer_seconds_prices_schedule_at_measured_bandwidth():
+    """For a streamed job the price is exactly the execution plan's
+    CommSchedule bytes over the observed bandwidth — the same IR the
+    executors stage from, so pricing and execution cannot drift."""
+    sched = Scheduler(n_devices=1, memory=_mem())
+    sched._bandwidth_ema = BW
+    job = _job(mode="stream")
+    expected = plan_execution(GEO, len(ANGLES), 1,
+                              _mem()).comm.transfer_seconds(BW)
+    assert expected > 0.0
+    assert sched.modeled_transfer_seconds(job) == pytest.approx(expected)
+    # twice the bandwidth, half the price
+    sched._bandwidth_ema = 2 * BW
+    assert sched.modeled_transfer_seconds(job) == pytest.approx(expected / 2)
+
+
+def test_transfer_seconds_degrades_to_zero():
+    sched = Scheduler(n_devices=1, memory=_mem())
+    assert sched.bandwidth_ema is None            # nothing observed yet
+    assert sched.modeled_transfer_seconds(_job(mode="stream")) == 0.0
+    sched._bandwidth_ema = BW
+    # in-core job: operands stay resident, no staging to price
+    assert not sched.job_footprint(_job()).streams
+    assert sched.modeled_transfer_seconds(_job()) == 0.0
+
+
+def test_backlog_folds_transfer_price_per_remaining_iteration():
+    """The load signal owes `remaining * transfer` extra seconds for a
+    queued streamed job once a bandwidth has been observed — a pod on a
+    slow link looks (correctly) more loaded than one on a fast link."""
+    sched = Scheduler(n_devices=1, memory=_mem())
+    job = _job(n_iter=4, mode="stream")
+    sched.submit(job)                             # queued, never admitted
+    base = sched.modeled_backlog_seconds(unit=1.0, init=0.0)
+    sched._bandwidth_ema = BW
+    per_iter = sched.modeled_transfer_seconds(job)
+    assert per_iter > 0.0
+    priced = sched.modeled_backlog_seconds(unit=1.0, init=0.0)
+    assert priced == pytest.approx(base + 4 * per_iter)
+    # faster link -> smaller owed backlog, same ordering as the price
+    sched._bandwidth_ema = 4 * BW
+    assert sched.modeled_backlog_seconds(unit=1.0, init=0.0) < priced
+    np.testing.assert_allclose(
+        sched.modeled_backlog_seconds(unit=1.0, init=0.0),
+        base + 4 * per_iter / 4)

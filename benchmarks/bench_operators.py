@@ -41,6 +41,11 @@ from repro.core.operator import CTOperator
 from repro.core.plan import plan as plan_execution
 from repro.core.splitting import MemoryModel
 
+try:
+    from benchmarks import schema
+except ImportError:           # run as a script: benchmarks/ is sys.path[0]
+    import schema
+
 #: parity gates (pallas vs ref), loose enough for interpret-mode float32
 RTOL, ATOL = 2e-4, 5e-3
 
@@ -136,7 +141,7 @@ def report(rows) -> None:
                      if jax.default_backend() != "tpu" else ""))
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser(
         description="ref-vs-pallas operator throughput per execution mode")
     ap.add_argument("--n", type=int, default=32, help="N^3 volume, N^2 det")
@@ -152,7 +157,7 @@ def main():
     ap.add_argument("--trace", default="",
                     help="enable tracing and write a Chrome-trace JSON of "
                          "the benchmark here (see docs/observability.md)")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if args.trace:
         from repro import obs
         obs.get_tracer().enable()
@@ -167,11 +172,21 @@ def main():
         assert len(rows) == 4, "smoke expected plain+stream x ref+pallas"
         print("SMOKE OK: ref-vs-pallas parity held in plain + stream modes")
     if args.json_out:
-        doc = {"bench": "operators",
-               "params": {"n": n, "angles": angles, "repeats": repeats,
-                          "modes": list(modes), "smoke": args.smoke,
-                          "jax_backend": jax.default_backend()},
-               "rows": rows}
+        params = {"n": n, "angles": angles, "repeats": repeats,
+                  "modes": list(modes), "smoke": args.smoke,
+                  "jax_backend": jax.default_backend()}
+        metrics = []
+        for r in rows:
+            pre = f"{r['mode']}.{r['backend']}"
+            metrics.append(schema.metric(f"{pre}.fp_s", r["fp_s"], "s",
+                                         "lower", repeats))
+            metrics.append(schema.metric(f"{pre}.bp_s", r["bp_s"], "s",
+                                         "lower", repeats))
+            metrics.append(schema.metric(f"{pre}.fp_mvox_s",
+                                         r["fp_mvox_s"], "Mvox/s",
+                                         "higher", repeats))
+        doc = schema.envelope("operators", config=params, metrics=metrics,
+                              smoke=args.smoke, params=params, rows=rows)
         if args.json_out == "-":
             json.dump(doc, sys.stdout, indent=2)
             print()

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import sys
 import time
@@ -47,6 +48,11 @@ from repro.core.geometry import ConeGeometry, circular_angles
 from repro.core.plan import plan as plan_execution
 from repro.core.splitting import MemoryModel
 from repro.core.streaming import stream_backward, stream_forward
+
+try:
+    from benchmarks import schema
+except ImportError:           # run as a script: benchmarks/ is sys.path[0]
+    import schema
 
 
 def _time(fn, repeats=2):
@@ -104,7 +110,7 @@ def run(sizes=(32, 64, 96), device_counts=(1, 2, 4), budget_mib=64.0,
     return rows
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser(
         description="streaming scaling + communication-overlap benchmark")
     ap.add_argument("--sizes", default="32,64,96")
@@ -115,7 +121,7 @@ def main():
                     help="write rows as JSON ('-' for stdout)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: tiny shapes, one repeat")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     sizes = tuple(int(s) for s in args.sizes.split(","))
     devices = tuple(int(s) for s in args.devices.split(","))
     budget, repeats = args.budget_mib, args.repeats
@@ -142,8 +148,22 @@ def main():
         assert rows, "smoke produced no rows"
         assert all(r["overlap_s"] > 0 and r["serial_s"] > 0 for r in rows)
     if args.json_out:
-        doc = {"bench": "scaling", "smoke": args.smoke,
-               "budget_mib": budget, "rows": rows}
+        metrics = []
+        for r in rows:
+            pre = f"{r['op']}.N{r['N']}.d{r['n_dev']}"
+            for name, val, units, direction in (
+                    ("overlap_s", r["overlap_s"], "s", "lower"),
+                    ("speedup", r["speedup"], "x", "higher")):
+                if math.isfinite(val):   # degenerate cells stay in rows
+                    metrics.append(schema.metric(f"{pre}.{name}", val,
+                                                 units, direction,
+                                                 repeats))
+        doc = schema.envelope(
+            "scaling",
+            config={"sizes": list(sizes), "devices": list(devices),
+                    "budget_mib": budget, "repeats": repeats},
+            metrics=metrics, smoke=args.smoke,
+            budget_mib=budget, rows=rows)
         if args.json_out == "-":
             json.dump(doc, sys.stdout, indent=2)
             sys.stdout.write("\n")

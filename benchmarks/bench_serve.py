@@ -74,6 +74,11 @@ from repro.serve import (AsyncDriver, Autoscaler, AutoscalePolicy,
                          DevicePool, MultiPodDriver, MultiPodScheduler,
                          Pod, PodSpec, ReconJob, Scheduler)
 
+try:
+    from benchmarks import schema
+except ImportError:           # run as a script: benchmarks/ is sys.path[0]
+    import schema
+
 KIB = 1024
 
 
@@ -405,7 +410,49 @@ def _write_json(doc: Dict, path: str) -> None:
     print(f"# json -> {path}")
 
 
-def main():
+def _doc_metrics(sections: Dict) -> List[Dict]:
+    """Flatten the section summaries into the shared metric list
+    (:mod:`benchmarks.schema`) the trajectory tracker consumes."""
+    out = []
+    for group in ("configs", "multipod"):
+        for name, s in sections.get(group, {}).items():
+            out.append(schema.metric(f"{name}.jobs_per_sec_wall",
+                                     s["jobs_per_sec_wall"], "jobs/s",
+                                     "higher"))
+            out.append(schema.metric(f"{name}.latency_p95_s",
+                                     s["latency_p95"], "s", "lower"))
+            out.append(schema.metric(f"{name}.wall_s",
+                                     s["wall_seconds"], "s", "lower"))
+    for name, s in sections.get("bursty", {}).items():
+        out.append(schema.metric(f"bursty.{name}.jobs_per_sec",
+                                 s["trace_jobs_per_sec"], "jobs/s",
+                                 "higher"))
+        out.append(schema.metric(f"bursty.{name}.pod_seconds",
+                                 s["pod_seconds"], "s", "lower"))
+    zl = sections.get("zero_loss", {}).get("zero-loss")
+    if zl:
+        out.append(schema.metric("zero_loss.wall_s", zl["wall_seconds"],
+                                 "s", "lower"))
+        out.append(schema.metric("zero_loss.iterations_lost",
+                                 zl["iterations_lost"], "iterations",
+                                 "lower"))
+    return out
+
+
+def _attach_observability(env: Dict, traced: bool) -> None:
+    """Embed the calibration / SLO / memory report in the JSON output
+    when the run was traced (the ledger reads the fleet event log, which
+    only exists with tracing on)."""
+    if not traced:
+        return
+    from repro.obs import CalibrationLedger, memory_calibration, slo_report
+    env["calibration"] = CalibrationLedger.from_events().report()
+    env["slo"] = slo_report()
+    env["memory_calibration"] = [m.as_dict()
+                                 for m in memory_calibration()]
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--small", type=int, default=12)
     ap.add_argument("--large", type=int, default=1)
@@ -443,17 +490,22 @@ def main():
                     help="enable tracing and write a Chrome-trace JSON of "
                          "the whole benchmark here (per-pod process "
                          "tracks; see docs/observability.md)")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     if args.trace:
         from repro import obs
         obs.get_tracer().enable()
 
     if args.smoke:
-        doc = smoke_main()
+        sections = smoke_main()
         if args.json_out:
-            _write_json({"bench": "serve", "smoke": True, **doc},
-                        args.json_out)
+            env = schema.envelope(
+                "serve",
+                config={"smoke": True, "devices": 2, "budget_kib": 220,
+                        "bursts": 2, "jobs_per_burst": 3, "max_pods": 2},
+                metrics=_doc_metrics(sections), smoke=True, **sections)
+            _attach_observability(env, bool(args.trace))
+            _write_json(env, args.json_out)
         if args.trace:
             from repro import obs
             obs.write_chrome_trace(args.trace)
@@ -496,8 +548,7 @@ def main():
     print(f"# threaded vs cooperative (WALL jobs/sec): "
           f"{threaded_speedup:.2f}x; p95 latency {p95_ratio:.2f}x lower")
 
-    doc = {"bench": "serve", "smoke": False, "configs": results,
-           "multipod": {}, "bursty": {}}
+    sections = {"configs": results, "multipod": {}, "bursty": {}}
     if args.pods >= 2:
         n_mp_jobs = args.small + args.large
         # separate warm-up: the shared operator cache keys on the memory
@@ -523,15 +574,24 @@ def main():
               f"{mp['stealing']['stolen_in']} jobs stolen, "
               f"{mp['stealing'].get('stolen_verified', 0)} verified "
               f"bit-identical to unstolen runs")
-        doc["multipod"] = mp
+        sections["multipod"] = mp
 
     if args.bursts >= 1 and args.max_pods >= 2:
-        doc["bursty"] = bursty_section(args)
+        sections["bursty"] = bursty_section(args)
 
-    doc["zero_loss"] = zero_loss_section()
+    sections["zero_loss"] = zero_loss_section()
 
     if args.json_out:
-        _write_json(doc, args.json_out)
+        env = schema.envelope(
+            "serve",
+            config={"small": args.small, "large": args.large,
+                    "devices": args.devices,
+                    "budget_kib": args.budget_kib, "pods": args.pods,
+                    "mp_budget_kib": args.mp_budget_kib,
+                    "bursts": args.bursts, "max_pods": args.max_pods},
+            metrics=_doc_metrics(sections), smoke=False, **sections)
+        _attach_observability(env, bool(args.trace))
+        _write_json(env, args.json_out)
     if args.trace:
         from repro import obs
         obs.write_chrome_trace(args.trace)

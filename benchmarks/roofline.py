@@ -43,10 +43,10 @@ def fmt_table(rows: List[Dict]) -> str:
     return "\n".join(out)
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--report", default="experiments/dryrun_single.json")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if not os.path.exists(args.report):
         print(f"# roofline: no report at {args.report} "
               "(run repro.launch.dryrun first)")

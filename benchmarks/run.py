@@ -21,17 +21,22 @@ def _section(title):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
-                    help="smaller sizes for CI-speed runs")
+                    help="smaller sizes for CI-speed runs (runs the "
+                         "argv-driven benches in --smoke mode)")
     args = ap.parse_args()
     t0 = time.time()
 
     from benchmarks import (bench_breakdown, bench_kernels, bench_limits,
-                            bench_recon, bench_scaling, bench_tv_halo,
-                            roofline)
+                            bench_operators, bench_recon, bench_scaling,
+                            bench_serve, bench_tv_halo, roofline)
+
+    # benches with their own CLI get an explicit argv — never the
+    # umbrella's sys.argv, which carries --fast they don't know
+    fast_argv = ["--smoke"] if args.fast else []
 
     _section("Fig 7/8: FP/BP scaling vs N and device count "
              "(bench_scaling)")
-    bench_scaling.main()
+    bench_scaling.main(list(fast_argv))
 
     _section("Fig 9: time breakdown compute/staging/other "
              "(bench_breakdown)")
@@ -50,8 +55,15 @@ def main():
     _section("Pallas kernels vs oracles (bench_kernels)")
     bench_kernels.main()
 
+    _section("Ref-vs-Pallas operator throughput (bench_operators)")
+    bench_operators.main(list(fast_argv))
+
+    _section("Multi-tenant serving: packing/threading/stealing/"
+             "autoscaling (bench_serve)")
+    bench_serve.main(list(fast_argv))
+
     _section("Roofline table from the dry-run report (roofline)")
-    roofline.main()
+    roofline.main([])
 
     print(f"\n=== benchmarks done in {time.time() - t0:.0f}s ===")
 

@@ -1,0 +1,124 @@
+"""Shared result envelope for the benchmark ``--json`` outputs.
+
+Every bench historically invented its own JSON shape, which made the
+outputs machine-readable but not machine-*comparable* — nothing could
+diff two runs without knowing each bench's private layout.  This module
+defines the one envelope they all emit (and keep their legacy sections
+inside, so older readers keep working):
+
+.. code-block:: json
+
+    {
+      "schema": 1,
+      "bench": "serve",
+      "smoke": true,
+      "config": {"devices": 4, "...": "..."},
+      "metrics": [
+        {"name": "threaded.jobs_per_sec_wall", "value": 3.1,
+         "units": "jobs/s", "direction": "higher", "repeats": 1}
+      ],
+      "...": "legacy bench-specific sections ride along"
+    }
+
+``direction`` says which way is better, so a tracker
+(:mod:`tools.bench_track`) can decide regression-vs-improvement without
+a per-metric table.  Pure stdlib; importable both as
+``benchmarks.schema`` (umbrella) and ``schema`` (script next door).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+SCHEMA_VERSION = 1
+
+DIRECTIONS = ("higher", "lower")
+
+
+def metric(name: str, value: float, units: str,
+           direction: str = "lower", repeats: int = 1) -> Dict:
+    """One named measurement.  ``direction`` is which way is *better*."""
+    if direction not in DIRECTIONS:
+        raise ValueError(f"direction must be one of {DIRECTIONS}, "
+                         f"got {direction!r}")
+    v = float(value)
+    if not math.isfinite(v):
+        raise ValueError(f"metric {name!r}: value {value!r} is not finite")
+    return {"name": str(name), "value": v, "units": str(units),
+            "direction": direction, "repeats": int(repeats)}
+
+
+def envelope(bench: str, config: Dict, metrics: List[Dict],
+             smoke: bool = False, **extra) -> Dict:
+    """The unified result document; ``extra`` carries each bench's
+    legacy sections (``rows``, ``configs``, ...) unchanged."""
+    doc = {"schema": SCHEMA_VERSION, "bench": str(bench),
+           "smoke": bool(smoke), "config": dict(config),
+           "metrics": [metric(**m) if not _is_metric(m) else m
+                       for m in metrics]}
+    for k, v in extra.items():
+        if k in doc:
+            raise ValueError(f"extra section {k!r} collides with an "
+                             f"envelope field")
+        doc[k] = v
+    return doc
+
+
+def _is_metric(m) -> bool:
+    return (isinstance(m, dict)
+            and {"name", "value", "units", "direction",
+                 "repeats"} <= set(m))
+
+
+def validate_envelope(doc: Dict) -> List[str]:
+    """Structural check; returns a list of problems (empty = valid)."""
+    errs: List[str] = []
+    if not isinstance(doc, dict):
+        return ["envelope is not a JSON object"]
+    if doc.get("schema") != SCHEMA_VERSION:
+        errs.append(f"schema != {SCHEMA_VERSION}: {doc.get('schema')!r}")
+    if not isinstance(doc.get("bench"), str) or not doc.get("bench"):
+        errs.append("missing/empty 'bench'")
+    if not isinstance(doc.get("config"), dict):
+        errs.append("'config' must be an object")
+    ms = doc.get("metrics")
+    if not isinstance(ms, list):
+        errs.append("'metrics' must be a list")
+        return errs
+    seen = set()
+    for i, m in enumerate(ms):
+        if not _is_metric(m):
+            errs.append(f"metrics[{i}] missing required fields")
+            continue
+        if m["direction"] not in DIRECTIONS:
+            errs.append(f"metrics[{i}] bad direction {m['direction']!r}")
+        if not isinstance(m["value"], (int, float)) \
+                or not math.isfinite(float(m["value"])):
+            errs.append(f"metrics[{i}] non-finite value {m['value']!r}")
+        if m["name"] in seen:
+            errs.append(f"duplicate metric name {m['name']!r}")
+        seen.add(m["name"])
+    return errs
+
+
+def metric_values(doc: Dict) -> Dict[str, Dict]:
+    """name -> metric dict, for comparison tooling."""
+    return {m["name"]: m for m in doc.get("metrics", [])
+            if _is_metric(m)}
+
+
+def merge_envelopes(docs: List[Dict],
+                    bench: Optional[str] = None) -> Dict:
+    """Combine several bench envelopes into one trajectory-point payload
+    (metric names are prefixed ``<bench>.`` to stay unique)."""
+    metrics: List[Dict] = []
+    config: Dict = {}
+    for d in docs:
+        b = d.get("bench", "?")
+        config[b] = d.get("config", {})
+        for m in d.get("metrics", []):
+            if _is_metric(m):
+                metrics.append({**m, "name": f"{b}.{m['name']}"})
+    return envelope(bench or "combined", config, metrics,
+                    smoke=any(d.get("smoke") for d in docs))

@@ -22,9 +22,17 @@ the modeled backlog is high, then drains and retires surplus pods once
 the work is done — the printout shows every scale event and the
 pod-seconds the elasticity saved versus keeping the peak fleet up.
 
+Any variant can be *observed* live: ``--metrics-port 0`` enables
+tracing, serves the full Prometheus exposition (tracer + calibration +
+SLO families) over HTTP for the duration of the run, and prints the
+calibration verdict at the end — how many modeled-vs-measured samples
+the cost models produced, which pods (if any) drifted stale, and the
+per-priority deadline attainment.
+
     PYTHONPATH=src python examples/serve_jobs.py
     PYTHONPATH=src python examples/serve_jobs.py --pods 2
     PYTHONPATH=src python examples/serve_jobs.py --autoscale
+    PYTHONPATH=src python examples/serve_jobs.py --metrics-port 0
     PYTHONPATH=src python examples/serve_jobs.py --help
 """
 
@@ -34,6 +42,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import phantoms
 from repro.core.geometry import ConeGeometry, circular_angles
 from repro.core.splitting import MemoryModel
@@ -95,7 +104,8 @@ def run_single_pool(jobs, truth, args):
     # demos the serving layer.
     sched = Scheduler(n_devices=args.devices,
                       memory=MemoryModel(device_bytes=args.budget_kib * KIB,
-                                         usable_fraction=1.0))
+                                         usable_fraction=1.0),
+                      name="pool")
     jids = {name: sched.submit(job) for name, job in jobs.items()}
 
     # AsyncDriver.run() = start worker threads, wait idle, stop.  Steps
@@ -191,6 +201,25 @@ def run_autoscaled_fleet(jobs, truth, args):
           f"{peak * s['wall_seconds']:.2f} for a static peak fleet")
 
 
+def calibration_verdict():
+    """The cost-model report card the observability layer distills from
+    the run's fleet events (docs/observability.md 'Calibration ledger')."""
+    led = obs.CalibrationLedger.from_events()
+    kinds = led.samples_by_kind()
+    stale = led.stale_pods()
+    print(f"\ncalibration: "
+          + ", ".join(f"{k}={kinds[k]}" for k in sorted(kinds))
+          + " modeled-vs-measured samples; "
+          + (f"stale pods: {stale}" if stale
+             else "no pod drifted past the threshold"))
+    rep = obs.slo_report()
+    print(f"SLO: overall deadline attainment "
+          f"{rep['overall_attainment']:.0%} "
+          f"({rep['deadline_jobs']} jobs declared one); per tier: "
+          + ", ".join(f"p{t['priority']} lat_p95="
+                      f"{t['latency_p95_s']:.2f}s" for t in rep["tiers"]))
+
+
 def main():
     ap = argparse.ArgumentParser(
         description="Multi-tenant serving demo: three tenants (urgent / "
@@ -218,15 +247,35 @@ def main():
                          "Autoscaler while the backlog is high, drained "
                          "back down when it clears (see docs/serve.md "
                          "'Elastic fleets')")
+    ap.add_argument("--metrics-port", type=int, default=-1,
+                    help="enable tracing and serve the live Prometheus "
+                         "metrics (tracer + calibration + SLO families) "
+                         "on this port for the whole run; 0 picks a free "
+                         "port; also prints the calibration verdict at "
+                         "the end")
     args = ap.parse_args()
 
+    server = None
+    if args.metrics_port >= 0:
+        obs.get_tracer().enable()
+        server = obs.MetricsServer(port=args.metrics_port)
+        server.start()
+        print(f"live metrics at {server.url} (scrape while it runs)\n")
+
     jobs, truth = build_jobs(args.iters)
-    if args.autoscale:
-        run_autoscaled_fleet(jobs, truth, args)
-    elif args.pods > 1:
-        run_pod_fleet(jobs, truth, args)
-    else:
-        run_single_pool(jobs, truth, args)
+    try:
+        if args.autoscale:
+            run_autoscaled_fleet(jobs, truth, args)
+        elif args.pods > 1:
+            run_pod_fleet(jobs, truth, args)
+        else:
+            run_single_pool(jobs, truth, args)
+        if server is not None:
+            calibration_verdict()
+    finally:
+        if server is not None:
+            server.stop()
+            obs.get_tracer().disable()
 
 
 if __name__ == "__main__":

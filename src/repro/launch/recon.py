@@ -25,7 +25,12 @@ hands the same mesh back to ``restore_fleet`` to re-derive the pins.
 load it at https://ui.perfetto.dev to see the per-slab
 H2D / compute / D2H spans on per-device tracks (the paper's Fig 3/5
 timelines); ``--prometheus out.prom`` writes a Prometheus-style text
-snapshot of the phase totals and counters at exit.
+snapshot at exit — the tracer's phase totals and counters plus the
+calibration, SLO and memory-margin families.  ``--metrics-port N``
+serves the same exposition live over HTTP for the duration of the run
+(scrape ``/metrics``; 0 picks a free port), and
+``--calibration-report`` prints the modeled-vs-measured calibration
+ledger + SLO report as JSON at exit (see docs/observability.md).
 
 Numerics are identical to the old monolithic driver: the scheduler steps
 the same algorithm iterators the monolithic entry points wrap.
@@ -62,10 +67,20 @@ def reconstruct(algname: str = "cgls", n: int = 64, n_angles: int = 96,
                 device_bytes: int = 0, verbose: bool = True,
                 snapshot_dir: str = "", pods: int = 1,
                 backend: str = "auto", trace: str = "",
-                prometheus: str = "", pin_devices: bool = False):
-    if trace or prometheus:
+                prometheus: str = "", pin_devices: bool = False,
+                metrics_port: int = -1, calibration_report: bool = False):
+    # every observability output needs the tracer on: the trace/snapshot
+    # exporters read its ring buffer, the live endpoint re-reads it per
+    # scrape, and the calibration ledger folds its fleet event log
+    if trace or prometheus or calibration_report or metrics_port >= 0:
         from repro import obs
         obs.get_tracer().enable()
+        server = None
+        if metrics_port >= 0:
+            server = obs.MetricsServer(port=metrics_port)
+            server.start()
+            if verbose:
+                print(f"[recon] live metrics at {server.url}")
         try:
             return _reconstruct(algname, n, n_angles, iters, mode,
                                 device_bytes, verbose, snapshot_dir,
@@ -79,10 +94,24 @@ def reconstruct(algname: str = "cgls", n: int = 64, n_angles: int = 96,
                     print(f"[recon] chrome trace -> {trace} "
                           f"(load at https://ui.perfetto.dev)")
             if prometheus:
+                # the full exposition: tracer families plus the
+                # calibration / SLO / memory-margin families
                 with open(prometheus, "w") as f:
-                    f.write(obs.prometheus_snapshot())
+                    f.write(obs.metrics_text())
                 if verbose:
                     print(f"[recon] prometheus snapshot -> {prometheus}")
+            if calibration_report:
+                import json
+                report = {
+                    "calibration": obs.CalibrationLedger.from_events()
+                                      .report(),
+                    "memory": [m.as_dict()
+                               for m in obs.memory_calibration()],
+                    "slo": obs.slo_report(),
+                }
+                print(json.dumps(report, indent=2, sort_keys=True))
+            if server is not None:
+                server.stop()
     return _reconstruct(algname, n, n_angles, iters, mode, device_bytes,
                         verbose, snapshot_dir, pods, backend, pin_devices)
 
@@ -263,13 +292,24 @@ def main():
                          "here (open at https://ui.perfetto.dev; see "
                          "docs/observability.md)")
     ap.add_argument("--prometheus", default="",
-                    help="write a Prometheus-style text snapshot of the "
-                         "phase totals and counters here at exit")
+                    help="write a Prometheus-style text snapshot (phase "
+                         "totals, counters, calibration / SLO / memory-"
+                         "margin families) here at exit")
+    ap.add_argument("--metrics-port", type=int, default=-1,
+                    help="serve the live Prometheus exposition over HTTP "
+                         "on this port for the duration of the run "
+                         "(0 = pick a free port); implies tracing")
+    ap.add_argument("--calibration-report", action="store_true",
+                    help="print the modeled-vs-measured calibration "
+                         "ledger + SLO report as JSON at exit; implies "
+                         "tracing (see docs/observability.md)")
     args = ap.parse_args()
     reconstruct(args.alg, args.n, args.angles, args.iters, args.mode,
                 args.device_bytes, snapshot_dir=args.snapshot_dir,
                 pods=args.pods, backend=args.backend, trace=args.trace,
-                prometheus=args.prometheus, pin_devices=args.pin_devices)
+                prometheus=args.prometheus, pin_devices=args.pin_devices,
+                metrics_port=args.metrics_port,
+                calibration_report=args.calibration_report)
 
 
 if __name__ == "__main__":

@@ -362,7 +362,9 @@ class Tracer:
             lines.append(f'repro_events_total{{kind="{k}"}} '
                          f"{event_counts[k]}")
         for k in sorted(counters):
-            lines.append(f"repro_{k}_total {counters[k]}")
+            lines += [f"# HELP repro_{k}_total incr() counter {k!r}",
+                      f"# TYPE repro_{k}_total counter",
+                      f"repro_{k}_total {counters[k]}"]
         lines += ["# HELP repro_trace_dropped_records ring-buffer evictions",
                   "# TYPE repro_trace_dropped_records gauge",
                   f"repro_trace_dropped_records {dropped}"]

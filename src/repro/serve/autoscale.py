@@ -63,9 +63,10 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..obs import fleet_event
+from ..obs.calibration import CalibrationLedger
 from .pool import DuplicatePodName, MultiPodScheduler, Pod, PodSpec
 from .scheduler import estimate_job_footprint
 from .steal import drain_pod, fleet_units, pod_load
@@ -368,8 +369,13 @@ class Autoscaler:
         self._above_since = None
         ev = ScaleEvent(now, "up", pod.name, load,
                         len(self.mps.pods_snapshot()), predicted=predicted)
+        # modeled_s: the fleet's init EMA — the modeled lead time before
+        # the new pod does useful work (the quantity the predictive
+        # trigger bet on); the calibration ledger folds it so scale-up
+        # decisions are auditable on the same scale as admissions
+        _, init = fleet_units(self.mps.pods_snapshot())
         fleet_event("scale-up", pod=pod.name, load=load, n_pods=ev.n_pods,
-                    predicted=predicted)
+                    predicted=predicted, modeled_s=init)
         self.events.append(ev)
         return ev
 
@@ -439,3 +445,26 @@ class Autoscaler:
                     n_pods=ev.n_pods, moved=len(moved))
         self.events.append(ev)
         return ev
+
+    # ---- reporting ---------------------------------------------------------
+
+    def summary(self) -> Dict:
+        """Control-loop audit: the scale decisions taken plus the
+        calibration ledger's verdict on the cost models those decisions
+        rode on (samples folded per event kind, and the pods whose
+        models have EMA-drifted stale).  The ledger reads the live
+        fleet event log, so this is empty unless tracing was enabled."""
+        led = CalibrationLedger.from_events()
+        return {
+            "scale_ups": sum(1 for e in self.events
+                             if e.direction == "up"),
+            "scale_downs": sum(1 for e in self.events
+                               if e.direction == "down"),
+            "predicted_scale_ups": sum(1 for e in self.events
+                                       if e.predicted),
+            "aborted_scale_downs": self.aborted_scale_downs,
+            "drained_jobs": len(self.drained_jobs),
+            "calibration_samples_by_kind": led.samples_by_kind(),
+            "calibration_events_by_kind": led.events_by_kind(),
+            "stale_pods": led.stale_pods(),
+        }

@@ -57,6 +57,20 @@ class ServeMetrics:
     #    unless tracing was enabled during the run (zero-overhead default)
     phase_seconds: Dict[str, float] = dataclasses.field(default_factory=dict)
 
+    # -- cost-model calibration gauges (fed by the scheduler at the same
+    #    sites that emit the modeled-vs-measured fleet events) --
+    # measured host<->device bandwidth the scheduler prices transfers
+    # with; None until a traced streamed step has been observed
+    bandwidth_ema_bytes_per_s: Optional[float] = None
+    # event kind ("admit" / "step") -> signed errors (measured - modeled
+    # seconds); positive bias = the cost model is optimistic
+    calibration_errors_s: Dict[str, List[float]] = dataclasses.field(
+        default_factory=dict)
+    # largest single-job footprint the planner committed to a device —
+    # the modeled side of the memory-margin gauge (the measured side
+    # lives in the trace: repro.obs.calibration.memory_calibration)
+    memory_modeled_peak_bytes: int = 0
+
     wall_start: Optional[float] = None
     wall_end: Optional[float] = None
 
@@ -76,6 +90,15 @@ class ServeMetrics:
         self.completed += 1
         self.latencies.append(latency)
         self.queue_waits.append(queue_wait)
+
+    def record_calibration(self, kind: str, modeled: Optional[float],
+                           measured: Optional[float]) -> None:
+        """Fold one modeled-vs-measured observation; one-sided samples
+        (cold EMAs model ``None``) are skipped, matching the ledger."""
+        if modeled is None or measured is None:
+            return
+        self.calibration_errors_s.setdefault(kind, []).append(
+            measured - modeled)
 
     # ---- summaries ---------------------------------------------------------
 
@@ -117,6 +140,19 @@ class ServeMetrics:
             "pods_online_peak": (max(n for _, n in self.pods_online)
                                  if self.pods_online else 0),
             "phase_seconds": dict(self.phase_seconds),
+            "bandwidth_ema_bytes_per_s": self.bandwidth_ema_bytes_per_s,
+            "staging_seconds": {
+                k: self.phase_seconds.get(k, 0.0)
+                for k in ("h2d", "prefetch", "d2h")},
+            "memory_modeled_peak_bytes": self.memory_modeled_peak_bytes,
+            "calibration": {
+                kind: {
+                    "samples": len(errs),
+                    "bias_s": sum(errs) / len(errs),
+                    "abs_p95_s": percentile([abs(e) for e in errs], 95),
+                }
+                for kind, errs in sorted(self.calibration_errors_s.items())
+                if errs},
         }
         if device_busy is not None:
             makespan = max(device_busy) if device_busy else 0.0
@@ -153,6 +189,10 @@ def merge_metrics(parts: List["ServeMetrics"]) -> "ServeMetrics":
         out.pod_seconds += m.pod_seconds
         out.pods_online.extend(m.pods_online)
         out.record_phases(m.phase_seconds)
+        for kind, errs in m.calibration_errors_s.items():
+            out.calibration_errors_s.setdefault(kind, []).extend(errs)
+        out.memory_modeled_peak_bytes = max(out.memory_modeled_peak_bytes,
+                                            m.memory_modeled_peak_bytes)
         out.step_seconds.extend(m.step_seconds)
         out.latencies.extend(m.latencies)
         out.queue_waits.extend(m.queue_waits)
@@ -162,5 +202,11 @@ def merge_metrics(parts: List["ServeMetrics"]) -> "ServeMetrics":
         if m.wall_end is not None:
             out.wall_end = (m.wall_end if out.wall_end is None
                             else max(out.wall_end, m.wall_end))
+    # fleet view of the measured bandwidth: mean over the pods that have
+    # one (each pod's EMA stays the authoritative pricing input locally)
+    bws = [m.bandwidth_ema_bytes_per_s for m in parts
+           if m.bandwidth_ema_bytes_per_s is not None]
+    if bws:
+        out.bandwidth_ema_bytes_per_s = sum(bws) / len(bws)
     out.pods_online.sort()     # one chronological fleet timeline
     return out

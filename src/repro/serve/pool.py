@@ -53,6 +53,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 from ..core.algorithms.stepwise import get_algorithm
 from ..core.splitting import MemoryModel
 from ..obs import fleet_event
+from ..obs.calibration import CalibrationLedger
 from .job import JobRecord, ReconJob
 from .metrics import ServeMetrics, merge_metrics
 from .scheduler import (DevicePool, Scheduler, _TERMINAL,
@@ -645,6 +646,12 @@ class MultiPodScheduler:
                                for p in retired}
         out["retired_pods"].update({s.name: s.summary() for s in summaries})
         out["jobs_stolen"] = len(self.stolen_jobs)
+        # the fleet event log's calibration verdict: samples folded per
+        # event kind and the pods whose cost models have EMA-drifted
+        # stale (empty unless tracing was enabled during the run)
+        led = CalibrationLedger.from_events()
+        out["calibration_samples_by_kind"] = led.samples_by_kind()
+        out["stale_pods"] = led.stale_pods()
         return out
 
     # ---- fleet-level durable snapshots -------------------------------------

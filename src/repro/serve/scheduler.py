@@ -324,6 +324,15 @@ class Scheduler:
 
     # ---- client API --------------------------------------------------------
 
+    def _cal_attrs(self, job: ReconJob) -> Dict[str, str]:
+        """Cost-model identity attrs stamped on admit/step/reject/complete
+        events so the calibration ledger (repro.obs.calibration) can
+        group modeled-vs-measured errors per
+        (geometry, algorithm, backend, pod)."""
+        nz, ny, nx = job.geo.n_voxel
+        return {"geo": f"{nz}x{ny}x{nx}", "alg": job.algorithm,
+                "backend": job.backend or "auto"}
+
     def submit(self, job: ReconJob) -> str:
         get_algorithm(job.algorithm)   # fail fast on unknown algorithms
         with self._lock:
@@ -448,6 +457,9 @@ class Scheduler:
             # eviction planning see the slot as taken while the executor
             # compiles outside the lock
             self.pool.commit(slot, rec.job.job_id, fp.bytes_on_device)
+            self.metrics.memory_modeled_peak_bytes = max(
+                self.metrics.memory_modeled_peak_bytes,
+                fp.bytes_on_device)
             self._admitting += 1
             self._admitting_recs[rec.job.job_id] = rec
             fleet_event("place", job=rec.job.job_id, pod=self.name,
@@ -469,7 +481,9 @@ class Scheduler:
             return
         fleet_event("admit", job=rec.job.job_id, pod=self.name,
                     device=slot.index, measured_s=executor.init_seconds,
-                    modeled_s=self._init_ema)
+                    modeled_s=self._init_ema, **self._cal_attrs(rec.job))
+        self.metrics.record_calibration("admit", self._init_ema,
+                                        executor.init_seconds)
         self.metrics.record_phases(executor.take_phase_seconds())
         self._init_ema = (executor.init_seconds if self._init_ema is None
                           else self._ema_alpha * executor.init_seconds
@@ -575,9 +589,16 @@ class Scheduler:
         est = self.modeled_completion_seconds(rec)
         if est is not None and est > rec.job.deadline_seconds:
             self.metrics.deadline_rejected += 1
+            # the refusal's full evidence goes on the event: the modeled
+            # completion seconds that condemned the job, the deadline it
+            # missed, and the cost-model identity — a deadline refusal
+            # is auditable from the event log alone
             fleet_event("reject", job=rec.job.job_id, pod=self.name,
                         modeled_s=est,
-                        deadline_s=rec.job.deadline_seconds)
+                        deadline_s=rec.job.deadline_seconds,
+                        priority=rec.job.priority,
+                        queue_wait_s=time.monotonic() - rec.submit_time,
+                        **self._cal_attrs(rec.job))
             self._fail(rec, f"deadline {rec.job.deadline_seconds:.3f}s "
                             f"unmeetable: modeled completion {est:.3f}s")
             return True
@@ -678,7 +699,11 @@ class Scheduler:
         self.metrics.record_completion(rec.latency, rec.queue_wait)
         fleet_event("complete", job=rec.job.job_id, pod=self.name,
                     device=run.slot.index, measured_s=rec.latency,
-                    it=rec.iterations_done)
+                    it=rec.iterations_done,
+                    queue_wait_s=rec.queue_wait,
+                    priority=rec.job.priority,
+                    deadline_s=rec.job.deadline_seconds,
+                    **self._cal_attrs(rec.job))
         run.executor.release()
         self.pool.release(run.slot, rec.job.job_id, rec.footprint_bytes)
         del self.running[rec.job.job_id]
@@ -688,12 +713,14 @@ class Scheduler:
         self.metrics.record_step(dt)
         phases = run.executor.take_phase_seconds()
         self.metrics.record_phases(phases)
+        modeled = (None if self._step_ema is None
+                   else self._step_ema * max(run.passes, 1e-9)
+                   + self.modeled_transfer_seconds(run.record.job))
         fleet_event("step", job=run.record.job.job_id, pod=self.name,
                     device=run.slot.index, measured_s=dt,
-                    modeled_s=(None if self._step_ema is None
-                               else self._step_ema * max(run.passes, 1e-9)
-                               + self.modeled_transfer_seconds(
-                                   run.record.job)))
+                    modeled_s=modeled,
+                    **self._cal_attrs(run.record.job))
+        self.metrics.record_calibration("step", modeled, dt)
         # measured-bandwidth feedback: the staging span seconds the obs
         # layer attributed to this step (critical-path h2d, lookahead
         # prefetch, d2h) against the CommSchedule's modeled bytes give an
@@ -708,6 +735,7 @@ class Scheduler:
                                    else self._ema_alpha * bw
                                    + (1 - self._ema_alpha)
                                    * self._bandwidth_ema)
+            self.metrics.bandwidth_ema_bytes_per_s = self._bandwidth_ema
             dt = max(dt - staging, 0.0)
         # the EMA tracks the *per-pass* unit cost: a streamed step's wall
         # time is divided by its slab-pass multiplier, so steps observed

@@ -1,0 +1,436 @@
+"""The cost-model feedback loop: calibration ledger math on synthetic
+event streams (bias sign, percentile edges, drift firing and clearing),
+memory watermark-vs-footprint margins, per-priority SLO accounting, the
+live metrics endpoint round-trip, the ServeMetrics calibration gauges
+through merge_metrics, the bench envelope schema, and the trajectory
+gate (bench_track)."""
+
+import json
+import subprocess
+import sys
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro import obs
+from repro.core import phantoms
+from repro.core.geometry import ConeGeometry, circular_angles
+from repro.core.splitting import MemoryModel
+from repro.obs.calibration import (CalibrationKey, CalibrationLedger,
+                                   calibration_prometheus,
+                                   memory_calibration)
+from repro.obs.slo import slo_prometheus, slo_report
+from repro.obs.trace import InstantEvent
+from repro.serve import ReconJob, Scheduler, ServeMetrics, merge_metrics
+
+GEO = ConeGeometry.nice(16)
+ANGLES = circular_angles(12)
+PROJ = phantoms.sphere_projection_analytic(GEO, ANGLES)
+
+KIB = 1024
+
+
+def _mem(kib, frac=1.0):
+    return MemoryModel(device_bytes=kib * KIB, usable_fraction=frac)
+
+
+def _job(alg="cgls", n_iter=2, **kw):
+    return ReconJob(alg, GEO, ANGLES, PROJ, n_iter=n_iter, **kw)
+
+
+@pytest.fixture
+def tracer():
+    """The process tracer, enabled and empty; restored disabled+empty."""
+    t = obs.get_tracer()
+    t.clear()
+    t.enable()
+    yield t
+    t.disable()
+    t.clear()
+
+
+def _ev(kind, seq=0, **attrs):
+    """A synthetic fleet event (ledger/SLO folding is pure attr math)."""
+    return InstantEvent(name=kind, t=float(seq), thread=0, seq=seq,
+                        attrs=attrs)
+
+
+# --------------------------------------------------------------------------
+# ledger math on synthetic streams
+# --------------------------------------------------------------------------
+
+def test_ledger_bias_sign_and_percentiles():
+    # model says 1.0s; reality is 1.5, 1.1, 1.2, 3.0 -> optimistic model
+    errs = (0.5, 0.1, 0.2, 2.0)
+    events = [_ev("step", i, pod="p0", geo="16x16x16", alg="cgls",
+                  backend="auto", modeled_s=1.0, measured_s=1.0 + e)
+              for i, e in enumerate(errs)]
+    led = CalibrationLedger.from_events(events)
+    (st,) = led.entries()
+    assert st.kind == "step" and st.samples == 4 and st.events == 4
+    assert st.key == CalibrationKey("16x16x16", "cgls", "auto", "p0")
+    assert st.bias_s == pytest.approx(sum(errs) / 4)     # positive bias
+    assert st.abs_error_percentile(0) == pytest.approx(0.1)
+    assert st.abs_error_percentile(100) == pytest.approx(2.0)
+    assert st.abs_error_percentile(50) in (0.2, 0.5)     # nearest rank
+    # pessimistic model -> negative bias
+    led2 = CalibrationLedger.from_events(
+        [_ev("admit", 0, pod="p1", modeled_s=2.0, measured_s=1.0)])
+    (st2,) = led2.entries()
+    assert st2.bias_s == pytest.approx(-1.0)
+
+
+def test_ledger_one_sided_events_count_but_never_sample():
+    events = [_ev("complete", 0, pod="p0", measured_s=3.0),
+              _ev("scale-up", 1, pod="p1", modeled_s=0.5),
+              _ev("migrate", 2, src="p0", dst="p1")]
+    led = CalibrationLedger.from_events(events)
+    assert led.events_by_kind() == {"complete": 1, "scale-up": 1,
+                                    "migrate": 1}
+    assert led.samples_by_kind() == {"complete": 0, "scale-up": 0,
+                                     "migrate": 0}
+    # totals still accumulate the known side
+    by_kind = {st.kind: st for st in led.entries()}
+    assert by_kind["complete"].measured_total_s == pytest.approx(3.0)
+    assert by_kind["scale-up"].modeled_total_s == pytest.approx(0.5)
+    # migrate keys by destination pod (where the job lands)
+    assert by_kind["migrate"].key.pod == "p1"
+    # and nothing ever drifts without two-sided samples
+    assert led.stale_pods() == []
+
+
+def test_ledger_drift_fires_then_clears():
+    led = CalibrationLedger(drift_threshold=0.5, drift_min_samples=4)
+    # 4 wildly wrong samples (100% relative error) -> drift fires
+    for i in range(4):
+        led.fold(_ev("step", i, pod="bad", modeled_s=1.0, measured_s=2.0))
+    assert led.stale_pods() == ["bad"]
+    (st,) = led.entries()
+    assert st.drift and st.drift_ema > 0.5
+    # a long run of accurate samples decays the EMA back under threshold
+    for i in range(20):
+        led.fold(_ev("step", 10 + i, pod="bad", modeled_s=1.0,
+                     measured_s=1.0))
+    (st,) = led.entries()
+    assert not st.drift and st.drift_ema < 0.5
+    assert led.stale_pods() == []
+
+
+def test_ledger_min_samples_gate_holds_fire():
+    led = CalibrationLedger(drift_threshold=0.5, drift_min_samples=4)
+    for i in range(3):      # one short of the gate, 100% rel error
+        led.fold(_ev("step", i, pod="p0", modeled_s=1.0, measured_s=2.0))
+    assert led.stale_pods() == []
+
+
+def test_ledger_groups_by_key_and_ignores_unknown_kinds():
+    events = [_ev("step", 0, pod="p0", alg="cgls", modeled_s=1, measured_s=1),
+              _ev("step", 1, pod="p0", alg="sirt", modeled_s=1, measured_s=1),
+              _ev("step", 2, pod="p1", alg="cgls", modeled_s=1, measured_s=1),
+              _ev("park", 3, pod="p0")]          # not a calibration kind
+    led = CalibrationLedger.from_events(events)
+    assert len(led.entries()) == 3
+    assert led.events_by_kind() == {"step": 3}
+
+
+# --------------------------------------------------------------------------
+# memory calibration
+# --------------------------------------------------------------------------
+
+def test_memory_margin_watermark_vs_footprint(tracer):
+    # staged transfers: high-water 512 on device0, 768 on device1
+    for nbytes, dev in ((256, "device0"), (512, "device0"),
+                        (768, "device1")):
+        with obs.span("stage", "h2d", pod="p0", device=dev, bytes=nbytes):
+            pass
+    # modeled footprints committed at placement
+    obs.fleet_event("place", job="j1", pod="p0", device="device0",
+                    bytes=1024)
+    obs.fleet_event("place", job="j2", pod="p0", device="device1",
+                    bytes=512)
+    margins = {(m.pod, m.device): m for m in memory_calibration()}
+    safe = margins[("p0", "device0")]
+    assert safe.measured_bytes == 512 and safe.modeled_bytes == 1024
+    assert safe.margin == pytest.approx(2.0)
+    risky = margins[("p0", "device1")]
+    assert risky.margin == pytest.approx(512 / 768)      # < 1: OOM risk
+    assert risky.as_dict()["margin"] < 1.0
+
+
+def test_memory_margin_one_sided_tracks_reported(tracer):
+    with obs.span("stage", "d2h", pod="p0", device="device0", bytes=100):
+        pass
+    (m,) = memory_calibration()
+    assert m.modeled_bytes == 0 and m.measured_bytes == 100
+    assert m.margin == 0.0
+    obs.get_tracer().clear()
+    obs.fleet_event("place", job="j", pod="p1", device="device0", bytes=64)
+    (m2,) = memory_calibration()
+    assert m2.measured_bytes == 0 and m2.margin == float("inf")
+    assert m2.as_dict()["margin"] is None                # JSON-able
+
+
+# --------------------------------------------------------------------------
+# SLO accounting
+# --------------------------------------------------------------------------
+
+def test_slo_attainment_and_percentiles_per_priority():
+    events = [
+        _ev("submit", 0, job="a", priority=1),
+        _ev("submit", 1, job="b", priority=1),
+        _ev("submit", 2, job="c", priority=0),
+        _ev("submit", 3, job="d", priority=1),
+        # a: met (2.0 <= 5.0); b: late (9.0 > 5.0)
+        _ev("complete", 4, job="a", priority=1, deadline_s=5.0,
+            measured_s=2.0, queue_wait_s=0.5),
+        _ev("complete", 5, job="b", priority=1, deadline_s=5.0,
+            measured_s=9.0, queue_wait_s=4.0),
+        # c: no deadline declared -> never counts against attainment
+        _ev("complete", 6, job="c", priority=0, measured_s=1.0,
+            queue_wait_s=0.1),
+        # d: refused at admission with a deadline -> missed
+        _ev("reject", 7, job="d", priority=1, deadline_s=1.0),
+    ]
+    rep = slo_report(events)
+    tiers = {t["priority"]: t for t in rep["tiers"]}
+    t1 = tiers[1]
+    assert t1["submitted"] == 3 and t1["completed"] == 2
+    assert t1["rejected"] == 1
+    assert t1["deadline_jobs"] == 3 and t1["deadline_met"] == 1
+    assert t1["attainment"] == pytest.approx(1 / 3)
+    assert t1["latency_p95_s"] == pytest.approx(9.0)
+    assert t1["queue_wait_p50_s"] in (0.5, 4.0)
+    t0 = tiers[0]
+    assert t0["deadline_jobs"] == 0 and t0["attainment"] == 1.0
+    assert rep["overall_attainment"] == pytest.approx(1 / 3)
+    assert rep["deadline_jobs"] == 3
+
+
+def test_slo_priority_joined_via_submit_when_missing():
+    events = [_ev("submit", 0, job="x", priority=2),
+              _ev("complete", 1, job="x", deadline_s=10.0, measured_s=1.0)]
+    rep = slo_report(events)
+    (t,) = rep["tiers"]
+    assert t["priority"] == 2 and t["attainment"] == 1.0
+
+
+def test_slo_empty_stream_is_trivially_held():
+    rep = slo_report([])
+    assert rep["tiers"] == [] and rep["overall_attainment"] == 1.0
+
+
+# --------------------------------------------------------------------------
+# Prometheus exposition + live endpoint
+# --------------------------------------------------------------------------
+
+REQUIRED_FAMILIES = (
+    "repro_calibration_samples_total", "repro_calibration_bias_seconds",
+    "repro_calibration_abs_p95_seconds", "repro_calibration_drift",
+    "repro_memory_modeled_bytes", "repro_memory_watermark_bytes",
+    "repro_memory_margin_ratio", "repro_slo_attainment_ratio",
+    "repro_slo_latency_p95_seconds", "repro_slo_queue_wait_p95_seconds",
+    "repro_slo_completed_total",
+)
+
+
+def test_family_headers_present_even_when_empty(tracer):
+    text = (calibration_prometheus(CalibrationLedger(), [])
+            + slo_prometheus(slo_report([])))
+    for fam in REQUIRED_FAMILIES:
+        assert f"# TYPE {fam} " in text, fam
+
+
+def test_http_round_trip_serves_live_families(tracer):
+    sched = Scheduler(n_devices=1, memory=_mem(800), name="p0")
+    sched.submit(_job(n_iter=2, priority=1, deadline_seconds=300.0))
+    sched.run()
+    with obs.MetricsServer(port=0) as srv:
+        with urllib.request.urlopen(srv.url, timeout=10) as resp:
+            assert resp.status == 200
+            assert resp.headers["Content-Type"].startswith("text/plain")
+            body = resp.read().decode("utf-8")
+        # a second scrape re-reads the live tracer and still parses
+        with urllib.request.urlopen(srv.url, timeout=10) as resp:
+            assert resp.read().decode("utf-8") == body
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(
+                f"http://127.0.0.1:{srv.port}/nope", timeout=10)
+    for fam in REQUIRED_FAMILIES:
+        assert f"# TYPE {fam} " in body, fam
+    # the run above produced real calibration series, not just headers
+    assert 'repro_calibration_samples_total{' in body
+    assert 'kind="step"' in body
+    assert 'repro_slo_attainment_ratio{priority="1"} 1' in body
+
+
+def test_validate_trace_gates_on_prom_families(tracer, tmp_path):
+    with obs.span("s", "compute", job="j"):
+        pass
+    trace = str(tmp_path / "t.json")
+    obs.write_chrome_trace(trace)
+    good = tmp_path / "good.prom"
+    good.write_text(obs.metrics_text())
+    proc = subprocess.run(
+        [sys.executable, "tools/validate_trace.py", trace,
+         "--prom", str(good)], capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "families present" in proc.stdout
+    # stripping one family header must fail the gate
+    bad = tmp_path / "bad.prom"
+    bad.write_text("\n".join(
+        line for line in good.read_text().splitlines()
+        if "repro_slo_attainment_ratio" not in line) + "\n")
+    proc = subprocess.run(
+        [sys.executable, "tools/validate_trace.py", trace,
+         "--prom", str(bad)], capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "repro_slo_attainment_ratio" in proc.stdout
+    # and so must a garbage series line
+    ugly = tmp_path / "ugly.prom"
+    ugly.write_text(good.read_text() + "repro_bogus{ not prometheus\n")
+    proc = subprocess.run(
+        [sys.executable, "tools/validate_trace.py", trace,
+         "--prom", str(ugly)], capture_output=True, text=True)
+    assert proc.returncode == 1
+
+
+# --------------------------------------------------------------------------
+# scheduler wiring: the ledger sees real serving traffic
+# --------------------------------------------------------------------------
+
+def test_scheduler_run_feeds_ledger_and_summary(tracer):
+    sched = Scheduler(n_devices=1, memory=_mem(220), name="p0")
+    for _ in range(2):
+        sched.submit(_job(n_iter=2))
+    sched.run()
+    led = CalibrationLedger.from_events()
+    kinds = led.samples_by_kind()
+    assert kinds.get("admit", 0) >= 1
+    assert kinds.get("step", 0) >= 2
+    # every entry carries the enriched identity, not "-" placeholders
+    for st in led.entries():
+        if st.kind in ("admit", "step"):
+            assert st.key.geometry == "16x16x16"
+            assert st.key.algorithm == "cgls"
+            assert st.key.pod == "p0"
+    s = sched.summary()
+    assert s["calibration"]["step"]["samples"] >= 2
+    assert "bias_s" in s["calibration"]["step"]
+    assert s["memory_modeled_peak_bytes"] > 0
+    assert set(s["staging_seconds"]) == {"h2d", "prefetch", "d2h"}
+    # the bandwidth EMA went public once staging bytes were observed
+    if s["bandwidth_ema_bytes_per_s"] is not None:
+        assert s["bandwidth_ema_bytes_per_s"] > 0
+
+
+def test_merge_metrics_preserves_calibration_gauges():
+    a = ServeMetrics(bandwidth_ema_bytes_per_s=100.0,
+                     memory_modeled_peak_bytes=1000)
+    a.record_calibration("step", 1.0, 1.5)
+    b = ServeMetrics(bandwidth_ema_bytes_per_s=300.0,
+                     memory_modeled_peak_bytes=4000)
+    b.record_calibration("step", 1.0, 0.5)
+    b.record_calibration("admit", 2.0, 2.0)
+    c = ServeMetrics()          # a pod that saw no traffic
+    m = merge_metrics([a, b, c])
+    assert m.bandwidth_ema_bytes_per_s == pytest.approx(200.0)
+    assert m.memory_modeled_peak_bytes == 4000
+    assert sorted(m.calibration_errors_s["step"]) == [-0.5, 0.5]
+    s = m.summary()
+    assert s["calibration"]["step"]["samples"] == 2
+    assert s["calibration"]["step"]["bias_s"] == pytest.approx(0.0)
+    assert s["calibration"]["admit"]["abs_p95_s"] == pytest.approx(0.0)
+    # one-sided observations never become samples
+    c.record_calibration("step", None, 1.0)
+    assert "step" not in c.calibration_errors_s
+
+
+# --------------------------------------------------------------------------
+# bench envelope schema + trajectory gate
+# --------------------------------------------------------------------------
+
+def _envelope(vals, bench="serve", direction="lower"):
+    sys.path.insert(0, ".")
+    from benchmarks import schema
+    return schema.envelope(
+        bench, config={"smoke": True},
+        metrics=[schema.metric(n, v, "s", direction)
+                 for n, v in vals.items()],
+        smoke=True, configs={"x": {"completed": 1}})
+
+
+def test_schema_envelope_validates_and_rejects():
+    sys.path.insert(0, ".")
+    from benchmarks import schema
+    doc = _envelope({"wall_s": 1.0})
+    assert schema.validate_envelope(doc) == []
+    assert schema.metric_values(doc)["wall_s"]["value"] == 1.0
+    with pytest.raises(ValueError):
+        schema.metric("bad", float("nan"), "s")
+    with pytest.raises(ValueError):
+        schema.metric("bad", 1.0, "s", direction="sideways")
+    with pytest.raises(ValueError):
+        schema.envelope("b", config={}, metrics=[], **{"schema": 2})
+    broken = dict(doc, metrics=[{"name": "x"}])
+    assert schema.validate_envelope(broken)
+
+
+def test_bench_track_seeds_then_gates(tmp_path):
+    traj = tmp_path / "BENCH_T.json"
+
+    def run_track(wall, extra=()):
+        env = tmp_path / "env.json"
+        env.write_text(json.dumps(_envelope({"wall_s": wall})))
+        return subprocess.run(
+            [sys.executable, "tools/bench_track.py", str(env),
+             "--pr", "9", "--out", str(traj), *extra],
+            capture_output=True, text=True)
+
+    # first point: seeds, nothing to compare
+    p = run_track(1.0)
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "seeded" in p.stdout and "no regression" in p.stdout
+    # same value again: no regression, 2 points on file
+    p = run_track(1.0)
+    assert p.returncode == 0 and "no regression" in p.stdout
+    doc = json.loads(traj.read_text())
+    assert len(doc["points"]) == 2
+    assert doc["points"][0]["metrics"]["serve.wall_s"]["value"] == 1.0
+    # 20% worse: inside the fail band (40%) but past warn (15%)
+    p = run_track(1.2)
+    assert p.returncode == 0 and "WARN" in p.stdout
+    # 3x worse: past the fail band -> gate trips, but point still lands
+    p = run_track(3.6)
+    assert p.returncode == 1 and "FAIL" in p.stdout
+    assert len(json.loads(traj.read_text())["points"]) == 4
+    # --baseline overrides the previous-point comparison
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(
+        {"schema": 1, "points": [{"pr": 8, "metrics": {
+            "serve.wall_s": {"value": 3.6, "units": "s",
+                             "direction": "lower"}}}]}))
+    p = run_track(3.6, extra=("--baseline", str(base)))
+    assert p.returncode == 0 and "no regression" in p.stdout
+
+
+def test_bench_track_direction_and_noise_floor(tmp_path):
+    traj = tmp_path / "BENCH_T.json"
+    env = tmp_path / "env.json"
+
+    def run_track(doc):
+        env.write_text(json.dumps(doc))
+        return subprocess.run(
+            [sys.executable, "tools/bench_track.py", str(env),
+             "--pr", "9", "--out", str(traj)],
+            capture_output=True, text=True)
+
+    # higher-is-better metric dropping hard must fail ...
+    run_track(_envelope({"rate": 100.0}, direction="higher"))
+    p = run_track(_envelope({"rate": 10.0}, direction="higher"))
+    assert p.returncode == 1 and "FAIL" in p.stdout
+    # ... but a sub-noise-floor metric is never compared
+    traj.unlink()
+    run_track(_envelope({"tiny_s": 1e-4}))
+    p = run_track(_envelope({"tiny_s": 9e-4}))      # 9x "worse", all noise
+    assert p.returncode == 0 and "no regression" in p.stdout

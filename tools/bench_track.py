@@ -1,0 +1,194 @@
+"""Benchmark-trajectory gate: append a point, compare to the last one.
+
+CI has produced ``--json`` bench output on every run since PR 5, but
+nothing ever *kept* a number — every run compared against nothing and
+the repo never had a performance trajectory.  This tool closes that
+loop:
+
+1. reads one or more bench envelopes (``benchmarks/schema.py`` format,
+   as written by ``bench_serve.py`` / ``bench_operators.py`` /
+   ``bench_scaling.py`` ``--json``),
+2. folds them into one trajectory *point* (metric names prefixed with
+   their bench name),
+3. appends the point to ``BENCH_<pr>.json`` at the repo root, and
+4. compares it against the previous point (or ``--baseline``) with
+   noise-aware warn/fail bands: a metric must move in its *worse*
+   direction by more than ``--fail-pct`` to fail the gate, and metrics
+   whose values sit under ``--min-value`` are ignored entirely (on a
+   CI box, a 2 ms wall time is all noise).
+
+Exit status: 0 = no regression (or nothing to compare), 1 = at least
+one metric regressed past the fail band, 2 = malformed input.
+
+Usage::
+
+    PYTHONPATH=src python tools/bench_track.py --pr 9 \
+        bench_serve.json bench_operators.json bench_scaling.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+from benchmarks import schema   # noqa: E402
+
+TRAJECTORY_SCHEMA = 1
+
+
+def load_envelopes(paths: List[str]) -> List[Dict]:
+    docs = []
+    for p in paths:
+        with open(p) as f:
+            doc = json.load(f)
+        errs = schema.validate_envelope(doc)
+        if errs:
+            raise ValueError(f"{p}: " + "; ".join(errs))
+        docs.append(doc)
+    return docs
+
+
+def build_point(docs: List[Dict], pr: int) -> Dict:
+    merged = schema.merge_envelopes(docs)
+    return {
+        "pr": pr,
+        "time": time.time(),
+        "smoke": merged["smoke"],
+        "metrics": {m["name"]: {"value": m["value"], "units": m["units"],
+                                "direction": m["direction"]}
+                    for m in merged["metrics"]},
+    }
+
+
+def load_trajectory(path: str) -> Dict:
+    if not os.path.exists(path):
+        return {"schema": TRAJECTORY_SCHEMA, "points": []}
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc.get("points"), list):
+        raise ValueError(f"{path}: malformed trajectory (no 'points')")
+    return doc
+
+
+def compare(point: Dict, baseline: Optional[Dict], warn_pct: float,
+            fail_pct: float, min_value: float
+            ) -> Tuple[List[str], List[str], List[str]]:
+    """(failures, warnings, notes) comparing ``point`` vs ``baseline``."""
+    fails: List[str] = []
+    warns: List[str] = []
+    notes: List[str] = []
+    if baseline is None:
+        notes.append("no previous point: trajectory seeded, "
+                     "nothing to compare")
+        return fails, warns, notes
+    base = baseline.get("metrics", {})
+    cur = point.get("metrics", {})
+    shared = sorted(set(base) & set(cur))
+    if not shared:
+        notes.append("no shared metrics with the previous point")
+        return fails, warns, notes
+    for name in shared:
+        b, c = base[name]["value"], cur[name]["value"]
+        direction = cur[name].get("direction",
+                                  base[name].get("direction", "lower"))
+        if max(abs(b), abs(c)) < min_value:
+            continue    # below the noise floor: not comparable
+        if b == 0:
+            continue    # no relative scale to compare on
+        delta_pct = 100.0 * (c - b) / abs(b)
+        worse = delta_pct > 0 if direction == "lower" else delta_pct < 0
+        mag = abs(delta_pct)
+        desc = (f"{name}: {b:.6g} -> {c:.6g} "
+                f"({delta_pct:+.1f}%, better={direction})")
+        if worse and mag > fail_pct:
+            fails.append(desc)
+        elif worse and mag > warn_pct:
+            warns.append(desc)
+        elif not worse and mag > warn_pct:
+            notes.append("improved: " + desc)
+    return fails, warns, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="append a bench trajectory point and gate on "
+                    "regressions vs the previous one")
+    ap.add_argument("inputs", nargs="+",
+                    help="bench --json envelope files")
+    ap.add_argument("--pr", type=int, required=True,
+                    help="PR number: trajectory lands in BENCH_<pr>.json")
+    ap.add_argument("--out", default="",
+                    help="trajectory file (default BENCH_<pr>.json next "
+                         "to this repo's root)")
+    ap.add_argument("--baseline", default="",
+                    help="compare against the LAST point of this "
+                         "trajectory file instead of the previous point "
+                         "of --out")
+    ap.add_argument("--warn-pct", type=float, default=15.0,
+                    help="warn band: worse by more than this %% prints "
+                         "a warning (default 15)")
+    ap.add_argument("--fail-pct", type=float, default=40.0,
+                    help="fail band: worse by more than this %% fails "
+                         "the gate (default 40; smoke benches on shared "
+                         "CI runners are noisy)")
+    ap.add_argument("--min-value", type=float, default=5e-3,
+                    help="ignore metrics whose magnitude is below this "
+                         "(noise floor; default 5e-3)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="compare only; do not append the point")
+    args = ap.parse_args(argv)
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = args.out or os.path.join(root, f"BENCH_{args.pr}.json")
+
+    try:
+        docs = load_envelopes(args.inputs)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"bench_track: bad input: {e}", file=sys.stderr)
+        return 2
+    point = build_point(docs, args.pr)
+
+    traj = load_trajectory(out)
+    if args.baseline:
+        base_traj = load_trajectory(args.baseline)
+        baseline = (base_traj["points"][-1] if base_traj["points"]
+                    else None)
+    else:
+        baseline = traj["points"][-1] if traj["points"] else None
+
+    fails, warns, notes = compare(point, baseline, args.warn_pct,
+                                  args.fail_pct, args.min_value)
+    for n in notes:
+        print(f"# {n}")
+    for w in warns:
+        print(f"WARN {w}")
+    for f in fails:
+        print(f"FAIL {f}")
+
+    if not args.dry_run:
+        traj["points"].append(point)
+        tmp = out + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(traj, f, indent=2, sort_keys=True)
+        os.replace(tmp, out)
+        print(f"# trajectory point appended -> {out} "
+              f"({len(traj['points'])} points, "
+              f"{len(point['metrics'])} metrics)")
+
+    if fails:
+        print(f"bench_track: {len(fails)} metric(s) regressed past "
+              f"{args.fail_pct:.0f}%")
+        return 1
+    print("bench_track: no regression"
+          + (f" ({len(warns)} warning(s))" if warns else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

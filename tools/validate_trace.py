@@ -24,24 +24,53 @@ Checks (Chrome trace):
   measured-bandwidth EMA is priced from exactly those byte counts.
 
 Checks (bench JSON, ``--bench-json``): top level carries ``bench`` and
-a non-empty ``rows`` (operators) or ``configs`` (serve) payload.
+a non-empty ``rows`` (operators) or ``configs`` (serve) payload; when
+the file is a schema-1 envelope (``benchmarks/schema.py``), its
+``metrics`` list must be well-formed (name/value/units/direction, finite
+values, no duplicate names).
+
+Checks (Prometheus text, ``--prom``): every non-comment line must parse
+as ``name{labels} value`` with a float value; every ``# TYPE`` must be a
+known type; and the observability families the calibration/SLO layer
+promises (``repro_calibration_*``, ``repro_slo_*``, ``repro_memory_*``)
+must all be declared — the exporters emit the headers even with zero
+series, so absence means the analysis layer was silently dropped from
+the export path.
 
 Usage::
 
     python tools/validate_trace.py trace.json [--require-phases]
-        [--bench-json bench.json]
+        [--bench-json bench.json] [--prom metrics.prom]
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import numbers
 import sys
 
 REQUIRED_PHASES = ("h2d", "compute", "d2h")
 # optional staging-motion categories; when present, spans must be sized
 BYTES_PHASES = ("prefetch", "reduce")
+
+#: families the calibration / SLO / memory analysis layer must export
+#: (headers are unconditional, so these must appear in any metrics_text)
+REQUIRED_PROM_FAMILIES = (
+    "repro_calibration_samples_total",
+    "repro_calibration_bias_seconds",
+    "repro_calibration_abs_p95_seconds",
+    "repro_calibration_drift",
+    "repro_memory_modeled_bytes",
+    "repro_memory_watermark_bytes",
+    "repro_memory_margin_ratio",
+    "repro_slo_attainment_ratio",
+    "repro_slo_latency_p95_seconds",
+    "repro_slo_queue_wait_p95_seconds",
+    "repro_slo_completed_total",
+)
+PROM_TYPES = ("counter", "gauge", "histogram", "summary", "untyped")
 
 
 def fail(msg: str) -> None:
@@ -102,11 +131,91 @@ def validate_chrome_trace(path: str, require_phases: bool) -> int:
     return len(events)
 
 
+def _parse_prom_series(line: str):
+    """Split ``name{labels} value`` -> (family, value) or raise ValueError."""
+    if "{" in line:
+        name, rest = line.split("{", 1)
+        if "}" not in rest:
+            raise ValueError("unterminated label block")
+        labels, _, val = rest.rpartition("}")
+        for pair in filter(None, labels.split(",")):
+            if "=" not in pair or not pair.split("=", 1)[1].startswith('"'):
+                raise ValueError(f"malformed label {pair!r}")
+    else:
+        name, _, val = line.partition(" ")
+    name, val = name.strip(), val.strip().split()[0]
+    if not name or not name.replace("_", "").replace(":", "").isalnum():
+        raise ValueError(f"malformed metric name {name!r}")
+    return name, float(val)   # float() raises on garbage; nan/inf are legal
+
+
+def validate_prometheus(path: str) -> None:
+    with open(path) as f:
+        text = f.read()
+    declared = set()
+    n_series = 0
+    for i, line in enumerate(text.splitlines(), 1):
+        line = line.strip()
+        if not line:
+            continue
+        if line.startswith("#"):
+            parts = line.split(None, 3)
+            if len(parts) >= 3 and parts[1] in ("HELP", "TYPE"):
+                declared.add(parts[2])
+                if parts[1] == "TYPE" and (len(parts) < 4 or
+                                           parts[3] not in PROM_TYPES):
+                    fail(f"{path}:{i}: unknown TYPE in {line!r}")
+            continue
+        try:
+            family, val = _parse_prom_series(line)
+        except (ValueError, IndexError) as e:
+            fail(f"{path}:{i}: unparseable series {line!r} ({e})")
+        if math.isnan(val):
+            fail(f"{path}:{i}: NaN sample in {line!r}")
+        # a series whose family was never declared is a header regression
+        base = family
+        for suffix in ("_bucket", "_sum", "_count"):
+            if family.endswith(suffix):
+                base = family[:-len(suffix)]
+        if family not in declared and base not in declared:
+            fail(f"{path}:{i}: series {family!r} has no HELP/TYPE header")
+        n_series += 1
+    missing = [f for f in REQUIRED_PROM_FAMILIES if f not in declared]
+    if missing:
+        fail(f"{path}: missing observability families {missing}")
+    print(f"OK: {path}: {len(declared)} families declared "
+          f"({n_series} series), all "
+          f"{len(REQUIRED_PROM_FAMILIES)} calibration/SLO/memory "
+          f"families present")
+
+
+def _validate_envelope_metrics(path: str, doc: dict) -> None:
+    """Schema-1 envelope checks (beyond the legacy rows/configs ones)."""
+    metrics = doc.get("metrics")
+    if not isinstance(metrics, list):
+        fail(f"{path}: schema envelope needs a 'metrics' list")
+    seen = set()
+    for m in metrics:
+        for key in ("name", "value", "units", "direction"):
+            if key not in m:
+                fail(f"{path}: metric missing {key!r}: {m}")
+        if m["direction"] not in ("higher", "lower"):
+            fail(f"{path}: bad metric direction: {m}")
+        if not isinstance(m["value"], numbers.Real) \
+                or not math.isfinite(m["value"]):
+            fail(f"{path}: non-finite metric value: {m}")
+        if m["name"] in seen:
+            fail(f"{path}: duplicate metric name {m['name']!r}")
+        seen.add(m["name"])
+
+
 def validate_bench_json(path: str) -> None:
     with open(path) as f:
         doc = json.load(f)
     if not isinstance(doc, dict) or "bench" not in doc:
         fail(f"{path}: bench JSON must be an object with 'bench'")
+    if doc.get("schema") is not None:
+        _validate_envelope_metrics(path, doc)
     rows = doc.get("rows")
     configs = doc.get("configs")
     if rows is not None:
@@ -142,10 +251,15 @@ def main() -> None:
                          "span on a device track (streaming recon traces)")
     ap.add_argument("--bench-json", default="",
                     help="also validate this bench --json output")
+    ap.add_argument("--prom", default="",
+                    help="also validate this Prometheus text export "
+                         "(requires the calibration/SLO/memory families)")
     args = ap.parse_args()
     validate_chrome_trace(args.trace, args.require_phases)
     if args.bench_json:
         validate_bench_json(args.bench_json)
+    if args.prom:
+        validate_prometheus(args.prom)
     print("TRACE OK")
 
 

@@ -106,28 +106,104 @@ def run(n: int = 32, n_angles: int = 12, repeats: int = 3,
             try:
                 t_fp = _time(lambda: op.A(vol), repeats)
                 t_bp = _time(lambda: op.At(proj, weight="fdk"), repeats)
-                outs[backend] = (np.asarray(op.A(vol)),
-                                 np.asarray(op.At(proj, weight="fdk")))
+                # the matched-adjoint arm: ref times its jax.vjp adjoint,
+                # pallas its native transpose-shaped scatter kernel — the
+                # pair CGLS/FISTA actually iterate with
+                t_at = _time(lambda: op.At(proj, weight="matched"), repeats)
+                a_out = np.asarray(op.A(vol))
+                at_out = np.asarray(op.At(proj, weight="matched"))
+                outs[backend] = (a_out, np.asarray(op.At(proj,
+                                                         weight="fdk")),
+                                 at_out)
             finally:
                 if ctx is not None:
                     ctx.__exit__(None, None, None)
+            # adjoint defect of the matched pair on this (vol, proj) draw:
+            # | <Ax,y> - <x,At y> | / max(|.|) — fp32-exact pairs sit ~1e-6
+            lhs = float(np.vdot(a_out.astype(np.float64).ravel(),
+                                proj.astype(np.float64).ravel()))
+            rhs = float(np.vdot(vol.astype(np.float64).ravel(),
+                                at_out.astype(np.float64).ravel()))
+            defect = abs(lhs - rhs) / max(abs(lhs), abs(rhs), 1e-30)
             rows.append({"mode": mode, "backend": backend,
                          "fp_s": t_fp, "bp_s": t_bp,
+                         "at_matched_s": t_at,
+                         "pair_s": t_fp + t_at,
+                         "adjoint_rel_defect": defect,
                          "fp_mvox_s": mvox / t_fp, "bp_mvox_s": mvox / t_bp})
         if check:
-            for i, what in enumerate(("A", "At")):
+            for i, what in enumerate(("A", "At[fdk]", "At[matched]")):
                 np.testing.assert_allclose(
                     outs["pallas"][i], outs["ref"][i], rtol=RTOL, atol=ATOL,
                     err_msg=f"{mode}/{what}: pallas disagrees with ref")
+            for r in rows:
+                if r["mode"] == mode:
+                    assert r["adjoint_rel_defect"] < 1e-4, \
+                        (f"{mode}/{r['backend']}: matched pair is not an "
+                         f"adjoint (defect {r['adjoint_rel_defect']:.3g})")
             print(f"# {mode}: pallas == ref within tolerance "
-                  f"(rtol={RTOL}, atol={ATOL})")
+                  f"(rtol={RTOL}, atol={ATOL}); matched adjoint defect "
+                  "< 1e-4 on both backends")
+    return rows
+
+
+def run_autotune(n: int = 32, n_angles: int = 12, repeats: int = 3,
+                 check: bool = True):
+    """Autotuned-vs-heuristic block arm (pallas, plain mode).
+
+    Times the pallas matched pair under the static divisor-or-pad
+    heuristic and again under the measured autotuner, reporting both
+    block configs.  The tuner's candidates are floored at the heuristic,
+    so every tuned block must be >= its heuristic counterpart — asserted
+    here so the floor guarantee is continuously bench-checked.
+    """
+    from repro.core.backend import get_backend
+    from repro.kernels import autotune
+
+    geo = ConeGeometry.nice(n)
+    angles = circular_angles(n_angles)
+    vol = np.asarray(jax.random.normal(jax.random.PRNGKey(0), geo.n_voxel),
+                     np.float32)
+    proj = np.asarray(jax.random.normal(
+        jax.random.PRNGKey(1), (n_angles,) + geo.n_detector), np.float32)
+    bk = get_backend("pallas")
+
+    rows = []
+    was_enabled = autotune.enabled()
+    try:
+        for arm, on in (("pallas_heuristic", False),
+                        ("pallas_autotuned", True)):
+            autotune.enable(on)
+            blocks = bk.kernel_config(geo, planes=geo.n_voxel[0])
+            op = CTOperator(geo, angles, backend="pallas")
+            t_fp = _time(lambda: op.A(vol), repeats)
+            t_at = _time(lambda: op.At(proj, weight="matched"), repeats)
+            rows.append({"arm": arm, "blocks": blocks,
+                         "fp_s": t_fp, "at_matched_s": t_at,
+                         "pair_s": t_fp + t_at})
+    finally:
+        autotune.enable(True if was_enabled else None)
+    if check:
+        heur = rows[0]["blocks"]
+        tuned = rows[1]["blocks"]
+        for k, hv in heur.items():
+            if k == "autotuned":
+                continue
+            assert tuned[k] >= hv, \
+                f"autotuned {k}={tuned[k]} below heuristic {hv}"
+        print(f"# autotune: tuned blocks >= heuristic on every axis "
+              f"({ {k: v for k, v in tuned.items() if k != 'autotuned'} } "
+              f"vs { {k: v for k, v in heur.items() if k != 'autotuned'} })")
     return rows
 
 
 def report(rows) -> None:
-    print("mode,backend,fp_seconds,bp_seconds,fp_Mvox/s,bp_Mvox/s")
+    print("mode,backend,fp_seconds,bp_seconds,at_matched_s,pair_s,"
+          "adjoint_defect,fp_Mvox/s,bp_Mvox/s")
     for r in rows:
         print(f"{r['mode']},{r['backend']},{r['fp_s']:.4f},{r['bp_s']:.4f},"
+              f"{r['at_matched_s']:.4f},{r['pair_s']:.4f},"
+              f"{r['adjoint_rel_defect']:.2e},"
               f"{r['fp_mvox_s']:.2f},{r['bp_mvox_s']:.2f}")
     by_mode = {}
     for r in rows:
@@ -136,9 +212,20 @@ def report(rows) -> None:
         if "ref" in b and "pallas" in b:
             print(f"# {mode}: pallas/ref speedup "
                   f"fp={b['ref']['fp_s'] / b['pallas']['fp_s']:.2f}x "
-                  f"bp={b['ref']['bp_s'] / b['pallas']['bp_s']:.2f}x"
+                  f"bp={b['ref']['bp_s'] / b['pallas']['bp_s']:.2f}x "
+                  f"matched-pair="
+                  f"{b['ref']['pair_s'] / b['pallas']['pair_s']:.2f}x"
                   + ("  (interpret mode: parity gate, not kernel speed)"
                      if jax.default_backend() != "tpu" else ""))
+
+
+def report_autotune(rows) -> None:
+    print("arm,fp_seconds,at_matched_s,pair_s,blocks")
+    for r in rows:
+        blocks = ";".join(f"{k}={v}" for k, v in sorted(r["blocks"].items())
+                          if k != "autotuned")
+        print(f"{r['arm']},{r['fp_s']:.4f},{r['at_matched_s']:.4f},"
+              f"{r['pair_s']:.4f},{blocks}")
 
 
 def main(argv=None):
@@ -168,9 +255,15 @@ def main(argv=None):
         modes = tuple(args.modes.split(","))
     rows = run(n=n, n_angles=angles, repeats=repeats, modes=modes)
     report(rows)
+    at_rows = run_autotune(n=n, n_angles=angles, repeats=repeats)
+    report_autotune(at_rows)
     if args.smoke:
         assert len(rows) == 4, "smoke expected plain+stream x ref+pallas"
-        print("SMOKE OK: ref-vs-pallas parity held in plain + stream modes")
+        matched = [r for r in rows if r["adjoint_rel_defect"] < 1e-4]
+        assert len(matched) == len(rows), "matched-pair arm missing/broken"
+        assert len(at_rows) == 2, "autotune arm missing"
+        print("SMOKE OK: ref-vs-pallas parity + matched-adjoint pair + "
+              "autotune floor held in plain + stream modes")
     if args.json_out:
         params = {"n": n, "angles": angles, "repeats": repeats,
                   "modes": list(modes), "smoke": args.smoke,
@@ -182,11 +275,31 @@ def main(argv=None):
                                          "lower", repeats))
             metrics.append(schema.metric(f"{pre}.bp_s", r["bp_s"], "s",
                                          "lower", repeats))
+            metrics.append(schema.metric(f"{pre}.at_matched_s",
+                                         r["at_matched_s"], "s",
+                                         "lower", repeats))
+            metrics.append(schema.metric(f"{pre}.adjoint_rel_defect",
+                                         r["adjoint_rel_defect"], "rel",
+                                         "lower", repeats))
             metrics.append(schema.metric(f"{pre}.fp_mvox_s",
                                          r["fp_mvox_s"], "Mvox/s",
                                          "higher", repeats))
+        by_mode = {}
+        for r in rows:
+            by_mode.setdefault(r["mode"], {})[r["backend"]] = r
+        for mode, b in by_mode.items():
+            if "ref" in b and "pallas" in b:
+                metrics.append(schema.metric(
+                    f"{mode}.matched_pair_speedup",
+                    b["ref"]["pair_s"] / b["pallas"]["pair_s"], "x",
+                    "higher", repeats))
+        for r in at_rows:
+            metrics.append(schema.metric(f"autotune.{r['arm']}.pair_s",
+                                         r["pair_s"], "s", "lower",
+                                         repeats))
         doc = schema.envelope("operators", config=params, metrics=metrics,
-                              smoke=args.smoke, params=params, rows=rows)
+                              smoke=args.smoke, params=params, rows=rows,
+                              autotune_rows=at_rows)
         if args.json_out == "-":
             json.dump(doc, sys.stdout, indent=2)
             print()

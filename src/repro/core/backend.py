@@ -28,11 +28,19 @@ returned callables take only traced arguments (arrays, angles, the slab
 origin ``z0``), so repeated calls — every slab of every iteration of
 every job — reuse one compiled executable instead of retracing
 (:func:`dispatch_cache_info` exposes the hit counters the regression
-tests assert on).  Exact-adjoint ("matched") operators are always built
-from the ref projector's ``jax.vjp`` — ``pallas_call`` defines no
-transpose rule, and CGLS/FISTA's convergence guarantees need a true
-matched pair — while forward and voxel-driven kernels follow the
-selected backend.
+tests assert on).  Exact-adjoint ("matched") operators follow the
+selected backend too: ``pallas_call`` defines no transpose rule, so the
+pallas backend pairs the ray-driven FP with a dedicated transpose-shaped
+scatter kernel (:mod:`repro.kernels.bp_matched`) via ``jax.custom_vjp``
+— the pair replays identical fp32 ray weights, keeping
+``<Ax, y> == <x, At y>`` to float tolerance for CGLS/FISTA — while the
+ref backend keeps its ``jax.vjp`` construction.
+
+Block sizes come from :mod:`repro.kernels.autotune`: the measured
+per-(kind, platform, geometry-shape) table when ``REPRO_AUTOTUNE`` is
+on, the divisor-or-pad heuristic otherwise.  The chosen blocks are part
+of every dispatch key, so differently-tuned configs never share a
+compiled entry.
 """
 
 from __future__ import annotations
@@ -121,8 +129,11 @@ def clear_dispatch_cache() -> None:
 
 
 def _divisor_at_most(n: int, cap: int) -> int:
-    """Largest divisor of ``n`` that is <= ``cap`` (>= 1): the kernels'
-    block sizes must tile the axis exactly, odd shapes included."""
+    """Largest divisor of ``n`` that is <= ``cap`` (>= 1).
+
+    Kept as the angle-axis fallback; the tiled volume axes now go through
+    :func:`repro.kernels.autotune.get_blocks` (divisor-or-pad heuristic,
+    measured table when tuning is enabled)."""
     for d in range(min(cap, n), 0, -1):
         if n % d == 0:
             return d
@@ -147,13 +158,23 @@ class KernelBackend:
       voxel-driven backprojection into an axial slab (weights
       ``fdk`` / ``pmatched`` / ``none``);
     * ``bp_matched(geo, planes=..., xdom=...)`` — the *exact* adjoint of
-      the slab forward projection (``jax.vjp``; always ref-built).
+      the slab forward projection (``jax.vjp`` here; the pallas backend
+      overrides it with its native transpose kernel).
 
     plus two full-volume conveniences for mixed-dominance angle sets
     (``fp_mixed`` / ``at_matched_mixed``), built on the slab operators.
     """
 
     name = "?"
+
+    def kernel_config(self, geo: ConeGeometry, *,
+                      planes: Optional[int] = None) -> Dict[str, int]:
+        """Block-size configuration this backend would run ``geo`` with.
+
+        Empty for backends without tunable blocks; the pallas backend
+        reports the (possibly autotuned) slab/z/angle blocks — surfaced
+        in serve calibration attrs and the operator benchmarks."""
+        return {}
 
     # -- slab operators ------------------------------------------------------
 
@@ -166,9 +187,10 @@ class KernelBackend:
 
     def bp_matched(self, geo: ConeGeometry, *, planes: int,
                    xdom: bool) -> Callable:
-        """Exact slab adjoint: vjp of the slab FP.  Ref-built on every
-        backend (no transpose rule exists for ``pallas_call``), keeping
-        <Ax, y> == <x, At y> to float precision for CGLS/FISTA."""
+        """Exact slab adjoint: vjp of the ref slab FP, keeping
+        <Ax, y> == <x, At y> to float precision for CGLS/FISTA.  The
+        pallas backend overrides this with the transpose-shaped scatter
+        kernel (:mod:`repro.kernels.bp_matched`)."""
         def build():
             @jax.jit
             def f(proj_chunk, angles, z0):
@@ -214,7 +236,8 @@ class KernelBackend:
     def at_matched_mixed(self, geo: ConeGeometry,
                          mask: np.ndarray) -> Callable:
         """Exact adjoint ``f(proj, angles) -> vol`` of the mixed-dominance
-        full FP (ref-built vjp; see :meth:`bp_matched`)."""
+        full FP (ref-built vjp here; the pallas backend overrides it with
+        per-dominance matched scatter kernels)."""
         mask = np.asarray(mask, bool)
         key = ("ref", "at_matched_mixed", geo, mask.tobytes())
 
@@ -262,8 +285,14 @@ class PallasBackend(KernelBackend):
 
     ``interpret`` defaults to auto-detection: Mosaic compiles the kernels
     on real TPU backends, interpret mode validates them everywhere else.
-    Block sizes adapt to the geometry (largest divisor of the tiled axis
-    <= the preferred block), so odd volume shapes stay runnable.
+    Block sizes come from :mod:`repro.kernels.autotune` (measured table
+    when enabled, divisor-or-pad heuristic otherwise); the kernels pad
+    and mask non-divisor tails, so odd volume shapes stay runnable.
+
+    Matched weighting is native here: ``fp`` pairs the ray kernel with
+    the transpose-shaped scatter kernel through ``jax.custom_vjp``, and
+    ``bp_matched`` / ``at_matched_mixed`` hand out that scatter kernel
+    directly — no ref fallback anywhere on the matched path.
     """
 
     name = "pallas"
@@ -282,32 +311,88 @@ class PallasBackend(KernelBackend):
             return self._interpret
         return jax.default_backend() != "tpu"
 
+    def _blocks(self, kind: str, geo: ConeGeometry,
+                planes: Optional[int] = None) -> Dict[str, int]:
+        from repro.kernels import autotune
+        pref = self.z_block if kind == "bp" else self.slab_planes
+        return autotune.get_blocks(kind, geo, planes=planes, preferred=pref,
+                                   angle_pref=self.angle_chunk,
+                                   interpret=self.interpret)
+
+    def kernel_config(self, geo: ConeGeometry, *,
+                      planes: Optional[int] = None) -> Dict[str, int]:
+        from repro.kernels import autotune
+        fp = self._blocks("fp", geo)
+        bm = self._blocks("bp_matched", geo)
+        bp = self._blocks("bp", geo, planes=planes)
+        return {"fp.slab_planes": fp["slab_planes"],
+                "bp_matched.slab_planes": bm["slab_planes"],
+                "bp.z_block": bp["z_block"],
+                "bp.angle_chunk": bp["angle_chunk"],
+                "autotuned": bool(autotune.enabled())}
+
+    @staticmethod
+    def _check_rotation_trick(geo: ConeGeometry) -> None:
+        # same transpose trick (and the same preconditions) as the ref
+        # Joseph projector: rotate the scene -90 deg so the y-dominant
+        # set becomes x-dominant
+        nz, ny, nx = geo.n_voxel
+        if nx != ny or abs(geo.d_voxel[1] - geo.d_voxel[2]) > 1e-12:
+            raise ValueError(
+                "y-dominant transpose trick needs square xy grid")
+        if any(abs(o) > 0 for o in geo.off_origin[1:]):
+            raise ValueError(
+                "xy origin offsets unsupported with rotation trick")
+
     def fp(self, geo: ConeGeometry, *, xdom: bool) -> Callable:
+        from repro.kernels.bp_matched import bp_matched_pallas
         from repro.kernels.fp_ray import fp_ray_pallas
         interpret = self.interpret
-        nz, ny, nx = geo.n_voxel
-        sp = _divisor_at_most(nx, self.slab_planes)
-        key = ("pallas", "fp", geo, xdom, sp, interpret)
+        sp = self._blocks("fp", geo)["slab_planes"]
+        spb = self._blocks("bp_matched", geo)["slab_planes"]
+        key = ("pallas", "fp", geo, xdom, sp, spb, interpret)
 
         def build():
             if not xdom:
-                # same transpose trick (and the same preconditions) as the
-                # ref Joseph projector: rotate the scene -90 deg so the
-                # y-dominant set becomes x-dominant
-                if nx != ny or abs(geo.d_voxel[1] - geo.d_voxel[2]) > 1e-12:
-                    raise ValueError(
-                        "y-dominant transpose trick needs square xy grid")
-                if any(abs(o) > 0 for o in geo.off_origin[1:]):
-                    raise ValueError(
-                        "xy origin offsets unsupported with rotation trick")
+                self._check_rotation_trick(geo)
+
+            def make_core(planes):
+                # one custom_vjp pair per slab height: forward runs the
+                # ray kernel, backward the matched scatter kernel — the
+                # two replay identical fp32 ray weights, so anything that
+                # differentiates through this FP (norm estimation, CGLS's
+                # A^T) gets the exact adjoint without leaving Pallas
+                @jax.custom_vjp
+                def core(s, ang, z0f):
+                    return fp_ray_pallas(s, geo, ang, slab_planes=sp,
+                                         interpret=interpret, z0=z0f)
+
+                def fwd(s, ang, z0f):
+                    return core(s, ang, z0f), (ang, z0f)
+
+                def bwd(res, ct):
+                    ang, z0f = res
+                    sbar = bp_matched_pallas(
+                        ct, geo, ang, slab_planes=spb, interpret=interpret,
+                        z0=z0f, z_planes=planes)
+                    return sbar, jnp.zeros_like(ang), jnp.zeros_like(z0f)
+                core.defvjp(fwd, bwd)
+                return core
+
+            cores: Dict[int, Callable] = {}
 
             @jax.jit
             def f(slab, angles, z0):
+                planes = slab.shape[0]
+                if planes not in cores:
+                    cores[planes] = make_core(planes)
+                z0f = jnp.asarray(z0, jnp.float32)
                 if not xdom:
+                    # rotation stays outside the custom_vjp core: autodiff
+                    # transposes the flip/transpose pair natively
                     slab = proj_mod._rotate_vol_90(slab)
                     angles = angles - jnp.pi / 2.0
-                return fp_ray_pallas(slab, geo, angles, slab_planes=sp,
-                                     interpret=interpret, z0=z0)
+                return cores[planes](slab, angles, z0f)
             return f
         return _TABLE.get(key, build)
 
@@ -315,18 +400,76 @@ class PallasBackend(KernelBackend):
            weight: str) -> Callable:
         from repro.kernels.bp_voxel import bp_voxel_pallas
         interpret = self.interpret
-        zb = _divisor_at_most(planes, self.z_block)
-        pref_ca = self.angle_chunk
-        key = ("pallas", "bp", geo, planes, weight, zb, interpret)
+        cfg = self._blocks("bp", geo, planes=planes)
+        zb, ca = cfg["z_block"], cfg["angle_chunk"]
+        key = ("pallas", "bp", geo, planes, weight, zb, ca, interpret)
 
         def build():
             @jax.jit
             def f(proj, angles, z0):
-                ca = _divisor_at_most(angles.shape[0], pref_ca)
+                # bp_voxel clamps + pads non-divisor chunks itself
                 return bp_voxel_pallas(proj, geo, angles, z_block=zb,
                                        angle_chunk=ca, weight=weight,
                                        interpret=interpret, z_start=z0,
                                        z_planes=planes)
+            return f
+        return _TABLE.get(key, build)
+
+    def bp_matched(self, geo: ConeGeometry, *, planes: int,
+                   xdom: bool) -> Callable:
+        """Native exact slab adjoint: the transpose-shaped scatter kernel
+        replaying the ray kernel's fp32 weights (no ref vjp involved)."""
+        from repro.kernels.bp_matched import bp_matched_pallas
+        interpret = self.interpret
+        spb = self._blocks("bp_matched", geo)["slab_planes"]
+        key = ("pallas", "bp_matched", geo, planes, xdom, spb, interpret)
+
+        def build():
+            if not xdom:
+                self._check_rotation_trick(geo)
+
+            @jax.jit
+            def f(proj_chunk, angles, z0):
+                ang = angles if xdom else angles - jnp.pi / 2.0
+                slab = bp_matched_pallas(
+                    proj_chunk, geo, ang, slab_planes=spb,
+                    interpret=interpret, z0=z0, z_planes=planes)
+                if not xdom:
+                    # adjoint (= inverse) of the -90 deg scene rotation
+                    # the forward pass applies before the ray kernel
+                    slab = jnp.transpose(jnp.flip(slab, axis=1), (0, 2, 1))
+                return slab
+            return f
+        return _TABLE.get(key, build)
+
+    def at_matched_mixed(self, geo: ConeGeometry,
+                         mask: np.ndarray) -> Callable:
+        """Exact adjoint of the mixed-dominance FP from the per-dominance
+        matched scatter kernels: the dominance groups partition the angle
+        rows, so summing each group's slab adjoint is the full A^T."""
+        mask = np.asarray(mask, bool)
+        interpret = self.interpret
+        nz = geo.n_voxel[0]
+        spb = self._blocks("bp_matched", geo)["slab_planes"]
+        key = ("pallas", "at_matched_mixed", geo, mask.tobytes(), spb,
+               interpret)
+
+        def build():
+            idx_x = np.nonzero(mask)[0]
+            idx_y = np.nonzero(~mask)[0]
+            bmx = (self.bp_matched(geo, planes=nz, xdom=True)
+                   if idx_x.size else None)
+            bmy = (self.bp_matched(geo, planes=nz, xdom=False)
+                   if idx_y.size else None)
+
+            @jax.jit
+            def f(proj, angles):
+                out = jnp.zeros(geo.n_voxel, jnp.float32)
+                if bmx is not None:
+                    out = out + bmx(proj[idx_x], angles[idx_x], 0)
+                if bmy is not None:
+                    out = out + bmy(proj[idx_y], angles[idx_y], 0)
+                return out
             return f
         return _TABLE.get(key, build)
 

@@ -314,37 +314,97 @@ def dist_backproject(mesh: Mesh, geo: ConeGeometry, weight: str = "fdk",
 
 def dist_backproject_matched(mesh: Mesh, geo: ConeGeometry,
                              data_axis: str = "data",
-                             model_axis: str = "model"):
-    """Exact adjoint BP: per-shard vjp of the partial forward projection.
+                             model_axis: str = "model",
+                             backend: Optional[str] = None):
+    """Exact adjoint BP on the selected backend: ``f(proj, angles) -> vol``.
 
-    Each device computes the vjp of its angle shard's FP restricted to its
-    z slab, then partial slab updates are summed over ``data`` — linearity
-    over disjoint angle sets makes the stacked result the monolithic A^T
+    Each device adjoints its angle shard's FP restricted to its z slab,
+    then partial slab updates are summed over ``data`` — linearity over
+    disjoint angle sets makes the stacked result the monolithic A^T
     exactly, so CGLS/FISTA keep their convergence guarantees on the
     distributed backend (same argument as the streaming matched adjoint).
+
+    On the ref backend the per-shard adjoint is the historical
+    ``jax.vjp`` of the mixed-dominance local FP.  Non-ref backends use
+    the backend's native single-dominance ``bp_matched`` kernel and
+    mirror :func:`dist_forward_project`'s host-level dominance split:
+    one sharded call per non-empty dominance group (padded to the data
+    axis with duplicate angles + zeroed projection rows — BP is linear,
+    so they add nothing), group volumes summed.
     """
+    from .backend import get_backend, resolve
     n_model = mesh.shape[model_axis]
+    n_data = mesh.shape[data_axis]
     nz = geo.n_voxel[0]
     if nz % n_model:
         raise ValueError(f"Nz={nz} not divisible by model axis {n_model}")
     planes = nz // n_model
 
-    def body(proj_local, angles_local):
-        z0 = jax.lax.axis_index(model_axis) * planes
-        zeros = jnp.zeros((planes,) + tuple(geo.n_voxel[1:]), jnp.float32)
+    if resolve(backend) == "ref":
+        def body(proj_local, angles_local):
+            z0 = jax.lax.axis_index(model_axis) * planes
+            zeros = jnp.zeros((planes,) + tuple(geo.n_voxel[1:]),
+                              jnp.float32)
 
-        def fwd(slab):
-            return _fp_local(slab, angles_local, geo, z0)
+            def fwd(slab):
+                return _fp_local(slab, angles_local, geo, z0)
 
-        _, vjp = jax.vjp(fwd, zeros)
-        return jax.lax.psum(vjp(proj_local)[0], data_axis)
+            _, vjp = jax.vjp(fwd, zeros)
+            return jax.lax.psum(vjp(proj_local)[0], data_axis)
 
-    fn = shard_map(
-        body, mesh=mesh,
-        in_specs=(P(data_axis, None, None), P(data_axis)),
-        out_specs=P(model_axis, None, None), check_vma=False)
-    return _traced_dist(jax.jit(fn), "dist_bp_matched", mesh, data_axis,
-                        model_axis)
+        fn = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(data_axis, None, None), P(data_axis)),
+            out_specs=P(model_axis, None, None), check_vma=False)
+        return _traced_dist(jax.jit(fn), "dist_bp_matched", mesh,
+                            data_axis, model_axis)
+
+    # Non-ref: lazily build one single-dominance sharded matched BP per
+    # dominance group present in the workload (mirrors the dist FP's
+    # host split; asserted via dispatch_cache_keys in the tests).
+    bk = get_backend(backend)
+    fns = {}
+
+    def sharded(bm):
+        def body(proj_local, angles_local):
+            z0 = jax.lax.axis_index(model_axis) * planes
+            slab = bm(proj_local, angles_local, z0)
+            return jax.lax.psum(slab, data_axis)
+        fn = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(data_axis, None, None), P(data_axis)),
+            out_specs=P(model_axis, None, None), check_vma=False)
+        return jax.jit(fn)
+
+    def fn_for(xdom: bool):
+        if xdom not in fns:
+            bm = bk.bp_matched(geo, planes=planes, xdom=xdom)
+            fns[xdom] = _traced_dist(sharded(bm), "dist_bp_matched", mesh,
+                                     data_axis, model_axis, xdom=xdom)
+        return fns[xdom]
+
+    nv, nu = geo.n_detector
+
+    def call(proj, angles):
+        angles_np = np.asarray(angles, np.float32)
+        xm = dominant_axis_mask(angles_np)
+        groups = [(True, np.nonzero(xm)[0]), (False, np.nonzero(~xm)[0])]
+        groups = [(x, i) for x, i in groups if i.size]
+        proj = jnp.asarray(proj, jnp.float32)
+        out = None
+        for xdom, idx in groups:
+            padded, valid = pad_angles(angles_np[idx], n_data)
+            pj = proj[jnp.asarray(idx)]
+            if not valid.all():
+                pj = jnp.concatenate(
+                    [pj, jnp.zeros((len(padded) - idx.size, nv, nu),
+                                   jnp.float32)], 0)
+            part = fn_for(xdom)(pj, jnp.asarray(padded))
+            out = part if out is None else out + part
+        if out is None:
+            out = jnp.zeros(geo.n_voxel, jnp.float32)
+        return out
+    return call
 
 
 def pad_angles(angles: np.ndarray, multiple: int):

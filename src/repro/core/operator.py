@@ -21,8 +21,10 @@ can change without touching the other (or the algorithms).
 All modes and backends produce matching results (tests/test_splitting.py,
 tests/test_distributed.py, tests/test_backend.py); algorithms in
 ``repro.core.algorithms`` are written against this interface only.
-Exact-adjoint ("matched") weighting always uses the ref projector's vjp
-pair — see :mod:`repro.core.backend`.
+Exact-adjoint ("matched") weighting follows the backend too: the ref
+backend builds it from ``jax.vjp``, the pallas backend from its native
+transpose-shaped scatter kernel — see :mod:`repro.core.backend` and
+tests/test_adjoint.py.
 """
 
 from __future__ import annotations
@@ -110,13 +112,58 @@ class CTOperator:
             self._at_pm = dist_backproject(mesh, geo, weight="pmatched",
                                            backend=self.backend_name,
                                            comm=comm)
-            self._at_matched = dist_backproject_matched(mesh, geo)
+            self._at_matched = dist_backproject_matched(
+                mesh, geo, backend=self.backend_name)
             self._data_axis_size = mesh.shape["data"]
         elif mode == "stream":
             # kept as attributes: the executors (and older callers) read
             # the per-operator schedules straight off the shared plan
             self.plan_f = self.plan.forward
             self.plan_b = self.plan.backward
+
+    def warmup(self, weight: Optional[str] = None) -> None:
+        """Materialise this operator's dispatch entries ahead of first use.
+
+        Fetches every kernel callable the configured mode/weighting will
+        ask the backend registry for (building + jit-wrapping them into
+        the shared dispatch table; XLA compilation proper stays lazy).
+        The serve layer's autoscaler pre-warm calls this during the
+        predictive lead window so a freshly scaled-up pod admits its
+        first job without the operator-build stall.  Dist mode builds
+        its sharded fns in ``__init__`` — nothing lazy is left there.
+        """
+        weight = weight or self.bp_weight
+        has = [(True, bool(self._xdom.any())),
+               (False, bool((~self._xdom).any()))]
+        if self.mode == "plain":
+            self._plain_fp(self.angles_np)
+            if weight == "matched":
+                self._backend.at_matched_mixed(self.geo, self._xdom)
+            else:
+                self._backend.bp(self.geo, planes=self.geo.n_voxel[0],
+                                 weight=weight)
+            return
+        if self.mode == "stream":
+            for xd, present in has:
+                if present:
+                    self._backend.fp(self.geo, xdom=xd)
+            for z0, z1 in self.plan.backward.slab_ranges:
+                if weight == "matched":
+                    for xd, present in has:
+                        if present:
+                            self._backend.bp_matched(self.geo,
+                                                     planes=z1 - z0,
+                                                     xdom=xd)
+                else:
+                    self._backend.bp(self.geo, planes=z1 - z0,
+                                     weight=weight)
+
+    def kernel_config(self) -> dict:
+        """The backend's (possibly autotuned) block-size config for this
+        operator's geometry — empty on backends without tunable blocks.
+        Surfaced in serve init events and the operator benchmarks."""
+        return self._backend.kernel_config(self.geo,
+                                           planes=self.geo.n_voxel[0])
 
     def _plain_fp(self, angles_np: np.ndarray):
         """Compiled forward for a concrete angle subset: the backend's
@@ -179,7 +226,8 @@ class CTOperator:
             return self._at_pm(proj, angles)
         angles_np = np.asarray(angles)
         if weight == "matched":
-            # exact adjoint via vjp of the compiled mixed-dominance forward
+            # exact adjoint of the compiled mixed-dominance forward (ref:
+            # vjp; pallas: native matched scatter kernels per dominance)
             at = self._backend.at_matched_mixed(
                 self.geo, dominant_axis_mask(angles_np))
             return at(proj, jnp.asarray(angles_np))

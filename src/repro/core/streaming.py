@@ -238,8 +238,9 @@ def stream_backward(proj: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
     bit-identical for every ``prefetch_depth`` and reuse decision.
     ``plan`` is the unified :class:`~repro.core.plan.ExecutionPlan` (its
     schedule is executed verbatim; override with ``comm``) or a bare
-    ``BackwardPlan``.  ``weight="matched"`` streams the exact per-slab
-    vjp adjoint — always ref-built (see :mod:`repro.core.backend`) so
+    ``BackwardPlan``.  ``weight="matched"`` streams the backend's exact
+    per-slab adjoint (ref: vjp of the slab FP; pallas: the native
+    transpose-shaped scatter kernel — see :mod:`repro.core.backend`) so
     CGLS keeps its convergence guarantees out-of-core on every
     backend."""
     if isinstance(plan, ExecutionPlan):
@@ -306,7 +307,8 @@ def stream_backward(proj: np.ndarray, geo: ConeGeometry, angles: np.ndarray,
             with _timed(timeline, "compute", op="bp", slab=k, chunk=ci,
                         device=d):
                 if weight == "matched":
-                    # exact adjoint: per-dominance vjp of the slab FP
+                    # exact adjoint: the backend's per-dominance matched
+                    # slab kernel (ref vjp / pallas scatter)
                     m = xmask[c0:c1]
                     for key, sub in (("x", np.nonzero(m)[0]),
                                      ("y", np.nonzero(~m)[0])):

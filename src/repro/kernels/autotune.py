@@ -1,0 +1,340 @@
+"""Measured block-size autotuner for the Pallas kernels.
+
+The dispatch layer (:mod:`repro.core.backend`) historically chose kernel
+block sizes with a static largest-divisor-<=-preferred heuristic.  That is
+safe but blind: the best marching-slab width for ``fp_ray`` or z-block for
+``bp_voxel`` depends on the geometry's shape and on the platform (interpret
+mode on CPU amortises per-grid-step overhead very differently from Mosaic
+on a real TPU).  This module times a small candidate grid per
+
+    (kind, platform, geometry shape class)
+
+on first use, memoises the winner into a process-wide table, and optionally
+persists it as JSON so later processes skip the measurement:
+
+* ``REPRO_AUTOTUNE=1`` (or :func:`enable`) turns tuning on; when off,
+  :func:`get_blocks` returns the heuristic unchanged — zero behaviour
+  change for existing callers.
+* ``REPRO_AUTOTUNE_CACHE=/path/table.json`` loads the table on first use
+  and rewrites it after every new measurement (``recon --autotune`` and
+  ``tools/autotune.py`` pre-bake it).
+* Candidates are floored at the heuristic block: the tuner only ever
+  *grows* blocks (fewer grid steps, bigger VMEM windows), so a tuned
+  config is always >= the heuristic one and the dispatch-table key —
+  which includes the chosen blocks — stays distinct per config.
+
+The heuristic itself carries the pad-to-divisor escape hatch: when the
+largest divisor degrades below half the preferred block (prime axes used
+to force block=1), it returns the preferred block and lets the kernels'
+pad-and-mask path absorb the non-divisibility.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+_SCHEMA = 1
+_KINDS = ("fp", "bp", "bp_matched")
+
+_LOCK = threading.RLock()
+_TABLE: Dict[Tuple, Dict[str, int]] = {}
+_LOADED: set = set()          # cache paths already merged into _TABLE
+_ENABLED: Optional[bool] = None   # None -> consult REPRO_AUTOTUNE
+_FINGERPRINT = 0              # bumped on any table/state mutation
+
+
+# --------------------------------------------------------------------------
+# state
+
+def enabled() -> bool:
+    """True when measured tuning is active (env or :func:`enable`)."""
+    if _ENABLED is not None:
+        return _ENABLED
+    return os.environ.get("REPRO_AUTOTUNE", "") not in ("", "0", "false")
+
+
+def enable(on: Optional[bool]) -> None:
+    """Force tuning on/off for this process (``None`` -> env-driven)."""
+    global _ENABLED, _FINGERPRINT
+    with _LOCK:
+        _ENABLED = on
+        _FINGERPRINT += 1
+
+
+def cache_path() -> str:
+    return os.environ.get("REPRO_AUTOTUNE_CACHE", "")
+
+
+def fingerprint() -> int:
+    """Monotone counter over table mutations.
+
+    Folded into cache keys that must distinguish "same geometry, different
+    tuned blocks" (e.g. the serve layer's operator cache).
+    """
+    return _FINGERPRINT
+
+
+def clear() -> None:
+    global _FINGERPRINT
+    with _LOCK:
+        _TABLE.clear()
+        _LOADED.clear()
+        _FINGERPRINT += 1
+
+
+def table() -> Dict[str, Dict[str, int]]:
+    """Copy of the current table, JSON-keyed (for inspection/tests)."""
+    with _LOCK:
+        return {_key_str(k): dict(v) for k, v in _TABLE.items()}
+
+
+# --------------------------------------------------------------------------
+# keys + persistence
+
+def _platform() -> str:
+    import jax
+    return jax.default_backend()
+
+
+def shape_class(kind: str, geo, planes: Optional[int]) -> Tuple:
+    """The memo key: geometry *shape*, not its physical scale.
+
+    Block sizes are about grid-step counts and VMEM windows, so only the
+    integer shapes matter; two geometries with the same voxel/detector
+    counts share a tuned entry.
+    """
+    return (kind, _platform(), tuple(geo.n_voxel), tuple(geo.n_detector),
+            int(planes) if planes is not None else None)
+
+
+def _key_str(key: Tuple) -> str:
+    kind, plat, nvox, ndet, planes = key
+    return "|".join([kind, plat,
+                     ",".join(map(str, nvox)), ",".join(map(str, ndet)),
+                     str(planes)])
+
+
+def _key_parse(s: str) -> Optional[Tuple]:
+    parts = s.split("|")
+    if len(parts) != 5:
+        return None
+    kind, plat, nvox, ndet, planes = parts
+    try:
+        return (kind, plat, tuple(int(x) for x in nvox.split(",")),
+                tuple(int(x) for x in ndet.split(",")),
+                None if planes == "None" else int(planes))
+    except ValueError:
+        return None
+
+
+def save(path: str) -> None:
+    with _LOCK:
+        doc = {"version": _SCHEMA, "entries": table()}
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def load(path: str) -> int:
+    """Merge a persisted table; returns the number of entries taken."""
+    global _FINGERPRINT
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return 0
+    if not isinstance(doc, dict) or doc.get("version") != _SCHEMA:
+        return 0
+    n = 0
+    with _LOCK:
+        for ks, cfg in (doc.get("entries") or {}).items():
+            key = _key_parse(ks)
+            if key is None or not isinstance(cfg, dict):
+                continue
+            _TABLE[key] = {k: int(v) for k, v in cfg.items()}
+            n += 1
+        if n:
+            _FINGERPRINT += 1
+    return n
+
+
+def _maybe_load() -> None:
+    p = cache_path()
+    if p and p not in _LOADED:
+        _LOADED.add(p)
+        if os.path.exists(p):
+            load(p)
+
+
+# --------------------------------------------------------------------------
+# heuristic
+
+def _divisor_at_most(n: int, cap: int) -> int:
+    cap = max(1, min(cap, n))
+    for c in range(cap, 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+def pick_block(n: int, preferred: int) -> int:
+    """Divisor-or-pad heuristic block for an axis of extent ``n``.
+
+    Largest divisor <= ``preferred`` when that divisor is still at least
+    half of ``preferred``; otherwise (prime/awkward axes) fall through to
+    ``min(preferred, n)`` and rely on the kernels' pad-and-mask path.
+    """
+    d = _divisor_at_most(n, preferred)
+    if d >= max(1, preferred // 2):
+        return d
+    return min(preferred, n)
+
+
+def heuristic_blocks(kind: str, geo, *, planes: Optional[int] = None,
+                     preferred: int = 16, angle_pref: int = 8
+                     ) -> Dict[str, int]:
+    nz, ny, nx = geo.n_voxel
+    if kind in ("fp", "bp_matched"):
+        return {"slab_planes": pick_block(nx, preferred)}
+    if kind == "bp":
+        p = nz if planes is None else int(planes)
+        return {"z_block": pick_block(p, preferred),
+                "angle_chunk": angle_pref}
+    raise ValueError(f"unknown autotune kind: {kind!r}")
+
+
+def _candidates(kind: str, geo, planes: Optional[int],
+                heur: Dict[str, int]) -> list:
+    """Small candidate grid, floored at the heuristic config."""
+    nz, ny, nx = geo.n_voxel
+    if kind in ("fp", "bp_matched"):
+        h = heur["slab_planes"]
+        sizes = sorted({min(nx, s) for s in (h, 2 * h, 4 * h, nx)
+                        if min(nx, s) >= h})
+        return [{"slab_planes": s} for s in sizes]
+    p = nz if planes is None else int(planes)
+    hz, hc = heur["z_block"], heur["angle_chunk"]
+    zs = sorted({min(p, s) for s in (hz, 2 * hz, p) if min(p, s) >= hz})
+    cas = sorted({hc, 2 * hc})
+    return [{"z_block": z, "angle_chunk": c} for z in zs for c in cas][:8]
+
+
+# --------------------------------------------------------------------------
+# measurement
+
+def _measure(kind: str, geo, planes: Optional[int], cfg: Dict[str, int],
+             interpret: bool, repeats: int) -> float:
+    """Median wall seconds for one kernel call under ``cfg``."""
+    import jax.numpy as jnp
+    from .bp_matched import bp_matched_pallas
+    from .bp_voxel import bp_voxel_pallas
+    from .fp_ray import fp_ray_pallas
+
+    nz, ny, nx = geo.n_voxel
+    nv, nu = geo.n_detector
+    p = nz if planes is None else int(planes)
+    n_ang = 16
+    # x-dominant angles only: the rotation trick means the kernels only
+    # ever see x-dominant work, so that's the representative workload
+    angles = jnp.asarray(np.linspace(-0.3, 0.3, n_ang), jnp.float32)
+    rng = np.random.default_rng(0)
+
+    if kind == "fp":
+        vol = jnp.asarray(rng.standard_normal((p, ny, nx)), jnp.float32)
+
+        def call():
+            return fp_ray_pallas(vol, geo, angles,
+                                 slab_planes=cfg["slab_planes"],
+                                 interpret=interpret, z0=0)
+    elif kind == "bp_matched":
+        proj = jnp.asarray(rng.standard_normal((n_ang, nv, nu)), jnp.float32)
+
+        def call():
+            return bp_matched_pallas(proj, geo, angles,
+                                     slab_planes=cfg["slab_planes"],
+                                     interpret=interpret, z0=0, z_planes=p)
+    else:
+        proj = jnp.asarray(rng.standard_normal((n_ang, nv, nu)), jnp.float32)
+
+        def call():
+            return bp_voxel_pallas(proj, geo, angles,
+                                   z_block=cfg["z_block"],
+                                   angle_chunk=cfg["angle_chunk"],
+                                   weight="fdk", interpret=interpret,
+                                   z_start=0, z_planes=p)
+
+    call().block_until_ready()          # compile + warm
+    times = []
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        call().block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def tune(kind: str, geo, *, planes: Optional[int] = None,
+         preferred: int = 16, angle_pref: int = 8, interpret: bool = True,
+         repeats: int = 2) -> Dict[str, int]:
+    """Measure the candidate grid and return (and memoise) the winner."""
+    global _FINGERPRINT
+    heur = heuristic_blocks(kind, geo, planes=planes, preferred=preferred,
+                            angle_pref=angle_pref)
+    best_cfg, best_t = dict(heur), None
+    for cfg in _candidates(kind, geo, planes, heur):
+        t = _measure(kind, geo, planes, cfg, interpret, repeats)
+        if best_t is None or t < best_t:
+            best_cfg, best_t = dict(cfg), t
+    key = shape_class(kind, geo, planes)
+    with _LOCK:
+        _TABLE[key] = best_cfg
+        _FINGERPRINT += 1
+    p = cache_path()
+    if p:
+        try:
+            save(p)
+        except OSError:
+            pass
+    return dict(best_cfg)
+
+
+def get_blocks(kind: str, geo, *, planes: Optional[int] = None,
+               preferred: int = 16, angle_pref: int = 8,
+               interpret: bool = True, repeats: int = 2) -> Dict[str, int]:
+    """Block config for a kernel ``kind`` on ``geo``.
+
+    Heuristic when tuning is disabled; otherwise the memoised measured
+    winner, measuring on first miss.  Thread-safe; measurement happens
+    outside the table lock (concurrent first-misses may both measure —
+    idempotent, last writer wins).
+    """
+    heur = heuristic_blocks(kind, geo, planes=planes, preferred=preferred,
+                            angle_pref=angle_pref)
+    if not enabled():
+        return heur
+    with _LOCK:
+        _maybe_load()
+        hit = _TABLE.get(shape_class(kind, geo, planes))
+    if hit is not None:
+        # floor at the heuristic so a stale/foreign cache can never pick
+        # a smaller block than the safe default
+        return {k: max(int(v), heur.get(k, 1)) for k, v in hit.items()}
+    return tune(kind, geo, planes=planes, preferred=preferred,
+                angle_pref=angle_pref, interpret=interpret, repeats=repeats)
+
+
+def warm(geo, *, planes: Optional[int] = None, kinds=_KINDS,
+         preferred: int = 16, angle_pref: int = 8,
+         interpret: bool = True, repeats: int = 2
+         ) -> Dict[str, Dict[str, int]]:
+    """Pre-bake tuned entries for every ``kind`` on ``geo``."""
+    return {k: get_blocks(k, geo, planes=planes, preferred=preferred,
+                          angle_pref=angle_pref, interpret=interpret,
+                          repeats=repeats)
+            for k in kinds}

@@ -1,0 +1,181 @@
+"""Pallas TPU kernel: exact transpose of the Joseph slab forward projector.
+
+``fp_ray.py`` forward-projects by marching x planes and, per plane, doing a
+two-tap y gather followed by a two-tap z gather.  A linear gather's transpose
+is a scatter-add with the *same* indices and weights, so this kernel replays
+the identical index/weight arithmetic as ``_fp_kernel`` — bit-for-bit the
+same ``s_par`` / ``fj`` / ``fk`` / boundary masks / ``seg`` expressions — and
+turns the two gathers into two scatter-adds:
+
+* z gather ``take_along_axis(colz, k, axis=0)``  ->  ``.at[k, u].add(...)``
+* y gather ``take(plane, j, axis=1)``            ->  ``.at[:, j].add(...)``
+
+Because every weight is recomputed from the same fp32 expressions, the pair
+satisfies ⟨Ax, y⟩ = ⟨x, Aᵀy⟩ to fp32 summation tolerance: exactly what CGLS
+and FISTA need for their convergence guarantees (TIGRE paper SS2.2 — the
+matched "Aᵀ" pair, as opposed to the filtered/voxel-driven BP).
+
+Grid is ``(slab, angle)`` with the angle dimension innermost: each marching
+slab of the output volume accumulates scattered contributions from every
+angle while the Pallas pipeline double-buffers the next projection's
+HBM->VMEM DMA — the mirror image of the FP kernel's (angle, slab) order.
+
+Like ``fp_ray_pallas``, the wrapper pads the marching axis to a multiple of
+``slab_planes`` (padded planes are computed then dropped: the exact
+transpose of FP's pad-with-zero-planes), so any block size ``<= Nx`` is
+legal — which is what lets the autotuner explore non-divisor candidates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.geometry import ConeGeometry
+
+from .fp_ray import angle_constants
+
+
+def _bp_matched_kernel(consts_ref, xc_ref, z0_ref, proj_ref, out_ref, *,
+                       geo: ConeGeometry, px: int, nz_slab: int):
+    """One (slab, angle) grid step: scatter one projection into Px planes.
+
+    The index math below is a line-for-line copy of ``_fp_kernel``'s; only
+    the data movement is transposed (gather -> scatter-add).  Keep the two
+    in sync: any divergence breaks the adjoint identity.
+    """
+    a_idx = pl.program_id(1)
+    nz, ny, nx = geo.n_voxel
+    nv, nu = geo.n_detector
+    dz, dy, dx = geo.d_voxel
+    dv, du = geo.d_detector
+    offz, offy, offx = geo.off_origin
+    offv, offu = geo.off_detector
+    z0 = z0_ref[0, 0]
+
+    c = consts_ref[0]
+    sx, sy, sz = c[0], c[1], c[2]
+    dcx, dcy = c[3], c[4]
+    eux, euy = c[5], c[6]
+
+    u = (jnp.arange(nu, dtype=jnp.float32) - (nu - 1) / 2.0) * du + offu
+    v = (jnp.arange(nv, dtype=jnp.float32) - (nv - 1) / 2.0) * dv + offv
+    d_x = dcx + u * eux - sx                       # (Nu,)
+    d_y = dcy + u * euy - sy                       # (Nu,)
+    d_z = v - sz                                   # (Nv,)
+    norm = jnp.sqrt(d_x[None, :] ** 2 + d_y[None, :] ** 2
+                    + d_z[:, None] ** 2)
+    seg = norm / jnp.maximum(jnp.abs(d_x)[None, :], 1e-9) * dx
+    inv_dx = 1.0 / jnp.where(jnp.abs(d_x) < 1e-9, 1e-9, d_x)
+
+    # cotangent rays, pre-weighted by the FP's final ``acc * seg``
+    g_seg = proj_ref[0] * seg                      # (Nv, Nu)
+    uu = jnp.broadcast_to(jnp.arange(nu, dtype=jnp.int32)[None, :],
+                          (nv, nu))
+
+    def plane_body(p, out_acc):
+        x = xc_ref[0, p]
+        s_par = (x - sx) * inv_dx                  # (Nu,)
+        yw = sy + s_par * d_y                      # (Nu,)
+        fj = (yw - offy) / dy + (ny - 1) / 2.0     # (Nu,)
+        fk = ((sz + s_par[None, :] * d_z[:, None] - offz) / dz
+              + (nz - 1) / 2.0) - z0               # (Nv, Nu), slab-local
+
+        j0 = jnp.floor(fj)
+        wj = fj - j0
+        j0i = j0.astype(jnp.int32)
+        j0c = jnp.clip(j0i, 0, ny - 1)
+        j1c = jnp.clip(j0i + 1, 0, ny - 1)
+        wy0 = jnp.where((j0i >= 0) & (j0i < ny), 1.0 - wj, 0.0)     # (Nu,)
+        wy1 = jnp.where((j0i + 1 >= 0) & (j0i + 1 < ny), wj, 0.0)
+
+        k0 = jnp.floor(fk)
+        wk = fk - k0
+        k0i = k0.astype(jnp.int32)
+        k0c = jnp.clip(k0i, 0, nz_slab - 1)
+        k1c = jnp.clip(k0i + 1, 0, nz_slab - 1)
+        wz0 = jnp.where((k0i >= 0) & (k0i < nz_slab), 1.0 - wk, 0.0)
+        wz1 = jnp.where((k0i + 1 >= 0) & (k0i + 1 < nz_slab), wk, 0.0)
+
+        w = ((s_par > 0.0) & (s_par <= 1.0)).astype(jnp.float32)[None, :]
+        g = g_seg * w                              # (Nv, Nu)
+
+        # transpose of the z gather: scatter the two taps into z columns
+        colz_bar = jnp.zeros((nz_slab, nu), jnp.float32)
+        colz_bar = colz_bar.at[k0c, uu].add(g * wz0)
+        colz_bar = colz_bar.at[k1c, uu].add(g * wz1)       # (Nz, Nu)
+
+        # transpose of the y gather: scatter u columns into y columns
+        plane_bar = jnp.zeros((nz_slab, ny), jnp.float32)
+        plane_bar = plane_bar.at[:, j0c].add(colz_bar * wy0[None, :])
+        plane_bar = plane_bar.at[:, j1c].add(colz_bar * wy1[None, :])
+
+        return out_acc.at[p].set(plane_bar)
+
+    acc = jax.lax.fori_loop(
+        0, px, plane_body, jnp.zeros((px, nz_slab, ny), jnp.float32))
+
+    @pl.when(a_idx == 0)
+    def _init():
+        out_ref[0] = jnp.zeros_like(out_ref[0])
+
+    out_ref[0] += acc
+
+
+def bp_matched_pallas(proj: jnp.ndarray, geo: ConeGeometry, angles,
+                      slab_planes: int = 16, interpret: bool = True,
+                      z0=0, z_planes: int | None = None) -> jnp.ndarray:
+    """Matched (exact-adjoint) backprojection of x-dominant ``angles``.
+
+    Returns the slab ``(z_planes, Ny, Nx)`` such that for any volume slab
+    ``x`` and projections ``y``::
+
+        <fp_ray_pallas(x, geo, angles, z0=z0), y>
+            == <x, bp_matched_pallas(y, geo, angles, z0=z0,
+                                     z_planes=x.shape[0])>
+
+    to fp32 tolerance.  ``z_planes`` defaults to the full ``Nz``; pass the
+    slab height (with its ``z0``) to adjoint a streamed partial projection.
+    ``angles`` and ``z0`` may be traced, mirroring ``fp_ray_pallas``.
+    """
+    nz, ny, nx = geo.n_voxel
+    nv, nu = geo.n_detector
+    nz_slab = nz if z_planes is None else int(z_planes)
+    slab_planes = min(int(slab_planes), nx)
+    n_slabs = -(-nx // slab_planes)
+    nx_pad = n_slabs * slab_planes
+    n_angles = angles.shape[0] if hasattr(angles, "shape") else len(angles)
+
+    consts = angle_constants(geo, angles)
+    # marching-plane centres, continued past Nx for the padded tail
+    xc = np.asarray(
+        (np.arange(nx_pad) - (nx - 1) / 2.0) * geo.d_voxel[2]
+        + geo.off_origin[2], np.float32).reshape(n_slabs, slab_planes)
+    z0_arr = jnp.asarray(z0, jnp.float32).reshape(1, 1)
+
+    kernel = functools.partial(_bp_matched_kernel, geo=geo, px=slab_planes,
+                               nz_slab=nz_slab)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_slabs, n_angles),
+        in_specs=[
+            pl.BlockSpec((1, 8), lambda s_, a_: (a_, 0)),
+            pl.BlockSpec((1, slab_planes), lambda s_, a_: (s_, 0)),
+            pl.BlockSpec((1, 1), lambda s_, a_: (0, 0)),
+            pl.BlockSpec((1, nv, nu), lambda s_, a_: (a_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, slab_planes, nz_slab, ny),
+                               lambda s_, a_: (s_, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n_slabs, slab_planes, nz_slab, ny), jnp.float32),
+        interpret=interpret,
+    )(consts, jnp.asarray(xc), z0_arr, jnp.asarray(proj, jnp.float32))
+
+    # (S, Px, Nz, Ny) -> (Nx_pad, Nz, Ny) -> drop pad -> (Nz, Ny, Nx):
+    # the exact inverse of fp_ray_pallas's input slab layout.
+    vol = out.reshape(nx_pad, nz_slab, ny)[:nx]
+    return jnp.transpose(vol, (1, 2, 0))

@@ -131,17 +131,30 @@ def bp_voxel_pallas(proj: jnp.ndarray, geo: ConeGeometry, angles,
     nv, nu = geo.n_detector
     planes = nz if z_planes is None else z_planes
     n_angles = angles.shape[0] if hasattr(angles, "shape") else len(angles)
-    if planes % z_block:
-        raise ValueError(f"z_planes={planes} not divisible by "
-                         f"z_block={z_block}")
-    if n_angles % angle_chunk:
-        raise ValueError(f"n_angles={n_angles} not divisible by "
-                         f"angle_chunk={angle_chunk}")
-    n_zb = planes // z_block
-    n_ch = n_angles // angle_chunk
+    # Pad-to-divisor escape hatch: prime-sized axes used to force the
+    # dispatch heuristic down to block=1 (one grid step per plane/angle).
+    # Instead, pad the z grid (extra planes computed then dropped) and the
+    # angle axis (projections zero-masked — BP is linear in the data, so
+    # zero rows contribute nothing; angles duplicate the last entry to
+    # keep the geometry table finite).  Exact for any block size.
+    z_block = min(int(z_block), planes)
+    angle_chunk = min(int(angle_chunk), n_angles)
+    n_zb = -(-planes // z_block)
+    n_ch = -(-n_angles // angle_chunk)
+    planes_pad = n_zb * z_block
+    n_ang_pad = n_ch * angle_chunk
+
+    angles = jnp.asarray(angles, jnp.float32)
+    proj = jnp.asarray(proj, jnp.float32)
+    if n_ang_pad != n_angles:
+        tail = n_ang_pad - n_angles
+        angles = jnp.concatenate(
+            [angles, jnp.broadcast_to(angles[-1:], (tail,))], 0)
+        proj = jnp.concatenate(
+            [proj, jnp.zeros((tail, nv, nu), proj.dtype)], 0)
 
     consts = angle_constants(geo, angles).reshape(n_ch, angle_chunk, 8)
-    proj_ch = jnp.asarray(proj).reshape(n_ch, angle_chunk, nv, nu)
+    proj_ch = proj.reshape(n_ch, angle_chunk, nv, nu)
     zs_arr = jnp.asarray(z_start, jnp.float32).reshape(1, 1)
 
     kernel = functools.partial(_bp_kernel, geo=geo, bz=z_block,
@@ -155,6 +168,6 @@ def bp_voxel_pallas(proj: jnp.ndarray, geo: ConeGeometry, angles,
             pl.BlockSpec((1, angle_chunk, nv, nu), lambda z_, c_: (c_, 0, 0, 0)),
         ],
         out_specs=pl.BlockSpec((z_block, ny, nx), lambda z_, c_: (z_, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((planes, ny, nx), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((planes_pad, ny, nx), jnp.float32),
         interpret=interpret,
-    )(consts, zs_arr, proj_ch)
+    )(consts, zs_arr, proj_ch)[:planes]

@@ -163,19 +163,25 @@ def fp_ray_pallas(vol: jnp.ndarray, geo: ConeGeometry, angles,
     """
     nz, ny, nx = geo.n_voxel
     nv, nu = geo.n_detector
-    if nx % slab_planes:
-        raise ValueError(f"Nx={nx} not divisible by slab_planes={slab_planes}")
-    n_slabs = nx // slab_planes
+    slab_planes = min(int(slab_planes), nx)
+    n_slabs = -(-nx // slab_planes)
+    nx_pad = n_slabs * slab_planes
     nz_slab = vol.shape[0]
     n_angles = angles.shape[0] if hasattr(angles, "shape") else len(angles)
 
-    # (nz_slab, Ny, Nx) -> (S, Px, nz_slab, Ny): marching-axis slabs
-    vol_slabs = jnp.transpose(jnp.asarray(vol), (2, 0, 1)).reshape(
-        n_slabs, slab_planes, nz_slab, ny)
+    # (nz_slab, Ny, Nx) -> (S, Px, nz_slab, Ny): marching-axis slabs.
+    # Non-divisor slab_planes pads the marching axis with zero planes —
+    # zero voxels contribute zero line integral, so the result is exact
+    # (and the autotuner may therefore pick any block <= Nx).
+    vol_t = jnp.transpose(jnp.asarray(vol), (2, 0, 1))
+    if nx_pad != nx:
+        vol_t = jnp.concatenate(
+            [vol_t, jnp.zeros((nx_pad - nx, nz_slab, ny), vol_t.dtype)], 0)
+    vol_slabs = vol_t.reshape(n_slabs, slab_planes, nz_slab, ny)
     consts = angle_constants(geo, angles)
     xc = np.asarray(
-        (np.arange(nx) - (nx - 1) / 2.0) * geo.d_voxel[2] + geo.off_origin[2],
-        np.float32).reshape(n_slabs, slab_planes)
+        (np.arange(nx_pad) - (nx - 1) / 2.0) * geo.d_voxel[2]
+        + geo.off_origin[2], np.float32).reshape(n_slabs, slab_planes)
     z0_arr = jnp.asarray(z0, jnp.float32).reshape(1, 1)
 
     kernel = functools.partial(_fp_kernel, geo=geo, px=slab_planes,

@@ -68,7 +68,15 @@ def reconstruct(algname: str = "cgls", n: int = 64, n_angles: int = 96,
                 snapshot_dir: str = "", pods: int = 1,
                 backend: str = "auto", trace: str = "",
                 prometheus: str = "", pin_devices: bool = False,
-                metrics_port: int = -1, calibration_report: bool = False):
+                metrics_port: int = -1, calibration_report: bool = False,
+                autotune: bool = False):
+    if autotune:
+        # measured block-size tuning for the pallas kernels: first use of
+        # each (kind, geometry shape) times a candidate grid and memoises
+        # the winner (persisted via REPRO_AUTOTUNE_CACHE when set; pre-
+        # bake with tools/autotune.py).  See docs/operators.md.
+        from repro.kernels import autotune as _autotune
+        _autotune.enable(True)
     # every observability output needs the tracer on: the trace/snapshot
     # exporters read its ring buffer, the live endpoint re-reads it per
     # scrape, and the calibration ledger folds its fleet event log
@@ -303,13 +311,20 @@ def main():
                     help="print the modeled-vs-measured calibration "
                          "ledger + SLO report as JSON at exit; implies "
                          "tracing (see docs/observability.md)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure pallas kernel block sizes on first use "
+                         "instead of the static heuristic (equivalent to "
+                         "REPRO_AUTOTUNE=1; persist winners across runs "
+                         "with REPRO_AUTOTUNE_CACHE=path or pre-bake with "
+                         "tools/autotune.py)")
     args = ap.parse_args()
     reconstruct(args.alg, args.n, args.angles, args.iters, args.mode,
                 args.device_bytes, snapshot_dir=args.snapshot_dir,
                 pods=args.pods, backend=args.backend, trace=args.trace,
                 prometheus=args.prometheus, pin_devices=args.pin_devices,
                 metrics_port=args.metrics_port,
-                calibration_report=args.calibration_report)
+                calibration_report=args.calibration_report,
+                autotune=args.autotune)
 
 
 if __name__ == "__main__":

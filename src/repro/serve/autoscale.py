@@ -109,6 +109,13 @@ class AutoscalePolicy:
     #: instead of an init after it.  Inactive until the fleet has
     #: observed an init (cold fleets have no lead time to hide).
     predictive_scale_up: bool = False
+    #: pre-warm a scaled-up pod during its lead window: right after the
+    #: pod is added (predictively or not), build the currently-queued
+    #: jobs' operators + kernel dispatch entries under the new pod's
+    #: memory budget into the shared executor caches, so the first job
+    #: admitted there skips the operator build/JIT stall the predictive
+    #: trigger paid for in lead time
+    prewarm: bool = False
 
     def __post_init__(self):
         if self.scale_down_backlog_seconds >= self.scale_up_backlog_seconds:
@@ -367,6 +374,7 @@ class Autoscaler:
         self.mps.record_scale_event("up")
         self._last_event = now
         self._above_since = None
+        warmed = self._prewarm(pod) if self.policy.prewarm else 0
         ev = ScaleEvent(now, "up", pod.name, load,
                         len(self.mps.pods_snapshot()), predicted=predicted)
         # modeled_s: the fleet's init EMA — the modeled lead time before
@@ -375,9 +383,30 @@ class Autoscaler:
         # decisions are auditable on the same scale as admissions
         _, init = fleet_units(self.mps.pods_snapshot())
         fleet_event("scale-up", pod=pod.name, load=load, n_pods=ev.n_pods,
-                    predicted=predicted, modeled_s=init)
+                    predicted=predicted, modeled_s=init, warmed=warmed)
         self.events.append(ev)
         return ev
+
+    def _prewarm(self, pod: Pod) -> int:
+        """Warm the new pod's operator path with the fleet's queued jobs.
+
+        The executor operator cache is process-shared, so building the
+        queued jobs' operators under the new pod's memory budget (its
+        budget decides plain-vs-stream, hence the cache key) means the
+        work the pod was spawned to absorb admits without the build/JIT
+        stall.  Best-effort: a job that cannot build fails later at its
+        own admission, never the scale-up."""
+        from .executor import prewarm_jobs
+        jobs = []
+        for p in self.mps.pods_snapshot():
+            try:
+                jobs.extend(r.job
+                            for r in p.scheduler.queue.pending_records())
+            except Exception:
+                continue        # a pod mid-retire: skip its queue
+        if not jobs:
+            return 0
+        return prewarm_jobs(jobs, pod.spec.memory)
 
     def scale_up_for(self, job) -> Optional[Pod]:
         """Submit-time hook (``MultiPodScheduler.submit``): a job fits no

@@ -50,10 +50,14 @@ def _get_operator(geo, angles: np.ndarray, mode: str, bp_weight: str,
                   memory: MemoryModel, devices: Optional[Sequence],
                   backend: Optional[str] = None) -> CTOperator:
     from repro.core.backend import resolve
+    from repro.kernels import autotune
     backend = resolve(backend)     # "auto"/None and its target share a key
+    # autotune.fingerprint(): a retuned/reloaded block table must not
+    # reuse operators compiled under the previous block config
     key = (geo, angles.tobytes(), mode, bp_weight, backend,
            memory.device_bytes, memory.usable_fraction,
-           tuple(getattr(d, "id", id(d)) for d in devices or ()))
+           tuple(getattr(d, "id", id(d)) for d in devices or ()),
+           autotune.fingerprint())
     with _op_cache_lock:
         op = _op_cache.get(key)
         if op is not None:
@@ -66,6 +70,47 @@ def _get_operator(geo, angles: np.ndarray, mode: str, bp_weight: str,
         if len(_op_cache) > _OP_CACHE_MAX:
             _op_cache.popitem(last=False)
     return op
+
+
+def prewarm_jobs(jobs: Sequence[ReconJob], memory: MemoryModel,
+                 devices: Optional[Sequence] = None) -> int:
+    """Warm the shared operator cache for ``jobs`` ahead of admission.
+
+    Builds (or touches) each job's :class:`CTOperator` under the same
+    cache key admission will use — mode mirrors the scheduler's
+    ``stream-if-it-splits`` decision, weighting the algorithm's default —
+    so the first admitted job on a freshly scaled-up pod skips the
+    operator build/JIT stall.  Deduplicates by key, never raises (a job
+    whose geometry cannot build fails admission later, with the error
+    attributed to that job); returns the number of operators warmed.
+    """
+    from .scheduler import estimate_job_footprint
+    warmed = 0
+    seen = set()
+    for job in jobs:
+        try:
+            alg = get_algorithm(job.algorithm)
+            fp = estimate_job_footprint(job, memory)
+            mode = "stream" if fp.streams else "plain"
+            dedup = (job.geo, job.angles.tobytes(), mode,
+                     alg.default_bp_weight, job.backend)
+            if dedup in seen:
+                continue
+            seen.add(dedup)
+            op = _get_operator(job.geo, job.angles, mode,
+                               alg.default_bp_weight, memory, devices,
+                               backend=job.backend)
+            op.warmup()
+            warmed += 1
+        except Exception:
+            continue
+    return warmed
+
+
+def operator_cache_keys() -> tuple:
+    """Current operator-cache keys (regression tests assert pre-warm)."""
+    with _op_cache_lock:
+        return tuple(_op_cache)
 
 
 def _block_on_state(state) -> None:
@@ -160,6 +205,11 @@ class JobExecutor:
             op = _get_operator(self.job.geo, self.job.angles, self.mode,
                                self.alg.default_bp_weight, self.memory,
                                self.devices, backend=self.job.backend)
+            kcfg = op.kernel_config()
+            if kcfg:
+                # calibration attrs: which (possibly autotuned) block
+                # config this job's kernels compiled under
+                obs.event("kernel-config", backend=op.backend_name, **kcfg)
             params = dict(self.job.params)
             if checkpoint is not None:
                 # feed checkpointed scalars back through init so restore

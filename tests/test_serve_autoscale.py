@@ -732,3 +732,62 @@ def test_scale_up_writes_manifest_outside_fleet_lock(tmp_path, monkeypatch):
     with open(os.path.join(root, "fleet.json")) as f:
         manifest = json.load(f)
     assert {p["name"] for p in manifest["pods"]} == {"seed", "burst-as0"}
+
+
+# --------------------------------------------------------------------------
+# pre-warm: a scaled-up pod builds the queued jobs' operators in its
+# lead window (deterministic: injected clock, no wall-time coupling)
+# --------------------------------------------------------------------------
+
+def test_scale_up_prewarms_operator_cache(tmp_path):
+    """With policy.prewarm the scale-up itself populates the shared
+    executor operator cache with the queued jobs' operators (deduped by
+    acquisition), before any scheduler quantum runs on the new pod."""
+    from repro.serve.executor import (clear_operator_cache,
+                                      operator_cache_keys)
+    clock = FakeClock()
+    mps = MultiPodScheduler([_pod("seed")],
+                            transfer_dir=str(tmp_path / "xfer"))
+    asc = Autoscaler(mps, [PodSpec("burst", n_devices=1, memory=_mem())],
+                     _policy(prewarm=True), clock=clock)
+    clear_operator_cache()
+    jids = [mps.submit(_job(n_iter=2)) for _ in range(4)]
+    assert operator_cache_keys() == (), \
+        "submission alone must not build operators"
+    ev = asc.step()
+    assert ev is not None and ev.direction == "up"
+    keys = operator_cache_keys()
+    # 4 identical acquisitions dedupe to one warmed operator
+    assert len(keys) == 1, f"prewarm built {len(keys)} operators, wanted 1"
+    # the fleet then completes normally and the results are unchanged
+    rounds = 0
+    while not mps.idle:
+        for pod in mps.pods_snapshot():
+            pod.scheduler.step_quantum()
+        mps.steal_pass()
+        clock.t += 1.0
+        asc.step()
+        rounds += 1
+        assert rounds < 200
+    want = np.asarray(cgls(PROJ, GEO, ANGLES, n_iter=2))
+    for j in jids:
+        np.testing.assert_array_equal(mps.result(j), want)
+
+
+def test_scale_up_without_prewarm_leaves_cache_cold(tmp_path):
+    """Default policy (prewarm=False): the scale-up must not touch the
+    operator cache — warming is opt-in."""
+    from repro.serve.executor import (clear_operator_cache,
+                                      operator_cache_keys)
+    clock = FakeClock()
+    mps = MultiPodScheduler([_pod("seed")],
+                            transfer_dir=str(tmp_path / "xfer"))
+    asc = Autoscaler(mps, [PodSpec("burst", n_devices=1, memory=_mem())],
+                     _policy(), clock=clock)
+    clear_operator_cache()
+    for _ in range(4):
+        mps.submit(_job(n_iter=2))
+    ev = asc.step()
+    assert ev is not None and ev.direction == "up"
+    assert operator_cache_keys() == ()
+    clear_operator_cache()

@@ -1,0 +1,128 @@
+#!/usr/bin/env python
+"""Pre-bake the Pallas block-size autotune table.
+
+The kernels' measured autotuner (:mod:`repro.kernels.autotune`) times a
+small candidate grid per (kind, platform, geometry shape) on first use and
+memoises the winner; with ``REPRO_AUTOTUNE_CACHE=path`` the table persists
+across processes.  This tool runs those measurements *ahead of time* so
+production runs (``recon --autotune``) start with a warm table:
+
+    PYTHONPATH=src REPRO_AUTOTUNE_CACHE=blocks.json \\
+        python tools/autotune.py --n 64 --detector 80 96
+
+``--smoke`` is the CI entry point: it tunes a small geometry in interpret
+mode, round-trips the table through the JSON cache, and asserts the tuned
+blocks never fall below the static heuristic (the autotuner's floor
+guarantee).  Prints ``SMOKE OK`` on success.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+
+def _geometry(n: int, detector):
+    from repro.core.geometry import ConeGeometry
+    nv, nu = detector
+    return ConeGeometry(n_voxel=(n, n, n), n_detector=(nv, nu))
+
+
+def bake(n: int, detector, planes, out: str, repeats: int) -> dict:
+    """Tune every kernel kind for one geometry and save the table."""
+    from repro.kernels import autotune
+    geo = _geometry(n, detector)
+    autotune.enable(True)
+    if out:
+        os.environ["REPRO_AUTOTUNE_CACHE"] = out
+    results = {}
+    for p in planes:
+        results[f"planes={p}"] = autotune.warm(geo, planes=p,
+                                               repeats=repeats)
+    if out:
+        autotune.save(out)
+    return results
+
+
+def smoke() -> int:
+    """CI smoke: tune, persist, reload, and assert the floor guarantee."""
+    from repro.kernels import autotune
+
+    geo = _geometry(16, (20, 24))
+    autotune.clear()
+    autotune.enable(True)
+    fp0 = autotune.fingerprint()
+
+    tuned = autotune.warm(geo, planes=16)
+    heur = {k: autotune.heuristic_blocks(k, geo, planes=16)
+            for k in ("fp", "bp", "bp_matched")}
+    for kind, cfg in tuned.items():
+        for name, v in cfg.items():
+            h = heur[kind].get(name, 1)
+            assert v >= h, (f"{kind}.{name}: tuned {v} < heuristic {h} "
+                            "(floor guarantee violated)")
+    assert autotune.fingerprint() > fp0, "tuning did not bump fingerprint"
+
+    # cache round-trip: save -> clear -> load must restore every entry
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "blocks.json")
+        autotune.save(path)
+        before = autotune.table()
+        autotune.clear()
+        assert autotune.table() == {}, "clear() left entries behind"
+        n = autotune.load(path)
+        assert n == len(before), f"round-trip lost entries ({n}/{len(before)})"
+        assert autotune.table() == before, "round-trip changed the table"
+        with open(path) as f:
+            doc = json.load(f)
+        assert doc.get("version") == 1 and "entries" in doc
+
+    # a warm hit must come from the table, not re-measure
+    fp1 = autotune.fingerprint()
+    hit = autotune.get_blocks("fp", geo, planes=16)
+    assert autotune.fingerprint() == fp1, "cache hit re-measured"
+    assert hit == tuned["fp"], f"cache hit {hit} != tuned {tuned['fp']}"
+
+    autotune.enable(None)
+    autotune.clear()
+    print(json.dumps({"tuned": tuned, "heuristic": heur}, indent=2,
+                     sort_keys=True))
+    print("SMOKE OK")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n", type=int, default=64,
+                    help="cubic volume side for the baked geometry")
+    ap.add_argument("--detector", type=int, nargs=2, default=(80, 96),
+                    metavar=("NV", "NU"), help="detector rows/cols")
+    ap.add_argument("--planes", type=int, nargs="*", default=None,
+                    help="slab plane counts to bake (default: full volume)")
+    ap.add_argument("--out", default=os.environ.get("REPRO_AUTOTUNE_CACHE",
+                                                    ""),
+                    help="JSON table path (default REPRO_AUTOTUNE_CACHE)")
+    ap.add_argument("--repeats", type=int, default=2,
+                    help="timing repeats per candidate (median taken)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: small-geometry tune + cache round-trip")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        return smoke()
+
+    planes = args.planes or [args.n]
+    results = bake(args.n, tuple(args.detector), planes, args.out,
+                   args.repeats)
+    print(json.dumps(results, indent=2, sort_keys=True))
+    if args.out:
+        print(f"table written to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.exit(main())
